@@ -1,0 +1,59 @@
+"""Theorem 2 / Prop. 3-4 validation — the IO-complexity claims themselves.
+
+Checks (exact arithmetic, no hardware needed):
+  * flash HBM accesses scale as Theta(N^2 d^2 / M): doubling N quadruples,
+    doubling M halves (within ceil effects);
+  * standard attention scales as Theta(N^2) — ratio grows ~M/d^2;
+  * the lower-bound regime (Prop. 3): at M = Nd the flash count collapses
+    to Theta(Nd) = the input size (no algorithm can beat reading inputs);
+  * block-sparse: IO ~ density (Prop. 4)."""
+
+from __future__ import annotations
+
+from benchmarks.common import (blocksparse_flash_hbm_bytes,
+                               flash_attention_hbm_bytes,
+                               standard_attention_hbm_bytes)
+
+
+def run() -> list[tuple[str, float, str]]:
+    rows = []
+    d, h, b = 64, 1, 1
+    M = 128 * 1024
+
+    io = {n: flash_attention_hbm_bytes(n, d, h, b, M, fwd_and_bwd=False)
+          for n in [1024, 2048, 4096, 8192]}
+    r_n = io[8192] / io[4096]
+    rows.append(("thm2_flash_scaling_in_N", r_n,
+                 f"expect ~4 (quadratic): {io[4096]/io[2048]:.2f}, {r_n:.2f}"))
+
+    io_m = {m: flash_attention_hbm_bytes(4096, d, h, b, m, fwd_and_bwd=False)
+            for m in [64 * 1024, 128 * 1024, 256 * 1024]}
+    rows.append(("thm2_flash_scaling_in_M", io_m[64 * 1024] / io_m[128 * 1024],
+                 "expect ~2 (inverse in M)"))
+
+    std = standard_attention_hbm_bytes(4096, d, h, b, fwd_and_bwd=False)
+    rows.append(("thm2_standard_vs_flash_at_4k", std / io[4096],
+                 "paper: 'many times fewer' for d^2 << M"))
+
+    # Prop. 3 lower-bound regime: M = N*d*elt -> flash IO ~ input size
+    n = 4096
+    m_big = n * d * 2
+    io_big = flash_attention_hbm_bytes(n, d, h, b, m_big, fwd_and_bwd=False)
+    inputs = 4 * n * d * 2  # Q,K,V,O
+    rows.append(("prop3_lowerbound_ratio", io_big / inputs,
+                 "expect O(1): cannot beat reading the inputs"))
+
+    # Prop. 4: density scaling
+    full = blocksparse_flash_hbm_bytes(8192, d, h, b, M, 1.0,
+                                       fwd_and_bwd=False)
+    for s in [0.5, 0.25, 0.125]:
+        part = blocksparse_flash_hbm_bytes(8192, d, h, b, M, s,
+                                           fwd_and_bwd=False)
+        rows.append((f"prop4_density_{s}_io_frac", part / full,
+                     f"expect ~{s} + Nd floor"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

@@ -1,0 +1,176 @@
+"""Roofline analysis over the dry-run artifacts (assignment §Roofline).
+
+Reads benchmarks/results/dryrun_pod16x16_*.json (single-pod, per assignment)
+and derives, per (arch x shape):
+
+    compute term    = HLO_FLOPs / (chips * 197 TFLOP/s)       [bf16 v5e]
+    memory term     = HLO_bytes / (chips * 819 GB/s)
+    collective term = collective_wire_bytes / (chips * 50 GB/s/link)
+
+(cost_analysis / the SPMD HLO are PER-DEVICE, so the per-device value divided
+by the per-chip peak is identical to the global/(chips*peak) form.)
+
+Also: MODEL_FLOPS = 6*N_active*D (train) or 2*N_active*D (inference), the
+MODEL_FLOPS / HLO_FLOPs ratio (remat/redundancy waste), the dominant term,
+a roofline step-time bound T* = max(terms), the roofline fraction
+(model-FLOPs utilization bound) and a what-would-move-it suggestion.
+
+    PYTHONPATH=src python -m benchmarks.roofline           # table to stdout
+    PYTHONPATH=src python -m benchmarks.roofline --json    # machine-readable
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+import jax
+
+PEAK_FLOPS = 197e12      # bf16 per chip (v5e)
+HBM_BW = 819e9           # bytes/s per chip
+LINK_BW = 50e9           # bytes/s per ICI link
+HBM_CAP = 16e9           # v5e HBM per chip
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+
+_PARAM_CACHE: dict[str, tuple[float, float]] = {}
+
+
+def param_counts(arch: str) -> tuple[float, float]:
+    """(total, active) parameter counts via eval_shape of the real init."""
+    if arch in _PARAM_CACHE:
+        return _PARAM_CACHE[arch]
+    from repro.configs import get_config
+    from repro.models import build_model
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    shapes = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    leaves = jax.tree.leaves_with_path(shapes)
+    total = sum(float(l.size) for _, l in leaves)
+    expert = sum(float(l.size) for p, l in leaves
+                 if any(getattr(k, "key", None) in ("w_gate", "w_up", "w_down")
+                        for k in p) and "moe" in jax.tree_util.keystr(p))
+    if cfg.num_experts:
+        frac = cfg.num_experts_per_token / cfg.num_experts
+        active = total - expert * (1.0 - frac)
+    else:
+        active = total
+    _PARAM_CACHE[arch] = (total, active)
+    return total, active
+
+
+def model_flops(rec: dict) -> float:
+    total, active = param_counts(rec["arch"])
+    if rec["kind"] == "train":
+        tokens = rec["global_batch"] * rec["seq_len"]
+        return 6.0 * active * tokens
+    if rec["kind"] == "prefill":
+        tokens = rec["global_batch"] * rec["seq_len"]
+        return 2.0 * active * tokens
+    # decode: one new token per sequence
+    return 2.0 * active * rec["global_batch"]
+
+
+def analyze(rec: dict) -> dict:
+    chips = rec["chips"]
+    compute = rec["flops_per_device"] / PEAK_FLOPS
+    memory = rec["bytes_per_device"] / HBM_BW
+    wire = sum(v["wire_bytes"] for v in
+               rec["collective_bytes_per_device"].values())
+    collective = wire / LINK_BW
+    terms = {"compute": compute, "memory": memory, "collective": collective}
+    dominant = max(terms, key=terms.get)
+    t_star = max(terms.values())
+    mf = model_flops(rec)
+    hlo_total = rec["flops_per_device"] * chips
+    ratio = mf / hlo_total if hlo_total else 0.0
+    frac = (mf / (chips * PEAK_FLOPS)) / t_star if t_star else 0.0
+    mem = rec["memory"]
+    resident = (mem["argument_size_in_bytes"] + mem["temp_size_in_bytes"]
+                + mem["output_size_in_bytes"] - mem["alias_size_in_bytes"])
+    suggestion = {
+        "compute": "cut non-model FLOPs (remat policy: save attention outs; "
+                   "bf16 grads) or shard further",
+        "memory": "reduce HBM traffic: bigger fusion regions, bf16 "
+                  "gradients/optimizer IO, quantized KV cache for decode",
+        "collective": "reshard to cut all-reduce bytes: sequence-parallel "
+                      "activations, reduce-scatter grads (ZeRO-2), int8 "
+                      "gradient compression on the pod axis",
+    }[dominant]
+    return {
+        **{k: rec[k] for k in ("arch", "shape", "mesh", "kind", "chips")},
+        "compute_s": compute, "memory_s": memory, "collective_s": collective,
+        "dominant": dominant, "t_star_s": t_star,
+        "model_flops": mf, "hlo_flops_global": hlo_total,
+        "model_flops_ratio": ratio, "roofline_fraction": frac,
+        "resident_bytes_per_dev": resident,
+        "fits_hbm": resident <= HBM_CAP,
+        "suggestion": suggestion,
+    }
+
+
+def load_records(mesh: str = "pod16x16", results_dir: str = RESULTS,
+                 include_tagged: bool = False):
+    out = []
+    for path in sorted(glob.glob(os.path.join(results_dir,
+                                              f"dryrun_{mesh}_*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if (rec.get("overrides") or rec.get("tag")) and not include_tagged:
+            continue   # §Perf iteration runs — not baseline cells
+        if "skipped" in rec or "error" in rec:
+            out.append(rec)
+            continue
+        out.append(analyze(rec))
+    return out
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1.0:
+        return f"{x:7.2f}s "
+    return f"{x * 1e3:7.2f}ms"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod16x16")
+    ap.add_argument("--json", action="store_true")
+    ap.add_argument("--results", default=RESULTS)
+    args = ap.parse_args()
+    recs = load_records(args.mesh, args.results)
+    if args.json:
+        print(json.dumps(recs, indent=1))
+        return
+    hdr = (f"{'arch':<22}{'shape':<13}{'compute':>10}{'memory':>10}"
+           f"{'collect':>10}  {'bound':<10}{'MF/HLO':>7}{'roofl%':>8}"
+           f"{'HBM/dev':>9} fit")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in recs:
+        if "skipped" in r:
+            print(f"{r['arch']:<22}{r['shape']:<13}  -- skipped: "
+                  f"{r['skipped'][:60]}")
+            continue
+        if "error" in r:
+            print(f"{r['arch']:<22}{r['shape']:<13}  -- ERROR")
+            continue
+        print(f"{r['arch']:<22}{r['shape']:<13}"
+              f"{fmt_s(r['compute_s'])}{fmt_s(r['memory_s'])}"
+              f"{fmt_s(r['collective_s'])}  {r['dominant']:<10}"
+              f"{r['model_flops_ratio']:>7.2f}"
+              f"{100 * r['roofline_fraction']:>7.1f}%"
+              f"{r['resident_bytes_per_dev'] / 1e9:>8.1f}G"
+              f"  {'Y' if r['fits_hbm'] else 'N'}")
+    # per-cell suggestions footer
+    print("\nDominant-term reduction suggestions:")
+    seen = set()
+    for r in recs:
+        if "dominant" in r and r["dominant"] not in seen:
+            seen.add(r["dominant"])
+            print(f"  [{r['dominant']}] {r['suggestion']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Benchmark aggregator — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run            # all (CSV to stdout)
+    PYTHONPATH=src python -m benchmarks.run --only fig2
+
+Prints ``name,us_per_call,derived`` CSV rows (us_per_call is the benchmark's
+primary scalar; unit given in the name)."""
+
+from __future__ import annotations
+
+import argparse
+import importlib
+import sys
+import traceback
+
+MODULES = [
+    "benchmarks.bench_fig2",            # Fig. 2 left/middle/right
+    "benchmarks.bench_table1_bert",     # Table 1
+    "benchmarks.bench_table2_gpt2",     # Tables 2 & 4
+    "benchmarks.bench_table3_lra",      # Table 3 (+ Fig. 3 memory)
+    "benchmarks.bench_table7_kernel",   # Table 7
+    "benchmarks.bench_attention_sweep", # Tables 9-21
+    "benchmarks.bench_io_model",        # Theorem 2 / Props. 3-4
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    failed = []
+    for mod_name in MODULES:
+        if args.only and args.only not in mod_name:
+            continue
+        try:
+            mod = importlib.import_module(mod_name)
+            for name, val, derived in mod.run():
+                print(f"{name},{val:.6g},{derived}")
+            sys.stdout.flush()
+        except Exception:
+            traceback.print_exc()
+            failed.append(mod_name)
+    if failed:
+        print(f"FAILED: {failed}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""Long-document classification lift from longer context (paper Table 5).
+
+MIMIC-III/ECtHR are gated datasets; this harness reproduces the
+EXPERIMENTAL STRUCTURE on a synthetic long-document task whose label
+depends on evidence PLACED DEEP in the document (beyond position 256), so
+a model truncated to a short context cannot solve it and accuracy rises
+with trainable sequence length — the paper's Table-5 mechanism.
+
+    PYTHONPATH=src python examples/long_context_classification.py
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import build_model
+
+VOCAB = 64
+EVIDENCE = 7          # token that flips the label
+DOC_LEN = 512
+
+
+def make_docs(rng, batch):
+    """Label 1 iff the EVIDENCE token occurs in the last quarter."""
+    toks = rng.integers(8, VOCAB, size=(batch, DOC_LEN))
+    y = rng.integers(0, 2, size=(batch,))
+    lo = 3 * DOC_LEN // 4
+    for i in range(batch):
+        if y[i]:
+            pos = rng.integers(lo, DOC_LEN, size=8)   # several evidence hits
+            toks[i, pos] = EVIDENCE
+    return toks, y
+
+
+def train_eval(seq_len: int, steps: int = 80, seed: int = 0) -> float:
+    cfg = dataclasses.replace(
+        get_config("bert-large"), num_layers=2, d_model=64, num_heads=4,
+        num_kv_heads=4, d_ff=128, vocab_size=VOCAB, dtype="float32",
+        remat=False, causal=False, attn_impl="chunked")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    rng = np.random.default_rng(seed)
+
+    def class_logits(p, toks):
+        logits, _ = model.forward(p, {"tokens": toks})
+        return logits.max(axis=1)[:, :2]   # detection task -> max-pool readout
+
+    def loss_fn(p, toks, y):
+        out = jax.nn.log_softmax(class_logits(p, toks))
+        return -jnp.mean(out[jnp.arange(y.shape[0]), y])
+
+    @jax.jit
+    def step(p, toks, y):
+        g = jax.grad(loss_fn)(p, toks, y)
+        return jax.tree.map(lambda a, b: a - 5e-3 * b, p, g)
+
+    for _ in range(steps):
+        toks, y = make_docs(rng, 8)
+        params = step(params, jnp.asarray(toks[:, :seq_len]), jnp.asarray(y))
+    toks, y = make_docs(rng, 128)
+    pred = jnp.argmax(class_logits(params, jnp.asarray(toks[:, :seq_len])),
+                      axis=-1)
+    return float((pred == np.asarray(y)).mean())
+
+
+def main():
+    print(f"evidence lives in positions [{3*DOC_LEN//4}, {DOC_LEN}) — short "
+          f"contexts physically cannot see it\n")
+    print(f"{'trainable seq len':>18} {'accuracy':>9}")
+    for seq in [128, 256, 512]:
+        acc = train_eval(seq)
+        note = " (cannot see evidence)" if seq <= 3 * DOC_LEN // 4 else ""
+        print(f"{seq:>18} {acc:>9.3f}{note}")
+    print("\nPaper Table 5: MIMIC-III 52.8 -> 57.1 F1 and ECtHR 72.2 -> 80.7 "
+          "from 512 -> 8k+ context; same mechanism — linear-memory attention "
+          "makes the longer context trainable at all.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Quickstart: FlashAttention as a drop-in exact-attention primitive.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Shows: (1) the Pallas kernel vs standard attention — exact to fp32 tolerance;
+(2) linear-memory long-context attention at the XLA level; (3) block-sparse
+FlashAttention with a butterfly layout (paper §3.3)."""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import masks
+from repro.kernels.ops import chunked_attention, flash_attention, standard_attention
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    b, h, n, d = 2, 8, 512, 64
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (b, h, n, d), jnp.float32)
+    k = jax.random.normal(kk, (b, h, n, d), jnp.float32)
+    v = jax.random.normal(kv, (b, h, n, d), jnp.float32)
+
+    # 1. exactness: the paper's central claim
+    o_flash = flash_attention(q, k, v, causal=True)          # Pallas kernel
+    o_std = standard_attention(q, k, v, causal=True)         # Algorithm 0
+    err = float(jnp.max(jnp.abs(o_flash - o_std)))
+    print(f"[1] flash vs standard: max_abs_err = {err:.2e} (exact)")
+
+    # 2. long context with O(N) memory (Algorithm 1 at the XLA level)
+    n_long = 16_384
+    ql = jax.random.normal(kq, (1, 2, n_long, d), jnp.bfloat16)
+    kl = jax.random.normal(kk, (1, 2, n_long, d), jnp.bfloat16)
+    vl = jax.random.normal(kv, (1, 2, n_long, d), jnp.bfloat16)
+    lowered = jax.jit(lambda q, k, v: chunked_attention(
+        q, k, v, causal=True, chunk_size=1024)).lower(ql, kl, vl).compile()
+    peak = lowered.memory_analysis().temp_size_in_bytes
+    naive = (1 * 2 * n_long * n_long * 4)  # the N x N scores alone, fp32
+    print(f"[2] 16k-context attention peak temp = {peak/1e6:.0f} MB "
+          f"(the N^2 matrix alone would be {naive/1e6:.0f} MB)")
+
+    # 3. block-sparse FlashAttention (paper Alg. 5, butterfly pattern)
+    layout = masks.butterfly_block_layout(n, n, 128, 128, causal=True)
+    o_bs = flash_attention(q, k, v, causal=True, block_layout=layout)
+    density = masks.layout_density(layout)
+    print(f"[3] block-sparse butterfly: density={density:.2f} "
+          f"-> IO scales by ~{density:.2f} (Prop. 4); output shape {o_bs.shape}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Batched serving with continuous batching over a slotted KV cache.
+
+    PYTHONPATH=src python examples/serve_batched.py
+
+Submits a burst of mixed-length requests against fewer slots than requests;
+the engine prefies/inserts/evicts continuously and the outputs are verified
+token-exact against per-request full-context greedy decoding."""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import reduced_config
+from repro.models import build_model
+from repro.serve import ServingEngine
+
+
+def main():
+    cfg = reduced_config("granite-3-2b", num_layers=4, d_model=128,
+                         num_heads=4, num_kv_heads=2, head_dim=32,
+                         d_ff=256, vocab_size=512)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+
+    n_requests, slots = 10, 4
+    prompts = [list(rng.integers(1, cfg.vocab_size,
+                                 size=rng.integers(3, 12))) for _ in range(n_requests)]
+    new_tokens = [int(rng.integers(4, 12)) for _ in range(n_requests)]
+
+    eng = ServingEngine(model, params, num_slots=slots, capacity=64)
+    t0 = time.perf_counter()
+    for p, n in zip(prompts, new_tokens):
+        eng.submit(p, max_new_tokens=n)
+    done = eng.run()
+    dt = time.perf_counter() - t0
+    total_tokens = sum(len(r.output) for r in done)
+    print(f"{len(done)} requests over {slots} slots: {total_tokens} tokens "
+          f"in {dt:.2f}s ({total_tokens/dt:.1f} tok/s on CPU)")
+
+    # verify token-exactness vs per-request greedy
+    def greedy(prompt, n):
+        toks = list(prompt)
+        for _ in range(n):
+            logits, _ = model.forward(
+                params, {"tokens": jnp.asarray([toks], jnp.int32)})
+            toks.append(int(jnp.argmax(logits[0, -1])))
+        return toks[len(prompt):]
+
+    ok = all(r.output == greedy(prompts[r.rid], len(r.output)) for r in done)
+    print(f"token-exact vs sequential greedy: {ok}")
+    assert ok
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""repro: FlashAttention (Dao et al., NeurIPS 2022) as a production JAX/Pallas framework.
+
+Layers:
+  repro.core         online-softmax primitives, attention dispatch, masks/layouts
+  repro.kernels      Pallas TPU kernels (flash fwd/bwd, decode, block-sparse) + oracles
+  repro.models       model substrate (10 assigned architectures + paper configs)
+  repro.configs      architecture/shape registry
+  repro.data         synthetic data pipeline
+  repro.optim        AdamW / LAMB / schedules
+  repro.train        train-step factory + fault-tolerant trainer
+  repro.distributed  mesh, sharding rules, ZeRO-1, pipeline parallel, compression
+  repro.checkpoint   atomic / elastic checkpointing
+  repro.serve        KV cache + prefill/decode engine + continuous batching
+  repro.launch       mesh.py, dryrun.py, train.py, serve.py
+"""
+
+__version__ = "1.0.0"

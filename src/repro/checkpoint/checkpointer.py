@@ -1,0 +1,141 @@
+"""Fault-tolerant checkpointing: atomic, checksummed, last-k retention,
+corruption fallback, async save, elastic (mesh-independent) restore.
+
+Layout:
+  <dir>/step_00000100/           (atomic: written as .tmp-* then renamed)
+      manifest.json              treedef, shapes, dtypes, crc32 per leaf
+      leaf_000000.npy ...
+  <dir>/LATEST                   text file with the newest step number
+
+Design choices for 1000+-node deployments (documented; exercised here on
+one host):
+  * leaves are stored as FULL logical arrays (host-gathered) with the
+    sharding layout carried separately — restoring onto a *different* mesh
+    is a plain device_put with the new sharding (elastic resume; tested
+    8-dev -> 4-dev in tests/test_distributed.py). Per-shard writing with
+    a shard index is the scale-out extension and slots into `_gather`.
+  * writes are atomic (tmp dir + os.rename) so a preemption mid-save never
+    corrupts the tree; restore validates crc32 and falls back to the
+    newest *valid* step.
+  * async mode runs the serialization on a worker thread; `wait()` joins
+    before the next save (bounded staleness of 1).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import zlib
+
+import jax
+import numpy as np
+
+
+def _crc(arr: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes())
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3, async_save: bool = False):
+        self.dir = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: threading.Thread | None = None
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------------ save
+    def save(self, step: int, tree) -> None:
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        if self.async_save:
+            self.wait()
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host_tree), daemon=True)
+            self._thread.start()
+        else:
+            self._write(step, host_tree)
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, host_tree) -> None:
+        leaves, treedef = jax.tree.flatten(host_tree)
+        final = os.path.join(self.dir, f"step_{step:08d}")
+        tmp = final + f".tmp-{os.getpid()}"
+        os.makedirs(tmp, exist_ok=True)
+        manifest = {"step": step, "treedef": str(treedef), "leaves": []}
+        for i, leaf in enumerate(leaves):
+            arr = np.asarray(leaf)
+            np.save(os.path.join(tmp, f"leaf_{i:06d}.npy"), arr)
+            manifest["leaves"].append({
+                "shape": list(arr.shape), "dtype": str(arr.dtype),
+                "crc32": _crc(arr)})
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        with open(os.path.join(self.dir, "LATEST.tmp"), "w") as f:
+            f.write(str(step))
+        os.replace(os.path.join(self.dir, "LATEST.tmp"),
+                   os.path.join(self.dir, "LATEST"))
+        self._gc()
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    # --------------------------------------------------------------- restore
+    def all_steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp") \
+                    and ".tmp-" not in name:
+                try:
+                    out.append(int(name.split("_")[1]))
+                except ValueError:
+                    pass
+        return sorted(out)
+
+    def _validate(self, step: int) -> list[np.ndarray] | None:
+        path = os.path.join(self.dir, f"step_{step:08d}")
+        try:
+            with open(os.path.join(path, "manifest.json")) as f:
+                manifest = json.load(f)
+            leaves = []
+            for i, meta in enumerate(manifest["leaves"]):
+                arr = np.load(os.path.join(path, f"leaf_{i:06d}.npy"))
+                if list(arr.shape) != meta["shape"] or _crc(arr) != meta["crc32"]:
+                    return None
+                leaves.append(arr)
+            return leaves
+        except (OSError, ValueError, KeyError, json.JSONDecodeError):
+            return None
+
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, target_tree, step: int | None = None,
+                shardings=None):
+        """Restore into the structure of ``target_tree``. Falls back to the
+        newest checkpoint that validates. ``shardings``: matching pytree of
+        NamedSharding for elastic placement onto the current mesh."""
+        candidates = ([step] if step is not None else
+                      list(reversed(self.all_steps())))
+        for s in candidates:
+            leaves = self._validate(s)
+            if leaves is None:
+                continue
+            _, treedef = jax.tree.flatten(target_tree)
+            tree = jax.tree.unflatten(treedef, leaves)
+            if shardings is not None:
+                tree = jax.tree.map(
+                    lambda arr, sh: jax.device_put(arr, sh), tree, shardings)
+            return tree, s
+        raise FileNotFoundError(f"no valid checkpoint in {self.dir}")

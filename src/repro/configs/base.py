@@ -1,0 +1,123 @@
+"""Config dataclasses + the assigned input-shape registry.
+
+Every architecture is a ``ModelConfig``; every assigned input shape is a
+``ShapeConfig``. The dry-run iterates the cross product (40 cells).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: Literal["dense", "moe", "ssm", "hybrid", "encdec", "vlm"]
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                   # 0 -> d_model // num_heads
+
+    # attention
+    attn_impl: str = "chunked"          # dispatch (see core.attention)
+    causal: bool = True
+    window: int | None = None           # causal sliding window (hybrid long-ctx)
+    qk_norm: bool = False
+    rope_theta: float = 10_000.0
+    attn_dropout: float = 0.0
+
+    # norms / mlp
+    norm_type: Literal["rmsnorm", "layernorm", "layernorm_np"] = "rmsnorm"
+    mlp_type: Literal["swiglu", "geglu", "gelu"] = "swiglu"
+
+    # MoE
+    num_experts: int = 0
+    num_experts_per_token: int = 0
+    moe_capacity_factor: float = 1.25
+
+    # SSM (Mamba2 / SSD)
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_conv_width: int = 4
+    ssm_chunk: int = 256
+
+    # hybrid (Hymba): parallel attention + SSM heads in one block
+    hybrid: bool = False
+
+    # encoder-decoder (seamless-m4t)
+    num_encoder_layers: int = 0          # >0 -> enc-dec; num_layers = decoder
+
+    # modality frontend stubs: input_specs() provides precomputed embeddings
+    frontend: Literal[None, "vision", "audio"] = None
+    frontend_tokens: int = 0             # vision: patch tokens prepended
+    frontend_dim: int = 0                # raw embedding dim before projection
+
+    tie_embeddings: bool = True
+    dtype: str = "bfloat16"
+    remat: bool = True                   # activation checkpoint each block
+    scan_layers: bool = True
+    unroll_chunks: bool = False          # unroll attention kv-chunk scans
+                                         # (dry-run cost probes only)
+
+    # ---- §Perf hillclimb levers (defaults = paper-faithful baseline) ----
+    attn_chunk_size: int = 1024          # Alg.-1 kv block size (XLA path)
+    attn_pv_bf16: bool = False           # bf16 P tile for the P@V matmul
+                                         # (f32 accumulate; FA2-style)
+    banded_window: bool = False          # banded layout for window attention
+    fast_conv: bool = False              # depthwise-conv SSM stem (vs shifts)
+    ssm_decay_dtype: str = "float32"     # SSD intra-chunk decay tensor dtype
+    moe_sharding_hints: bool = False     # constrain MoE dispatch shardings
+    sp_activations: bool = False         # sequence-shard the residual stream
+    masked_cache_write: bool = False     # decode KV write via iota-mask select
+                                         # (shardable; no gather on the
+                                         # sequence-sharded cache dim)
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // max(self.num_heads, 1))
+        assert self.num_heads == 0 or self.num_heads % max(self.num_kv_heads, 1) == 0
+
+    @property
+    def attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def ssm_d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_num_heads(self) -> int:
+        return self.ssm_d_inner // self.ssm_head_dim
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: Literal["train", "prefill", "decode"]
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+
+def cell_is_applicable(cfg: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """long_500k runs only for sub-quadratic archs (SSM / hybrid-with-window);
+    pure full-attention archs skip it (see DESIGN.md §4)."""
+    if shape.name == "long_500k":
+        if cfg.family == "ssm" or (cfg.hybrid and cfg.window is not None):
+            return True, ""
+        return False, ("pure full-attention arch: long_500k requires "
+                       "sub-quadratic attention (assignment rule; "
+                       "block-sparse flash available as opt-in)")
+    return True, ""

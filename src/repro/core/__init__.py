@@ -1,0 +1,12 @@
+"""Core: the paper's contribution as composable JAX modules.
+
+- online_softmax: the blocked-softmax algebra (paper §3.1)
+- attention:      dispatch over IO-aware implementations
+- masks:          element masks + block-sparse layouts (paper §3.3)
+
+NOTE: ``repro.core.attention`` is intentionally NOT imported here — it pulls
+``repro.kernels`` which itself uses ``repro.core.online_softmax``; importing
+it eagerly would make the package-init order circular. Import it directly:
+``from repro.core.attention import attention``.
+"""
+from repro.core import masks, online_softmax  # noqa: F401

@@ -1,0 +1,137 @@
+"""Attention dispatch: one API, multiple IO-aware implementations.
+
+``attention(...)`` picks the implementation:
+  * ``pallas``    — the FlashAttention Pallas kernels (real TPU, or
+                    interpret-mode for tests). The paper's contribution.
+  * ``chunked``   — Algorithm 1 expressed at the XLA level with lax.scan
+                    (online softmax, O(N) memory). Used by the large-scale
+                    dry-run on the CPU backend where a TPU kernel cannot
+                    lower; also the production fallback for shapes the
+                    kernel does not cover.
+  * ``reference`` — Algorithm 0 (materializes S/P). The paper's baseline;
+                    kept as a first-class impl so every benchmark can
+                    compare standard vs flash on equal footing.
+  * ``block_sparse`` — block-sparse FlashAttention (Alg. 5) with a layout.
+
+``decode_attention(...)`` is the single-token serving path (split-KV flash
+decode kernel or an XLA softmax fallback — decode scores are (b,h,1,L), so
+the XLA path is already O(L) memory; the kernel exists for IO/parallelism).
+
+Implementations are numerically interchangeable (tests assert pairwise
+agreement) — exactness is the paper's core claim.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+from repro.kernels.flash_decode import flash_decode
+
+AttnImpl = Literal["pallas", "chunked", "reference", "block_sparse"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AttentionSpec:
+    """Static attention configuration carried by model configs."""
+    impl: AttnImpl = "chunked"
+    causal: bool = True
+    window: int | None = None
+    dropout_p: float = 0.0
+    block_q: int = 128
+    block_k: int = 128
+    chunk_size: int = 1024
+    variant: str = "fa2"            # pallas accumulator variant: "paper"|"fa2"
+    num_decode_splits: int = 8
+    use_decode_kernel: bool = False
+    unroll_chunks: bool = False     # dry-run cost probes only
+    pv_bf16: bool = False           # cast P to bf16 for P@V (f32 accumulate)
+    banded_window: bool = False     # banded layout for sliding-window attn
+
+
+def attention(
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    spec: AttentionSpec,
+    *,
+    kv_mask: jax.Array | None = None,
+    block_layout=None,
+    dropout_seed: int = 0,
+    deterministic: bool = True,
+    q_offset: int | None = None,
+    scale: float | None = None,
+) -> jax.Array:
+    """(b, hq, sq, d) x (b, hkv, sk, d)^2 -> (b, hq, sq, d)."""
+    dropout_p = 0.0 if deterministic else spec.dropout_p
+    common = dict(causal=spec.causal, window=spec.window, kv_mask=kv_mask,
+                  scale=scale, q_offset=q_offset)
+    if spec.impl == "pallas" or (spec.impl == "block_sparse" and block_layout is not None):
+        return kops.flash_attention(
+            q, k, v, dropout_p=dropout_p, dropout_seed=dropout_seed,
+            block_q=spec.block_q, block_k=spec.block_k, variant=spec.variant,
+            block_layout=block_layout, **common)
+    if spec.impl == "block_sparse":
+        raise ValueError("impl=block_sparse requires block_layout")
+    if spec.impl == "chunked":
+        if dropout_p > 0.0:
+            # chunked XLA path does not implement attention-matrix dropout;
+            # models using it apply residual dropout instead (documented).
+            raise ValueError("attention dropout requires impl='pallas'")
+        if (spec.banded_window and spec.window is not None
+                and kv_mask is None and q.shape[2] == k.shape[2]
+                and (q_offset in (None, 0))):
+            return kref.window_banded_attention(
+                q, k, v, window=spec.window, scale=scale,
+                pv_bf16=spec.pv_bf16)
+        return kref.chunked_attention(q, k, v, chunk_size=spec.chunk_size,
+                                      unroll=spec.unroll_chunks,
+                                      pv_bf16=spec.pv_bf16, **common)
+    if spec.impl == "reference":
+        return kref.standard_attention(
+            q, k, v, dropout_p=dropout_p, dropout_seed=dropout_seed, **common)
+    raise ValueError(f"unknown attention impl {spec.impl!r}")
+
+
+def decode_attention(
+    q: jax.Array,            # (b, hq, 1, d)
+    k_cache: jax.Array,      # (b, hkv, capacity, d)
+    v_cache: jax.Array,
+    kv_len: jax.Array,       # (b,) int32
+    spec: AttentionSpec,
+    *,
+    scale: float | None = None,
+) -> jax.Array:
+    if spec.use_decode_kernel:
+        return flash_decode(q, k_cache, v_cache, kv_len,
+                            scale=scale, block_k=spec.block_k,
+                            num_splits=spec.num_decode_splits)
+    # XLA path: GQA-NATIVE masked softmax over the cache. q is reshaped to
+    # (b, hkv, rep, 1, d) and contracted against the UNEXPANDED cache —
+    # repeat_kv would broadcast-materialize the cache and force GSPMD to
+    # all-gather the sequence-sharded capacity dim (measured: 2.1 GB/layer
+    # on qwen3 decode_32k — §Roofline decode collective term). Keeping the
+    # cache un-reshaped leaves the capacity dim sharded through the scores;
+    # the softmax reduction and P@V contraction then reduce over it with
+    # small collectives (the XLA analogue of split-KV flash decode).
+    b, hq, sq, d = q.shape
+    _, hkv, capacity, _ = k_cache.shape
+    rep = hq // hkv
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    qg = q.reshape(b, hkv, rep, sq, d)
+    s = jnp.einsum("bkrqd,bksd->bkrqs", qg.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * scale
+    kvm = jnp.arange(capacity)[None, :] < kv_len[:, None]
+    if spec.window is not None:
+        lo = kv_len[:, None] - spec.window
+        kvm = kvm & (jnp.arange(capacity)[None, :] >= lo)
+    s = jnp.where(kvm[:, None, None, None, :], s, -3e4)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bkrqs,bksd->bkrqd", p, v_cache.astype(jnp.float32))
+    return o.reshape(b, hq, sq, d).astype(q.dtype)

@@ -1,0 +1,146 @@
+"""Mask and block-sparse layout builders.
+
+Two granularities:
+  * element masks — additive bias or boolean (batch, q, k) style, used by the
+    reference implementations and the XLA-level chunked attention;
+  * block layouts — uint8 (num_q_blocks, num_kv_blocks) arrays consumed by
+    block-sparse FlashAttention (paper Alg. 5) and by the causal block-skip
+    logic of the dense kernel.
+
+Layout values: 0 = skip block, 1 = full block (no element mask needed),
+2 = partial block (apply element-level mask inside the kernel).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+BLOCK_SKIP = 0
+BLOCK_FULL = 1
+BLOCK_PARTIAL = 2
+
+
+# ---------------------------------------------------------------------------
+# Element-level masks (for references / chunked attention)
+# ---------------------------------------------------------------------------
+
+def causal_mask(q_len: int, k_len: int, q_offset: int = 0) -> jnp.ndarray:
+    """Boolean (q, k): True where query may attend. q_offset shifts query
+    positions (used when q is a suffix of the kv sequence, e.g. decode)."""
+    q_pos = jnp.arange(q_len)[:, None] + q_offset
+    k_pos = jnp.arange(k_len)[None, :]
+    return q_pos >= k_pos
+
+
+def sliding_window_mask(q_len: int, k_len: int, window: int, q_offset: int = 0) -> jnp.ndarray:
+    """Causal sliding window: attend to keys in (pos - window, pos]."""
+    q_pos = jnp.arange(q_len)[:, None] + q_offset
+    k_pos = jnp.arange(k_len)[None, :]
+    return (q_pos >= k_pos) & (q_pos - k_pos < window)
+
+
+def padding_mask_to_bias(kv_mask: jnp.ndarray, dtype=jnp.float32) -> jnp.ndarray:
+    """(batch, k) boolean -> (batch, 1, 1, k) additive bias."""
+    neg = jnp.asarray(-1e30, dtype)
+    return jnp.where(kv_mask[:, None, None, :], jnp.asarray(0.0, dtype), neg)
+
+
+# ---------------------------------------------------------------------------
+# Block layouts (for block-sparse FlashAttention, Alg. 5)
+# ---------------------------------------------------------------------------
+
+def causal_block_layout(q_len: int, k_len: int, block_q: int, block_k: int,
+                        q_offset: int = 0) -> np.ndarray:
+    """Causal layout: blocks fully below diagonal FULL, diagonal PARTIAL,
+    above SKIP. Static numpy (mask structure is compile-time)."""
+    nq = (q_len + block_q - 1) // block_q
+    nk = (k_len + block_k - 1) // block_k
+    out = np.zeros((nq, nk), np.uint8)
+    for i in range(nq):
+        q_lo = i * block_q + q_offset
+        q_hi = min((i + 1) * block_q, q_len) - 1 + q_offset
+        for j in range(nk):
+            k_lo = j * block_k
+            k_hi = min((j + 1) * block_k, k_len) - 1
+            if q_lo >= k_hi:
+                out[i, j] = BLOCK_FULL
+            elif q_hi >= k_lo:
+                out[i, j] = BLOCK_PARTIAL
+    return out
+
+
+def full_block_layout(q_len: int, k_len: int, block_q: int, block_k: int) -> np.ndarray:
+    nq = (q_len + block_q - 1) // block_q
+    nk = (k_len + block_k - 1) // block_k
+    return np.full((nq, nk), BLOCK_FULL, np.uint8)
+
+
+def butterfly_block_layout(q_len: int, k_len: int, block_q: int, block_k: int,
+                           causal: bool = False) -> np.ndarray:
+    """Fixed butterfly sparsity (paper §3.3, Pixelated Butterfly [17]).
+
+    A block (i, j) is kept if it is on the block-diagonal band, or if i and j
+    are connected in a butterfly (bit-reversal stride) pattern: j ≡ i
+    (mod sqrt(n)) or |i - j| is a power-of-two stride. This reproduces the
+    sparsity *structure class* used in the paper's downstream experiments.
+    """
+    nq = (q_len + block_q - 1) // block_q
+    nk = (k_len + block_k - 1) // block_k
+    out = np.zeros((nq, nk), np.uint8)
+    n = max(nq, nk)
+    root = max(1, int(round(np.sqrt(n))))
+    for i in range(nq):
+        for j in range(nk):
+            keep = abs(i - j) <= 1                      # local band
+            keep |= (i % root) == (j % root)            # butterfly stride
+            d = abs(i - j)
+            keep |= d > 0 and (d & (d - 1)) == 0        # power-of-two offsets
+            if keep:
+                out[i, j] = BLOCK_FULL
+    if causal:
+        out = np.minimum(out, causal_block_layout(q_len, k_len, block_q, block_k))
+    return out
+
+
+def sliding_window_block_layout(q_len: int, k_len: int, block_q: int, block_k: int,
+                                window: int, q_offset: int = 0) -> np.ndarray:
+    """Block layout for a causal sliding-window mask (Hymba / long-context)."""
+    nq = (q_len + block_q - 1) // block_q
+    nk = (k_len + block_k - 1) // block_k
+    out = np.zeros((nq, nk), np.uint8)
+    for i in range(nq):
+        q_lo = i * block_q + q_offset
+        q_hi = min((i + 1) * block_q, q_len) - 1 + q_offset
+        for j in range(nk):
+            k_lo = j * block_k
+            k_hi = min((j + 1) * block_k, k_len) - 1
+            # overlap of [q_lo, q_hi] x [k_lo, k_hi] with the band k <= q < k + window
+            if q_lo > k_hi + window - 1 or q_hi < k_lo:
+                continue  # entirely outside band
+            fully_inside = (q_lo >= k_hi) and (q_hi - k_lo < window)
+            out[i, j] = BLOCK_FULL if fully_inside else BLOCK_PARTIAL
+    return out
+
+
+def layout_density(layout: np.ndarray) -> float:
+    """Fraction s of non-skipped blocks (Prop. 4's sparsity fraction)."""
+    return float((layout != BLOCK_SKIP).mean())
+
+
+def layout_to_element_mask(layout: np.ndarray, block_q: int, block_k: int,
+                           q_len: int, k_len: int,
+                           base_mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Expand a block layout to a (q, k) boolean mask for oracle checking.
+
+    PARTIAL blocks intersect with base_mask (e.g. causal); FULL blocks are
+    all-True; SKIP all-False.
+    """
+    grid = jnp.asarray(layout)
+    qb = jnp.arange(q_len) // block_q
+    kb = jnp.arange(k_len) // block_k
+    blk = grid[qb[:, None], kb[None, :]]
+    mask = blk != BLOCK_SKIP
+    if base_mask is not None:
+        mask = mask & jnp.where(blk == BLOCK_FULL, True, base_mask)
+    return mask

@@ -1,0 +1,99 @@
+"""Online (blocked) softmax primitives — the algebraic core of FlashAttention §3.1.
+
+The paper decomposes softmax over a concatenation ``x = [x1 x2]`` with running
+statistics ``m(x) = max`` and ``l(x) = sum exp(x - m)``:
+
+    m  = max(m1, m2)
+    l  = exp(m1 - m) * l1 + exp(m2 - m) * l2
+
+and the attention output accumulator rescales the same way (Alg. 1 line 12).
+These primitives are shared by: the pure-jnp chunked reference
+(``kernels/ref.py``), the Pallas kernels (same math, inlined), and the
+split-KV decode combine. They are property-tested (associativity /
+commutativity of the merge operator) in ``tests/test_online_softmax.py``.
+
+A softmax "state" over a set of key blocks is the triple ``(m, l, acc)``:
+  m   : (..., q)        running row max of scores (fp32)
+  l   : (..., q)        running row sum of exp(scores - m) (fp32)
+  acc : (..., q, d)     running UNNORMALIZED output  sum exp(s - m) @ V (fp32)
+
+The final output is ``acc / l`` (guarding l == 0 for fully-masked rows).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = float(-1e30)  # large-negative instead of -inf: keeps exp/max NaN-free
+
+
+class SoftmaxState(NamedTuple):
+    m: jax.Array    # (..., q)
+    l: jax.Array    # (..., q)
+    acc: jax.Array  # (..., q, d)
+
+
+def init_state(q_shape: tuple[int, ...], d: int, dtype=jnp.float32) -> SoftmaxState:
+    """Empty state: m = -inf, l = 0, acc = 0 (Alg. 1 line 2)."""
+    return SoftmaxState(
+        m=jnp.full(q_shape, NEG_INF, dtype),
+        l=jnp.zeros(q_shape, dtype),
+        acc=jnp.zeros((*q_shape, d), dtype),
+    )
+
+
+def block_state(scores: jax.Array, values: jax.Array,
+                p_dtype=None) -> SoftmaxState:
+    """State for a single block of scores (..., q, k) and values (..., k, d).
+
+    scores must already include any masking as additive NEG_INF terms.
+    ``p_dtype`` (e.g. bf16) stores the probability tile at reduced width for
+    the P@V contraction while keeping fp32 accumulation (FA2-style §Perf
+    lever; m/l statistics stay fp32).
+    """
+    scores = scores.astype(jnp.float32)
+    m = jnp.max(scores, axis=-1)
+    # Guard fully-masked rows: exp(NEG_INF - NEG_INF) = 1 would pollute l,
+    # so re-subtract with a floored m and zero the weights explicitly.
+    p = jnp.exp(scores - m[..., None])
+    p = jnp.where(scores <= NEG_INF / 2, 0.0, p)
+    l = jnp.sum(p, axis=-1)
+    if p_dtype is not None:
+        acc = jax.lax.dot_general(
+            p.astype(p_dtype), values.astype(p_dtype),
+            ((( p.ndim - 1,), (values.ndim - 2,)),
+             (tuple(range(p.ndim - 2)), tuple(range(values.ndim - 2)))),
+            preferred_element_type=jnp.float32)
+    else:
+        acc = p @ values.astype(jnp.float32)
+    return SoftmaxState(m=m, l=l, acc=acc)
+
+
+def merge_states(a: SoftmaxState, b: SoftmaxState) -> SoftmaxState:
+    """Associative + commutative merge (paper §3.1 decomposition).
+
+    This is the operator used by both the sequential kv-block loop and the
+    split-KV decode combine (which merges partials computed in parallel).
+    """
+    m = jnp.maximum(a.m, b.m)
+    ea = jnp.exp(a.m - m)
+    eb = jnp.exp(b.m - m)
+    l = a.l * ea + b.l * eb
+    acc = a.acc * ea[..., None] + b.acc * eb[..., None]
+    return SoftmaxState(m=m, l=l, acc=acc)
+
+
+def finalize(state: SoftmaxState, dtype=None) -> tuple[jax.Array, jax.Array]:
+    """Return (output, lse). output = acc / l; lse = m + log(l).
+
+    Fully-masked rows (l == 0) produce zeros and lse = NEG_INF.
+    """
+    l_safe = jnp.where(state.l == 0.0, 1.0, state.l)
+    out = state.acc / l_safe[..., None]
+    lse = jnp.where(state.l == 0.0, NEG_INF, state.m + jnp.log(l_safe))
+    if dtype is not None:
+        out = out.astype(dtype)
+    return out, lse

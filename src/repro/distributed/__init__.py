@@ -1,0 +1,5 @@
+from repro.distributed.meshes import data_axis_names, make_mesh, num_data_shards  # noqa: F401
+from repro.distributed.sharding import (DEFAULT_RULES, resolve_spec,  # noqa: F401
+                                        resolve_tree, rules_for_mesh,
+                                        validate_divisibility)
+from repro.distributed.zero import zero1_state_specs  # noqa: F401

@@ -1,0 +1,23 @@
+"""Mesh construction helpers (the production mesh itself lives in
+repro.launch.mesh per the assignment; these are the generic utilities)."""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]) -> Mesh:
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def data_axis_names(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def num_data_shards(mesh: Mesh) -> int:
+    n = 1
+    for a in data_axis_names(mesh):
+        n *= mesh.shape[a]
+    return n

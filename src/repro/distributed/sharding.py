@@ -1,0 +1,153 @@
+"""Logical-axis sharding rules -> physical NamedShardings.
+
+Model code annotates params/inputs with *logical* PartitionSpecs (axis names
+like "embed", "heads", "ff", "expert", "vocab", "data"). A rule table maps
+logical names to physical mesh axes; unlisted names are replicated. This is
+the MaxText/T5X pattern: swapping a rule table re-shards the whole model
+(that is how the §Perf hillclimb tries alternative shardings without
+touching model code).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Mapping
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+# default rules: 2D/3D mesh with TP on "model", DP on ("pod","data")
+DEFAULT_RULES: dict[str, Any] = {
+    "embed": None,             # activations' feature dim replicated
+    "heads": "model",          # attention head projections -> TP
+    "ff": "model",             # FFN hidden -> TP
+    "expert": "model",         # MoE experts -> EP (same physical axis)
+    "vocab": "model",          # embedding/vocab rows -> TP
+    "ssm_ff": "model",         # SSM projections -> TP
+    "ssm_heads": "model",      # SSM decode-state heads -> TP
+    "kv_seq": "model",         # KV-cache capacity -> sequence-sharded TP
+    "data": "data",            # batch -> DP (expanded to ("pod","data") if present)
+}
+
+
+def rules_for_mesh(mesh: Mesh, overrides: Mapping[str, Any] | None = None):
+    rules = dict(DEFAULT_RULES)
+    if "pod" in mesh.axis_names:
+        rules["data"] = ("pod", "data")
+    if overrides:
+        rules.update(overrides)
+    return rules
+
+
+def auto_rules(cfg, mesh: Mesh, *, global_batch: int | None = None,
+               overrides: Mapping[str, Any] | None = None):
+    """Divisibility-aware rules for one (arch, mesh, shape) cell.
+
+    GSPMD jit boundaries require sharded dims to divide evenly; this demotes
+    any logical axis whose concrete dims do not divide the TP size to
+    replicated (e.g. granite's vocab 49155 on TP-16, hymba's SSM widths),
+    and replicates the batch when global_batch < DP (long_500k, batch 1).
+    """
+    rules = rules_for_mesh(mesh, overrides)
+    m = mesh.shape.get("model", 1)
+
+    def divisible(*dims):
+        return all(d % m == 0 for d in dims)
+
+    if cfg.vocab_size and not divisible(cfg.vocab_size):
+        rules["vocab"] = None
+    if cfg.num_experts and not divisible(cfg.num_experts):
+        rules["expert"] = None
+    if cfg.d_ff and not divisible(cfg.d_ff):
+        rules["ff"] = None
+    if cfg.num_heads:
+        hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+        if not divisible(hq * hd, hkv * hd):
+            rules["heads"] = None
+    if cfg.ssm_state:
+        d_inner = cfg.ssm_d_inner
+        nheads = cfg.ssm_num_heads
+        proj = 2 * d_inner + 2 * cfg.ssm_state + nheads
+        conv_ch = d_inner + 2 * cfg.ssm_state
+        if not divisible(proj, conv_ch, d_inner):
+            rules["ssm_ff"] = None
+        if not divisible(nheads):
+            rules["ssm_heads"] = None
+    if global_batch is not None:
+        dp = 1
+        for a in ("pod", "data"):
+            if a in mesh.axis_names:
+                dp *= mesh.shape[a]
+        if global_batch % dp != 0:
+            rules["data"] = None
+    if overrides:
+        rules.update(overrides)
+    return rules
+
+
+def resolve_spec(logical: P, rules: Mapping[str, Any]) -> P:
+    """Map a logical PartitionSpec to a physical one via the rule table."""
+    out = []
+    for entry in logical:
+        if entry is None:
+            out.append(None)
+            continue
+        names = entry if isinstance(entry, tuple) else (entry,)
+        phys: list[str] = []
+        for n in names:
+            r = rules.get(n, None)
+            if r is None:
+                continue
+            phys.extend(r if isinstance(r, tuple) else (r,))
+        if not phys:
+            out.append(None)
+        elif len(phys) == 1:
+            out.append(phys[0])
+        else:
+            out.append(tuple(phys))
+    return P(*out)
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, P)
+
+
+def resolve_tree(tree, mesh: Mesh, rules: Mapping[str, Any] | None = None):
+    """Pytree of logical PartitionSpecs -> pytree of NamedShardings."""
+    rules = rules or rules_for_mesh(mesh)
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, resolve_spec(s, rules)), tree,
+        is_leaf=_is_spec)
+
+
+def validate_divisibility(shapes_tree, specs_tree, mesh: Mesh,
+                          rules: Mapping[str, Any] | None = None) -> list[str]:
+    """Return a list of human-readable problems where a sharded dim is not
+    divisible by the product of its mesh axes (dry-run preflight)."""
+    rules = rules or rules_for_mesh(mesh)
+    problems: list[str] = []
+
+    def check(path, shape, spec):
+        phys = resolve_spec(spec, rules)
+        for dim, entry in zip(shape, phys):
+            if entry is None:
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            n = int(np.prod([mesh.shape[a] for a in axes]))
+            if dim % n != 0:
+                problems.append(f"{path}: dim {dim} % {axes}={n} != 0")
+
+    def walk(path, shapes, specs):
+        if _is_spec(specs):
+            check(path, shapes.shape if hasattr(shapes, "shape") else shapes, specs)
+            return
+        if isinstance(specs, dict):
+            for k in specs:
+                walk(f"{path}/{k}", shapes[k], specs[k])
+        elif isinstance(specs, (list, tuple)):
+            for i, s in enumerate(specs):
+                walk(f"{path}[{i}]", shapes[i], s)
+
+    walk("", shapes_tree, specs_tree)
+    return problems

@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the paper's compute hot-spots + pure-jnp oracles.
+
+flash_attention.py  Alg. 1/2 fwd + Alg. 4 bwd (dq, dkv), dense & block-sparse
+flash_decode.py     split-KV decode (FlashDecoding adaptation)
+ops.py              jit'd wrappers + custom_vjp assembly
+ref.py              oracles: standard attention (Alg. 0), chunked (Alg. 1 @ XLA)
+"""

@@ -1,0 +1,516 @@
+"""FlashAttention forward + backward Pallas TPU kernels (paper Alg. 1/2/4).
+
+TPU adaptation of the paper's CUDA kernel (see DESIGN.md §2/§6):
+  * grid = (batch, q_heads, num_q_blocks, num_kv_blocks) — the kv axis is the
+    innermost (sequential on TPU), and the running softmax state (m, l, acc)
+    lives in VMEM scratch that persists across kv steps. This is Algorithm 1
+    with the loops exchanged; `variant="paper"` reproduces the exact
+    per-block rescaling of Alg. 1 line 12, `variant="fa2"` keeps the
+    accumulator unnormalized and divides once at the end (beyond-paper
+    optimization, recorded separately in EXPERIMENTS.md §Perf).
+  * Q/K/V tiles are staged HBM→VMEM by BlockSpecs; S/P tiles never leave
+    VMEM — the IO behaviour the paper proves Θ(N²d²M⁻¹) about.
+  * causal / sliding-window blocks that are fully masked are skipped with
+    pl.when (block-level skip — the TPU analogue of not launching the tile).
+  * dropout uses a counter-based hash of the GLOBAL element coordinates
+    (seed, b, h, q_pos, k_pos) — a pure function, so the backward pass
+    regenerates the identical mask with zero HBM traffic. This replaces the
+    paper's "save the Philox state ℛ" (Alg. 2 line 1) TPU-idiomatically.
+  * GQA: kv BlockSpec index_map divides the head index by the group size, so
+    grouped heads re-read the same kv tile from HBM (matches production TPU
+    kernels; the tile is VMEM-resident across the group on real hardware).
+  * backward = two kernels, as the paper's Alg. 4 + no-atomics constraint
+    demands on TPU: a dq kernel (grid over q blocks, kv innermost) and a
+    dkv kernel (grid over kv blocks, q innermost). Both recompute S and P
+    from (q, k, m, l) tiles (the paper's recomputation trick) and regenerate
+    the dropout mask.
+
+Validated in interpret mode against kernels/ref.py oracles (exact math,
+fp32 accumulation) — see tests/test_kernels_flash.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = float(-1e30)
+LANES = 128  # TPU vreg lane count; m/l scratch is lane-replicated.
+
+
+# ---------------------------------------------------------------------------
+# shared in-kernel helpers
+# ---------------------------------------------------------------------------
+
+def _mix32(x):
+    """murmur3 finalizer on uint32 (same math as ref.dropout_keep_mask)."""
+    x = x.astype(jnp.uint32)
+    x ^= x >> 16
+    x *= jnp.uint32(0x7FEB352D)
+    x ^= x >> 15
+    x *= jnp.uint32(0x846CA68B)
+    x ^= x >> 16
+    return x
+
+
+def _dropout_keep(seed, b, h, q0, k0, bq, bk, num_heads, q_len, k_len, p_drop):
+    """(bq, bk) keep mask for the tile whose global origin is (q0, k0)."""
+    q_pos = (q0 + jax.lax.broadcasted_iota(jnp.uint32, (bq, bk), 0))
+    k_pos = (k0 + jax.lax.broadcasted_iota(jnp.uint32, (bq, bk), 1))
+    idx = ((b.astype(jnp.uint32) * jnp.uint32(num_heads) + h.astype(jnp.uint32))
+           * jnp.uint32(q_len) + q_pos)
+    idx = idx * jnp.uint32(k_len) + k_pos
+    r = _mix32(idx ^ _mix32(jnp.uint32(seed)))
+    threshold = jnp.uint32(int(p_drop * float(2**32 - 1)))
+    return r >= threshold
+
+
+def _attend_mask(q0, k0, bq, bk, causal, window):
+    """(bq, bk) boolean attend-mask for a tile at global origin (q0, k0).
+    q0 already includes the query position offset."""
+    q_pos = q0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = k0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    ok = jnp.ones((bq, bk), jnp.bool_)
+    if causal or window is not None:
+        ok &= q_pos >= k_pos
+    if window is not None:
+        ok &= (q_pos - k_pos) < window
+    return ok
+
+
+def _block_should_run(qi, ki, bq, bk, q_offset, causal, window):
+    """Static-shape predicate: does tile (qi, ki) contain any unmasked pair?"""
+    run = jnp.bool_(True)
+    q_lo = qi * bq + q_offset
+    q_hi = q_lo + bq - 1
+    k_lo = ki * bk
+    k_hi = k_lo + bk - 1
+    if causal or window is not None:
+        run &= q_hi >= k_lo                      # some query at/after some key
+    if window is not None:
+        run &= (q_lo - k_hi) < window            # some key within the window
+    return run
+
+
+def _run_and_mask(layout_ref, qi, ki, bq, bk, q_offset, causal, window):
+    """Block-run predicate + element-mask applicability.
+
+    Dense path (layout_ref is None): geometry decides both.
+    Block-sparse path (Alg. 5): the prefetched layout decides — 0 skip,
+    1 full (no element mask), 2 partial (apply base causal/window mask).
+    Returns (run, apply_mask, full_override) where full_override is a traced
+    bool that disables the element mask for FULL blocks.
+    """
+    if layout_ref is None:
+        run = _block_should_run(qi, ki, bq, bk, q_offset, causal, window)
+        return run, (causal or window is not None), None
+    blk = layout_ref[0, 0]
+    return blk != 0, (causal or window is not None), blk == 1
+
+
+# ---------------------------------------------------------------------------
+# forward kernel
+# ---------------------------------------------------------------------------
+
+def _fwd_kernel(seed_ref, q_ref, k_ref, v_ref, kvm_ref, layout_ref,
+                o_ref, m_ref, l_ref, acc_sc, m_sc, l_sc, *,
+                scale, causal, window, q_offset, dropout_p,
+                num_heads, q_len, k_len, variant):
+    b, h = pl.program_id(0), pl.program_id(1)
+    qi, ki = pl.program_id(2), pl.program_id(3)
+    nk = pl.num_programs(3)
+    bq, d = q_ref.shape[2], q_ref.shape[3]
+    bk = k_ref.shape[2]
+
+    @pl.when(ki == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc, NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+
+    run, apply_mask, full_override = _run_and_mask(
+        layout_ref, qi, ki, bq, bk, q_offset, causal, window)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)
+        k = k_ref[0, 0].astype(jnp.float32)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+
+        q0 = qi * bq + q_offset
+        k0 = ki * bk
+        if apply_mask:
+            ok = _attend_mask(q0, k0, bq, bk, causal, window)
+            if full_override is not None:
+                ok = ok | full_override
+            s = jnp.where(ok, s, NEG_INF)
+        if kvm_ref is not None:
+            s = jnp.where(kvm_ref[0][None, :], s, NEG_INF)
+
+        m_prev = m_sc[:, 0]
+        l_prev = l_sc[:, 0]
+        m_tile = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_prev, m_tile)
+        # NaN-free: masked elements / empty history handled with where-guards.
+        p = jnp.where(s <= NEG_INF / 2, 0.0, jnp.exp(s - m_new[:, None]))
+        correction = jnp.where(m_prev <= NEG_INF / 2, 0.0, jnp.exp(m_prev - m_new))
+        l_new = l_prev * correction + jnp.sum(p, axis=-1)
+
+        if dropout_p > 0.0:
+            keep = _dropout_keep(seed_ref[0], b, h, q0 - q_offset, k0, bq, bk,
+                                 num_heads, q_len, k_len, dropout_p)
+            p_acc = jnp.where(keep, p / (1.0 - dropout_p), 0.0)
+        else:
+            p_acc = p
+        pv = jax.lax.dot_general(p_acc, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+
+        if variant == "paper":
+            # Alg. 1 line 12: O_i <- diag(l_new)^-1 (diag(l_old) e^{...} O_i + e^{...} P~ V)
+            l_safe = jnp.where(l_new == 0.0, 1.0, l_new)
+            acc_sc[...] = (acc_sc[...] * (l_prev * correction)[:, None] + pv) / l_safe[:, None]
+        else:  # fa2: unnormalized accumulator, single rescale by the max shift
+            acc_sc[...] = acc_sc[...] * correction[:, None] + pv
+
+        m_sc[...] = jnp.broadcast_to(m_new[:, None], m_sc.shape)
+        l_sc[...] = jnp.broadcast_to(l_new[:, None], l_sc.shape)
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = l_sc[:, 0]
+        if variant == "paper":
+            o = acc_sc[...]  # already normalized every step
+        else:
+            l_safe = jnp.where(l == 0.0, 1.0, l)
+            o = acc_sc[...] / l_safe[:, None]
+        o_ref[0, 0] = o.astype(o_ref.dtype)
+        m_ref[0, 0] = m_sc[:, 0]
+        l_ref[0, 0] = l
+
+
+
+def flash_attention_forward(
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    kv_mask: jax.Array | None,
+    *,
+    scale: float, causal: bool, window: int | None, q_offset: int,
+    dropout_p: float, dropout_seed=0,
+    block_q: int, block_k: int, variant: str = "fa2",
+    dropout_dims: tuple[int, int] | None = None,
+    block_layout: jax.Array | None = None,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (o, m, l). Shapes: q (b,hq,sq,d), k/v (b,hkv,sk,d),
+    kv_mask (b, sk) or None. sq % block_q == 0 and sk % block_k == 0
+    (ops.py pads). dropout_seed may be a traced scalar (no retrace per
+    step). dropout_dims = (orig_q_len, orig_k_len) keeps the counter-based
+    dropout hash independent of padding. block_layout (nq, nk) uint8
+    activates block-sparse FlashAttention (Alg. 5)."""
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    n_rep = hq // hkv
+    nq, nk = sq // block_q, sk // block_k
+    dq_len, dk_len = dropout_dims if dropout_dims is not None else (sq, sk)
+    seed_arr = jnp.asarray(dropout_seed, jnp.uint32).reshape(1)
+
+    kernel = functools.partial(
+        _fwd_kernel, scale=scale, causal=causal, window=window,
+        q_offset=q_offset, dropout_p=dropout_p,
+        num_heads=hq, q_len=dq_len, k_len=dk_len, variant=variant)
+
+    in_specs = [
+        pl.BlockSpec((1,), lambda b, h, qi, ki: (0,)),
+        pl.BlockSpec((1, 1, block_q, d), lambda b, h, qi, ki: (b, h, qi, 0)),
+        pl.BlockSpec((1, 1, block_k, d), lambda b, h, qi, ki: (b, h // n_rep, ki, 0)),
+        pl.BlockSpec((1, 1, block_k, d), lambda b, h, qi, ki: (b, h // n_rep, ki, 0)),
+    ]
+    args = [seed_arr, q, k, v]
+    has_kvm, has_layout = kv_mask is not None, block_layout is not None
+    if has_kvm:
+        in_specs.append(pl.BlockSpec((1, block_k), lambda b, h, qi, ki: (b, ki)))
+        args.append(kv_mask)
+    if has_layout:
+        in_specs.append(pl.BlockSpec((1, 1), lambda b, h, qi, ki: (qi, ki)))
+        args.append(block_layout)
+
+    def wrapped(seed_ref, q_ref, k_ref, v_ref, *rest):
+        n_opt = int(has_kvm) + int(has_layout)
+        opts = rest[:n_opt]
+        rest = rest[n_opt:]
+        kvm_ref = opts[0] if has_kvm else None
+        lay_ref = opts[-1] if has_layout else None
+        return kernel(seed_ref, q_ref, k_ref, v_ref, kvm_ref, lay_ref, *rest)
+
+    out_specs = [
+        pl.BlockSpec((1, 1, block_q, d), lambda b, h, qi, ki: (b, h, qi, 0)),
+        pl.BlockSpec((1, 1, block_q), lambda b, h, qi, ki: (b, h, qi)),
+        pl.BlockSpec((1, 1, block_q), lambda b, h, qi, ki: (b, h, qi)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((b, hq, sq, d), q.dtype),
+        jax.ShapeDtypeStruct((b, hq, sq), jnp.float32),
+        jax.ShapeDtypeStruct((b, hq, sq), jnp.float32),
+    ]
+    scratch = [
+        pltpu.VMEM((block_q, d), jnp.float32),
+        pltpu.VMEM((block_q, LANES), jnp.float32),
+        pltpu.VMEM((block_q, LANES), jnp.float32),
+    ]
+    o, m, l = pl.pallas_call(
+        wrapped,
+        grid=(b, hq, nq, nk),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(*args)
+    return o, m, l
+
+
+# ---------------------------------------------------------------------------
+# backward: dq kernel (grid over q blocks, kv innermost)
+# ---------------------------------------------------------------------------
+
+def _recompute_p(q, k, m_row, l_row, scale, q0, k0, bq, bk,
+                 causal, window, kvm_row, full_override=None):
+    """Recompute P tile = diag(l)^-1 exp(S - m) (Alg. 4 line 13)."""
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if causal or window is not None:
+        ok = _attend_mask(q0, k0, bq, bk, causal, window)
+        if full_override is not None:
+            ok = ok | full_override
+        s = jnp.where(ok, s, NEG_INF)
+    if kvm_row is not None:
+        s = jnp.where(kvm_row[None, :], s, NEG_INF)
+    m_safe = jnp.where(l_row == 0.0, 0.0, m_row)
+    l_safe = jnp.where(l_row == 0.0, 1.0, l_row)
+    p = jnp.where(s <= NEG_INF / 2, 0.0, jnp.exp(s - m_safe[:, None])) / l_safe[:, None]
+    return s, p
+
+
+def _dq_kernel(seed_ref, q_ref, k_ref, v_ref, do_ref, m_ref, l_ref, dd_ref,
+               kvm_ref, layout_ref, dq_ref, dq_sc, *,
+               scale, causal, window, q_offset, dropout_p,
+               num_heads, q_len, k_len):
+    b, h = pl.program_id(0), pl.program_id(1)
+    qi, ki = pl.program_id(2), pl.program_id(3)
+    nk = pl.num_programs(3)
+    bq, d = q_ref.shape[2], q_ref.shape[3]
+    bk = k_ref.shape[2]
+
+    @pl.when(ki == 0)
+    def _init():
+        dq_sc[...] = jnp.zeros_like(dq_sc)
+
+    run, _, full_override = _run_and_mask(
+        layout_ref, qi, ki, bq, bk, q_offset, causal, window)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)
+        k = k_ref[0, 0].astype(jnp.float32)
+        v = v_ref[0, 0].astype(jnp.float32)
+        do = do_ref[0, 0].astype(jnp.float32)
+        m_row, l_row, dd = m_ref[0, 0], l_ref[0, 0], dd_ref[0, 0]
+        q0 = qi * bq + q_offset
+        k0 = ki * bk
+        kvm_row = kvm_ref[0] if kvm_ref is not None else None
+        _, p = _recompute_p(q, k, m_row, l_row, scale, q0, k0, bq, bk,
+                            causal, window, kvm_row, full_override)
+        dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        if dropout_p > 0.0:
+            keep = _dropout_keep(seed_ref[0], b, h, q0 - q_offset, k0, bq, bk,
+                                 num_heads, q_len, k_len, dropout_p)
+            dp = jnp.where(keep, dp / (1.0 - dropout_p), 0.0)
+        ds = p * (dp - dd[:, None])
+        dq_sc[...] += scale * jax.lax.dot_general(
+            ds, k, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        dq_ref[0, 0] = dq_sc[...].astype(dq_ref.dtype)
+
+
+# ---------------------------------------------------------------------------
+# backward: dkv kernel (grid over kv blocks, q innermost)
+# ---------------------------------------------------------------------------
+
+def _dkv_kernel(seed_ref, q_ref, k_ref, v_ref, do_ref, m_ref, l_ref, dd_ref,
+                kvm_ref, layout_ref, dk_ref, dv_ref, dk_sc, dv_sc, *,
+                scale, causal, window, q_offset, dropout_p,
+                num_heads, q_len, k_len):
+    b, h = pl.program_id(0), pl.program_id(1)
+    ki, qi = pl.program_id(2), pl.program_id(3)
+    nq = pl.num_programs(3)
+    bq, d = q_ref.shape[2], q_ref.shape[3]
+    bk = k_ref.shape[2]
+
+    @pl.when(qi == 0)
+    def _init():
+        dk_sc[...] = jnp.zeros_like(dk_sc)
+        dv_sc[...] = jnp.zeros_like(dv_sc)
+
+    run, _, full_override = _run_and_mask(
+        layout_ref, qi, ki, bq, bk, q_offset, causal, window)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)
+        k = k_ref[0, 0].astype(jnp.float32)
+        v = v_ref[0, 0].astype(jnp.float32)
+        do = do_ref[0, 0].astype(jnp.float32)
+        m_row, l_row, dd = m_ref[0, 0], l_ref[0, 0], dd_ref[0, 0]
+        q0 = qi * bq + q_offset
+        k0 = ki * bk
+        kvm_row = kvm_ref[0] if kvm_ref is not None else None
+        _, p = _recompute_p(q, k, m_row, l_row, scale, q0, k0, bq, bk,
+                            causal, window, kvm_row, full_override)
+        if dropout_p > 0.0:
+            keep = _dropout_keep(seed_ref[0], b, h, q0 - q_offset, k0, bq, bk,
+                                 num_heads, q_len, k_len, dropout_p)
+            z = jnp.where(keep, 1.0 / (1.0 - dropout_p), 0.0)
+            p_dropped = p * z
+        else:
+            z = None
+            p_dropped = p
+        # dV += P_dropped^T dO   (Alg. 4 line 16)
+        dv_sc[...] += jax.lax.dot_general(
+            p_dropped, do, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        # dP = (dO V^T) ∘ Z ; dS = P ∘ (dP - D) ; dK += scale * dS^T Q
+        dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        if z is not None:
+            dp = dp * z
+        ds = p * (dp - dd[:, None])
+        dk_sc[...] += scale * jax.lax.dot_general(
+            ds, q, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(qi == nq - 1)
+    def _finalize():
+        dk_ref[0, 0] = dk_sc[...].astype(dk_ref.dtype)
+        dv_ref[0, 0] = dv_sc[...].astype(dv_ref.dtype)
+
+
+def flash_attention_backward(
+    q, k, v, o, do, m, l, kv_mask,
+    *,
+    scale, causal, window, q_offset, dropout_p, dropout_seed,
+    block_q, block_k, dropout_dims: tuple[int, int] | None = None,
+    block_layout: jax.Array | None = None,
+    interpret: bool = True,
+):
+    """Returns (dq, dk, dv) with dk/dv already group-summed for GQA."""
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    n_rep = hq // hkv
+    nq, nk = sq // block_q, sk // block_k
+    dq_len, dk_len = dropout_dims if dropout_dims is not None else (sq, sk)
+    has_kvm, has_layout = kv_mask is not None, block_layout is not None
+    seed_arr = jnp.asarray(dropout_seed, jnp.uint32).reshape(1)
+
+    # D_i = rowsum(dO ∘ O) (paper Eq. 4 / Alg. 4 line 19). O(Nd) IO, done at
+    # the XLA level (fuses with surrounding ops).
+    dd = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32), axis=-1)
+
+    common = dict(scale=scale, causal=causal, window=window, q_offset=q_offset,
+                  dropout_p=dropout_p,
+                  num_heads=hq, q_len=dq_len, k_len=dk_len)
+
+    def _route(kernel, n_fixed):
+        def wrapped(*refs):
+            fixed = refs[:n_fixed]
+            rest = refs[n_fixed:]
+            n_opt = int(has_kvm) + int(has_layout)
+            opts = rest[:n_opt]
+            rest = rest[n_opt:]
+            kvm_ref = opts[0] if has_kvm else None
+            lay_ref = opts[-1] if has_layout else None
+            return kernel(*fixed, kvm_ref, lay_ref, *rest)
+        return wrapped
+
+    # ---- dq kernel ----
+    dq_kernel = functools.partial(_dq_kernel, **common)
+    in_specs = [
+        pl.BlockSpec((1,), lambda b, h, qi, ki: (0,)),
+        pl.BlockSpec((1, 1, block_q, d), lambda b, h, qi, ki: (b, h, qi, 0)),
+        pl.BlockSpec((1, 1, block_k, d), lambda b, h, qi, ki: (b, h // n_rep, ki, 0)),
+        pl.BlockSpec((1, 1, block_k, d), lambda b, h, qi, ki: (b, h // n_rep, ki, 0)),
+        pl.BlockSpec((1, 1, block_q, d), lambda b, h, qi, ki: (b, h, qi, 0)),
+        pl.BlockSpec((1, 1, block_q), lambda b, h, qi, ki: (b, h, qi)),
+        pl.BlockSpec((1, 1, block_q), lambda b, h, qi, ki: (b, h, qi)),
+        pl.BlockSpec((1, 1, block_q), lambda b, h, qi, ki: (b, h, qi)),
+    ]
+    args = [seed_arr, q, k, v, do, m, l, dd]
+    if has_kvm:
+        in_specs.append(pl.BlockSpec((1, block_k), lambda b, h, qi, ki: (b, ki)))
+        args.append(kv_mask)
+    if has_layout:
+        in_specs.append(pl.BlockSpec((1, 1), lambda b, h, qi, ki: (qi, ki)))
+        args.append(block_layout)
+    dq_wrapped = _route(dq_kernel, 8)
+
+    dq = pl.pallas_call(
+        dq_wrapped,
+        grid=(b, hq, nq, nk),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, block_q, d), lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, sq, d), q.dtype),
+        scratch_shapes=[pltpu.VMEM((block_q, d), jnp.float32)],
+        interpret=interpret,
+    )(*args)
+
+    # ---- dkv kernel ----
+    dkv_kernel = functools.partial(_dkv_kernel, **common)
+    in_specs = [
+        pl.BlockSpec((1,), lambda b, h, ki, qi: (0,)),
+        pl.BlockSpec((1, 1, block_q, d), lambda b, h, ki, qi: (b, h, qi, 0)),
+        pl.BlockSpec((1, 1, block_k, d), lambda b, h, ki, qi: (b, h // n_rep, ki, 0)),
+        pl.BlockSpec((1, 1, block_k, d), lambda b, h, ki, qi: (b, h // n_rep, ki, 0)),
+        pl.BlockSpec((1, 1, block_q, d), lambda b, h, ki, qi: (b, h, qi, 0)),
+        pl.BlockSpec((1, 1, block_q), lambda b, h, ki, qi: (b, h, qi)),
+        pl.BlockSpec((1, 1, block_q), lambda b, h, ki, qi: (b, h, qi)),
+        pl.BlockSpec((1, 1, block_q), lambda b, h, ki, qi: (b, h, qi)),
+    ]
+    args = [seed_arr, q, k, v, do, m, l, dd]
+    if has_kvm:
+        in_specs.append(pl.BlockSpec((1, block_k), lambda b, h, ki, qi: (b, ki)))
+        args.append(kv_mask)
+    if has_layout:
+        in_specs.append(pl.BlockSpec((1, 1), lambda b, h, ki, qi: (qi, ki)))
+        args.append(block_layout)
+    dkv_wrapped = _route(dkv_kernel, 8)
+
+    dk_p, dv_p = pl.pallas_call(
+        dkv_wrapped,
+        grid=(b, hq, nk, nq),
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((1, 1, block_k, d), lambda b, h, ki, qi: (b, h, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b, h, ki, qi: (b, h, ki, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hq, sk, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, hq, sk, d), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_k, d), jnp.float32),
+            pltpu.VMEM((block_k, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(*args)
+
+    if n_rep > 1:  # GQA: sum gradients over the query-head group
+        dk = dk_p.reshape(b, hkv, n_rep, sk, d).sum(axis=2)
+        dv = dv_p.reshape(b, hkv, n_rep, sk, d).sum(axis=2)
+    else:
+        dk, dv = dk_p, dv_p
+    return dq, dk.astype(k.dtype), dv.astype(v.dtype)

@@ -1,0 +1,142 @@
+"""Split-KV flash decode kernel (FlashDecoding-style adaptation of Alg. 1).
+
+Serving decode computes attention for ONE new query token against a long KV
+cache. The dense kernel's q-block grid degenerates (nq == 1), so the
+parallelism must come from splitting the KV axis: each split runs the
+Algorithm-1 inner loop over its KV slice and emits a *partial* softmax state
+(m, l, acc); the partials are merged with the associative online-softmax
+merge operator (``repro.core.online_softmax.merge_states``) — the same
+algebra the paper uses to decompose softmax across blocks, here exploited
+for parallelism instead of memory locality.
+
+On a real TPU the split axis is marked parallel (megacore / multiple cores);
+the combine is a tiny XLA reduction. Per-sequence valid lengths are passed
+as a ``kv_len (batch,)`` array — the kernel masks keys at/after the length
+(the serving engine's KV cache is a fixed-capacity ring of pages).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.flash_attention import LANES, NEG_INF
+
+
+def _decode_kernel(kvl_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+                   acc_sc, m_sc, l_sc, *, scale, block_k):
+    b, h = pl.program_id(0), pl.program_id(1)
+    si, ki = pl.program_id(2), pl.program_id(3)   # split idx, block-in-split
+    nk_in = pl.num_programs(3)
+    d = q_ref.shape[3]
+
+    @pl.when(ki == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc, NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+
+    q = q_ref[0, 0].astype(jnp.float32)              # (1, d)
+    k = k_ref[0, 0].astype(jnp.float32)              # (bk, d)
+    v = v_ref[0, 0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale  # (1, bk)
+
+    kv_len = kvl_ref[0]
+    k0 = (si * nk_in + ki) * block_k
+    k_pos = k0 + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(k_pos < kv_len, s, NEG_INF)
+
+    m_prev, l_prev = m_sc[:, 0], l_sc[:, 0]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.where(s <= NEG_INF / 2, 0.0, jnp.exp(s - m_new[:, None]))
+    corr = jnp.where(m_prev <= NEG_INF / 2, 0.0, jnp.exp(m_prev - m_new))
+    l_new = l_prev * corr + jnp.sum(p, axis=-1)
+    acc_sc[...] = acc_sc[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_sc[...] = jnp.broadcast_to(m_new[:, None], m_sc.shape)
+    l_sc[...] = jnp.broadcast_to(l_new[:, None], l_sc.shape)
+
+    @pl.when(ki == nk_in - 1)
+    def _emit_partial():
+        o_ref[0, 0, 0] = acc_sc[0]        # unnormalized partial (d,)
+        m_ref[0, 0, 0] = m_sc[0, 0]
+        l_ref[0, 0, 0] = l_sc[0, 0]
+
+
+def flash_decode(
+    q: jax.Array,          # (b, hq, 1, d)
+    k: jax.Array,          # (b, hkv, sk, d)  — KV cache (capacity sk)
+    v: jax.Array,
+    kv_len: jax.Array,     # (b,) int32 valid lengths
+    *,
+    scale: float | None = None,
+    block_k: int = 256,
+    num_splits: int = 8,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """One-token attention against a fixed-capacity KV cache. Returns
+    (b, hq, 1, d). GQA handled via kv index_map."""
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    assert sq == 1, "flash_decode handles single-token decode; use flash_attention otherwise"
+    n_rep = hq // hkv
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    block_k = min(block_k, sk)
+    # pad cache capacity to a multiple of (num_splits * block_k)
+    tile = num_splits * block_k
+    pad = (-sk) % tile
+    if pad:
+        widths = ((0, 0), (0, 0), (0, pad), (0, 0))
+        k = jnp.pad(k, widths)
+        v = jnp.pad(v, widths)
+    skp = k.shape[2]
+    nk_in = skp // (num_splits * block_k)
+
+    kernel = functools.partial(_decode_kernel, scale=scale, block_k=block_k)
+
+    o_p, m_p, l_p = pl.pallas_call(
+        kernel,
+        grid=(b, hq, num_splits, nk_in),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, si, ki: (b,)),
+            pl.BlockSpec((1, 1, 1, d), lambda b, h, si, ki: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b, h, si, ki: (b, h // n_rep, si * nk_in + ki, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b, h, si, ki: (b, h // n_rep, si * nk_in + ki, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, d), lambda b, h, si, ki: (b, h, si, 0)),
+            pl.BlockSpec((1, 1, 1), lambda b, h, si, ki: (b, h, si)),
+            pl.BlockSpec((1, 1, 1), lambda b, h, si, ki: (b, h, si)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hq, num_splits, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, hq, num_splits), jnp.float32),
+            jax.ShapeDtypeStruct((b, hq, num_splits), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1, d), jnp.float32),
+            pltpu.VMEM((1, LANES), jnp.float32),
+            pltpu.VMEM((1, LANES), jnp.float32),
+        ],
+        interpret=interpret,
+    )(kv_len.astype(jnp.int32), q, k, v)
+
+    # combine partials with the online-softmax merge (vectorized over splits)
+    m = jnp.max(m_p, axis=-1)                                     # (b, hq)
+    w = jnp.where(m_p <= NEG_INF / 2, 0.0, jnp.exp(m_p - m[..., None]))
+    l = jnp.sum(l_p * w, axis=-1)
+    acc = jnp.sum(o_p * w[..., None], axis=2)                     # (b, hq, d)
+    l_safe = jnp.where(l == 0.0, 1.0, l)
+    out = (acc / l_safe[..., None]).astype(q.dtype)
+    return out[:, :, None, :]

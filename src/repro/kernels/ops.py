@@ -1,0 +1,154 @@
+"""Public jit'd entry points for the Pallas kernels.
+
+``flash_attention`` assembles the forward/backward Pallas kernels into a
+differentiable op via ``jax.custom_vjp`` (residuals: q, k, v, o, m, l — the
+paper's O(N) extra memory), handles padding to block multiples, and exposes
+the paper-faithful / fa2 accumulator variants.
+
+On this CPU container the kernels run with ``interpret=True`` (Pallas
+executes the kernel body op-by-op) — correctness-exact, wall-clock
+meaningless. On a real TPU set ``interpret=False`` (the default resolves via
+``repro.kernels.ops.default_interpret()``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import flash_attention as fa
+from repro.kernels import ref as ref_mod
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> tuple[jax.Array, int]:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x, 0
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), pad
+
+
+@functools.partial(
+    jax.custom_vjp,
+    nondiff_argnums=(6, 7, 8, 9, 10, 11, 12, 13, 14, 15),
+)
+def _flash_core(q, k, v, kv_mask, block_layout, dropout_seed, scale, causal,
+                window, q_offset, dropout_p, block_q, block_k, variant,
+                dropout_dims, interpret):
+    o, _, _ = fa.flash_attention_forward(
+        q, k, v, kv_mask, scale=scale, causal=causal, window=window,
+        q_offset=q_offset, dropout_p=dropout_p, dropout_seed=dropout_seed,
+        block_q=block_q, block_k=block_k, variant=variant,
+        dropout_dims=dropout_dims, block_layout=block_layout,
+        interpret=interpret)
+    return o
+
+
+def _flash_core_fwd(q, k, v, kv_mask, block_layout, dropout_seed, scale,
+                    causal, window, q_offset, dropout_p, block_q, block_k,
+                    variant, dropout_dims, interpret):
+    o, m, l = fa.flash_attention_forward(
+        q, k, v, kv_mask, scale=scale, causal=causal, window=window,
+        q_offset=q_offset, dropout_p=dropout_p, dropout_seed=dropout_seed,
+        block_q=block_q, block_k=block_k, variant=variant,
+        dropout_dims=dropout_dims, block_layout=block_layout,
+        interpret=interpret)
+    return o, (q, k, v, kv_mask, block_layout, dropout_seed, o, m, l)
+
+
+def _flash_core_bwd(scale, causal, window, q_offset, dropout_p,
+                    block_q, block_k, variant, dropout_dims, interpret, res, do):
+    q, k, v, kv_mask, block_layout, dropout_seed, o, m, l = res
+    dq, dk, dv = fa.flash_attention_backward(
+        q, k, v, o, do, m, l, kv_mask,
+        scale=scale, causal=causal, window=window, q_offset=q_offset,
+        dropout_p=dropout_p, dropout_seed=dropout_seed,
+        block_q=block_q, block_k=block_k, dropout_dims=dropout_dims,
+        block_layout=block_layout, interpret=interpret)
+
+    def _zero_tangent(x):
+        return None if x is None else np.zeros(x.shape, jax.dtypes.float0)
+
+    return (dq, dk, dv, _zero_tangent(kv_mask), _zero_tangent(block_layout),
+            np.zeros((), jax.dtypes.float0))
+
+
+_flash_core.defvjp(_flash_core_fwd, _flash_core_bwd)
+
+
+def flash_attention(
+    q: jax.Array,                      # (b, hq, sq, d)
+    k: jax.Array,                      # (b, hkv, sk, d)
+    v: jax.Array,                      # (b, hkv, sk, d)
+    *,
+    kv_mask: jax.Array | None = None,  # (b, sk) True = valid
+    causal: bool = False,
+    window: int | None = None,
+    scale: float | None = None,
+    q_offset: int | None = None,
+    dropout_p: float = 0.0,
+    dropout_seed: int = 0,
+    block_q: int = 128,
+    block_k: int = 128,
+    variant: str = "fa2",              # "paper" (Alg. 1 faithful) | "fa2"
+    block_layout=None,                 # (nq, nk) uint8 -> block-sparse (Alg. 5)
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Differentiable FlashAttention (Pallas). Pads seq dims to block
+    multiples internally; GQA inferred from head counts. ``block_layout``
+    switches to block-sparse FlashAttention (paper Alg. 5): 0 skip, 1 full,
+    2 partial (partial blocks additionally apply the causal/window mask)."""
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    if hq % hkv != 0:
+        raise ValueError(f"q heads {hq} not a multiple of kv heads {hkv}")
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    if q_offset is None:
+        q_offset = sk - sq
+    if interpret is None:
+        interpret = default_interpret()
+    block_q = min(block_q, max(sq, 1))
+    block_k = min(block_k, max(sk, 1))
+
+    qp, qpad = _pad_to(q, 2, block_q)
+    kp, kpad = _pad_to(k, 2, block_k)
+    vp, _ = _pad_to(v, 2, block_k)
+    if kpad or kv_mask is not None:
+        base = jnp.arange(kp.shape[2]) < sk
+        kvm = jnp.broadcast_to(base[None, :], (b, kp.shape[2]))
+        if kv_mask is not None:
+            kvm = kvm & jnp.pad(kv_mask, ((0, 0), (0, kpad)))
+    else:
+        kvm = None
+
+    layout = None
+    if block_layout is not None:
+        layout = jnp.asarray(block_layout, jnp.int32)
+        nq, nk = qp.shape[2] // block_q, kp.shape[2] // block_k
+        if layout.shape != (nq, nk):
+            raise ValueError(
+                f"block_layout shape {layout.shape} != grid ({nq}, {nk}) for "
+                f"padded seq ({qp.shape[2]}, {kp.shape[2]}) and blocks "
+                f"({block_q}, {block_k})")
+
+    seed = jnp.asarray(dropout_seed, jnp.uint32)
+    o = _flash_core(qp, kp, vp, kvm, layout, seed, scale, causal, window,
+                    q_offset, dropout_p, block_q, block_k, variant,
+                    (sq, sk), interpret)
+    return o[:, :, :sq]
+
+
+# Convenience: reference entry points re-exported so benchmarks/tests import
+# everything from ops.
+standard_attention = ref_mod.standard_attention
+chunked_attention = ref_mod.chunked_attention

@@ -1,0 +1,322 @@
+"""Pure-jnp oracles for the attention kernels.
+
+* ``standard_attention`` — Algorithm 0 of the paper: materializes S and P.
+  This is the correctness oracle for every kernel, and the "standard
+  attention" baseline for benchmarks.
+* ``chunked_attention`` — the paper's Algorithm 1 expressed with
+  ``jax.lax.scan`` over kv blocks at the XLA level (online softmax, O(N)
+  memory; Rabe–Staats-style but with FlashAttention's single-accumulator
+  update, Appendix B.5). This is what the large-scale dry-run lowers on
+  the CPU backend where a Pallas TPU kernel cannot compile; on TPU the
+  dispatch in ``repro.core.attention`` picks the Pallas kernel instead.
+
+All oracles accept GQA (num_q_heads a multiple of num_kv_heads), causal /
+sliding-window masks, an additive bias, a kv padding mask, dropout with a
+counter-based deterministic mask (identical to the kernels'), and a softmax
+scale. Shapes follow (batch, heads, seq, head_dim).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.online_softmax import NEG_INF, SoftmaxState, block_state, finalize, merge_states
+
+
+def repeat_kv(x: jax.Array, n_rep: int) -> jax.Array:
+    """(b, kv_heads, s, d) -> (b, kv_heads * n_rep, s, d)."""
+    if n_rep == 1:
+        return x
+    b, h, s, d = x.shape
+    return jnp.broadcast_to(x[:, :, None], (b, h, n_rep, s, d)).reshape(b, h * n_rep, s, d)
+
+
+# ---------------------------------------------------------------------------
+# Deterministic counter-based dropout (shared with the Pallas kernels)
+# ---------------------------------------------------------------------------
+
+def _mix32(x: jax.Array) -> jax.Array:
+    """murmur3 finalizer — a high-quality 32-bit mix, implementable with the
+    same ops inside a Pallas kernel (the TPU-idiomatic replacement for saving
+    the CUDA Philox state ℛ: the mask is a pure function of (seed, coords))."""
+    x = x.astype(jnp.uint32)
+    x ^= x >> 16
+    x *= jnp.uint32(0x7FEB352D)
+    x ^= x >> 15
+    x *= jnp.uint32(0x846CA68B)
+    x ^= x >> 16
+    return x
+
+
+def dropout_keep_mask(seed: int | jax.Array, b: jax.Array, h: jax.Array,
+                      q_pos: jax.Array, k_pos: jax.Array, p_drop: float,
+                      num_heads: int, q_len: int, k_len: int) -> jax.Array:
+    """Boolean keep-mask from global coordinates. All args broadcastable."""
+    idx = ((b.astype(jnp.uint32) * jnp.uint32(num_heads) + h.astype(jnp.uint32))
+           * jnp.uint32(q_len) + q_pos.astype(jnp.uint32))
+    idx = idx * jnp.uint32(k_len) + k_pos.astype(jnp.uint32)
+    r = _mix32(idx ^ _mix32(jnp.uint32(seed)))
+    threshold = jnp.uint32(int(p_drop * float(2**32 - 1)))
+    return r >= threshold
+
+
+def full_dropout_keep_mask(seed, batch, num_heads, q_len, k_len, p_drop):
+    b = jnp.arange(batch, dtype=jnp.uint32)[:, None, None, None]
+    h = jnp.arange(num_heads, dtype=jnp.uint32)[None, :, None, None]
+    q = jnp.arange(q_len, dtype=jnp.uint32)[None, None, :, None]
+    k = jnp.arange(k_len, dtype=jnp.uint32)[None, None, None, :]
+    return dropout_keep_mask(seed, b, h, q, k, p_drop, num_heads, q_len, k_len)
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 0: standard attention oracle
+# ---------------------------------------------------------------------------
+
+def standard_attention(
+    q: jax.Array,             # (b, hq, sq, d)
+    k: jax.Array,             # (b, hkv, sk, d)
+    v: jax.Array,             # (b, hkv, sk, d)
+    *,
+    causal: bool = False,
+    window: int | None = None,          # causal sliding window size
+    bias: jax.Array | None = None,      # broadcastable to (b, hq, sq, sk)
+    kv_mask: jax.Array | None = None,   # (b, sk) True = valid key
+    mask: jax.Array | None = None,      # explicit (sq, sk) boolean attend-mask
+    scale: float | None = None,
+    dropout_p: float = 0.0,
+    dropout_seed: int = 0,
+    q_offset: int | None = None,        # query position offset (decode); default sk - sq if causal
+    return_residuals: bool = False,
+) -> jax.Array | tuple[jax.Array, jax.Array]:
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    assert hq % hkv == 0, (hq, hkv)
+    k = repeat_kv(k, hq // hkv)
+    v = repeat_kv(v, hq // hkv)
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    if q_offset is None:
+        q_offset = sk - sq
+
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    if bias is not None:
+        s = s + bias.astype(jnp.float32)
+
+    neg = jnp.float32(NEG_INF)
+    q_pos = jnp.arange(sq)[:, None] + q_offset
+    k_pos = jnp.arange(sk)[None, :]
+    if causal:
+        s = jnp.where(q_pos >= k_pos, s, neg)
+    if window is not None:
+        s = jnp.where((q_pos >= k_pos) & (q_pos - k_pos < window), s, neg)
+    if mask is not None:
+        s = jnp.where(mask, s, neg)
+    if kv_mask is not None:
+        s = jnp.where(kv_mask[:, None, None, :], s, neg)
+
+    m = jnp.max(s, axis=-1, keepdims=True)
+    m = jnp.maximum(m, neg)  # fully-masked rows
+    p = jnp.exp(s - m)
+    p = jnp.where(s <= neg / 2, 0.0, p)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    l_safe = jnp.where(l == 0.0, 1.0, l)
+    p_norm = p / l_safe
+
+    if dropout_p > 0.0:
+        keep = full_dropout_keep_mask(dropout_seed, b, hq, sq, sk, dropout_p)
+        p_norm = jnp.where(keep, p_norm / (1.0 - dropout_p), 0.0)
+
+    o = jnp.einsum("bhqk,bhkd->bhqd", p_norm, v.astype(jnp.float32)).astype(q.dtype)
+    if return_residuals:
+        lse = jnp.where(l[..., 0] == 0.0, neg, m[..., 0] + jnp.log(l_safe[..., 0]))
+        return o, lse
+    return o
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1 at the XLA level: chunked online-softmax attention
+# ---------------------------------------------------------------------------
+
+def chunked_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = False,
+    window: int | None = None,
+    kv_mask: jax.Array | None = None,
+    scale: float | None = None,
+    chunk_size: int = 1024,
+    q_offset: int | None = None,
+    unroll: bool = False,
+    pv_bf16: bool = False,
+) -> jax.Array:
+    """IO-aware attention via lax.scan over kv chunks (never materializes the
+    (sq, sk) score matrix; peak temp is (sq, chunk)). Differentiable —
+    jax.grad recomputes per-chunk scores, mirroring the paper's backward
+    recomputation at the XLA level. ``unroll=True`` removes the while loop
+    (used by the dry-run cost probes: XLA cost_analysis counts loop bodies
+    once, so probes unroll and extrapolate).
+    """
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    assert hq % hkv == 0
+    n_rep = hq // hkv
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    if q_offset is None:
+        q_offset = sk - sq
+
+    if sk % chunk_size != 0:
+        pad = chunk_size - sk % chunk_size
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        valid = jnp.arange(sk + pad) < sk
+        if kv_mask is None:
+            kv_mask = jnp.broadcast_to(valid[None, :], (b, sk + pad))
+        else:
+            kv_mask = jnp.pad(kv_mask, ((0, 0), (0, pad))) & valid[None, :]
+    sk_p = k.shape[2]
+    n_chunks = sk_p // chunk_size
+
+    kc = k.reshape(b, hkv, n_chunks, chunk_size, d).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(b, hkv, n_chunks, chunk_size, d).transpose(2, 0, 1, 3, 4)
+    if kv_mask is not None:
+        mc = kv_mask.reshape(b, n_chunks, chunk_size).transpose(1, 0, 2)
+    else:
+        mc = None
+
+    qf = q.astype(jnp.float32)
+    q_pos = jnp.arange(sq) + q_offset
+
+    # Guard-free fast path (§Perf cell C): for causal self-attention with no
+    # padding mask, every q row has at least one valid key in chunk 0 (its
+    # own position), so the fully-masked-row NaN guards are unreachable.
+    # Masking with a soft -3e4 (exp underflows to exactly 0 in fp32) lets us
+    # drop two score-sized selects per chunk.
+    fast = causal and mc is None and window is None and q_offset >= 0
+
+    def body(state: SoftmaxState, inputs):
+        if mc is None:
+            (ci, kb, vb) = inputs
+            mb = None
+        else:
+            (ci, kb, vb, mb) = inputs
+        kb = repeat_kv(kb, n_rep)
+        vb = repeat_kv(vb, n_rep)
+        s = jnp.einsum("bhqd,bhkd->bhqk", qf, kb.astype(jnp.float32)) * scale
+        k_pos = ci * chunk_size + jnp.arange(chunk_size)
+        neg = jnp.float32(-3e4 if fast else NEG_INF)
+        if causal:
+            s = jnp.where(q_pos[:, None] >= k_pos[None, :], s, neg)
+        if window is not None:
+            ok = (q_pos[:, None] >= k_pos[None, :]) & (q_pos[:, None] - k_pos[None, :] < window)
+            s = jnp.where(ok, s, neg)
+        if mb is not None:
+            s = jnp.where(mb[:, None, None, :], s, neg)
+        if fast:
+            m = jnp.maximum(state.m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m[..., None])
+            if pv_bf16:
+                pv = jax.lax.dot_general(
+                    p.astype(jnp.bfloat16), vb.astype(jnp.bfloat16),
+                    (((3,), (2,)), ((0, 1), (0, 1))),
+                    preferred_element_type=jnp.float32)
+            else:
+                pv = p @ vb.astype(jnp.float32)
+            # chunk 0: m_prev = -1e30 (finite) and m is finite, so the
+            # subtraction stays in range and exp underflows to exactly 0 —
+            # no guard needed on this path either.
+            corr = jnp.exp(state.m - m)
+            new = SoftmaxState(
+                m=m,
+                l=state.l * corr + jnp.sum(p, axis=-1),
+                acc=state.acc * corr[..., None] + pv)
+        else:
+            new = merge_states(state, block_state(
+                s, vb, p_dtype=jnp.bfloat16 if pv_bf16 else None))
+        return new, None
+
+    state0 = SoftmaxState(
+        m=jnp.full((b, hq, sq), NEG_INF, jnp.float32),
+        l=jnp.zeros((b, hq, sq), jnp.float32),
+        acc=jnp.zeros((b, hq, sq, d), jnp.float32),
+    )
+    idx = jnp.arange(n_chunks)
+    xs = (idx, kc, vc) if mc is None else (idx, kc, vc, mc)
+    state, _ = jax.lax.scan(body, state0, xs,
+                            unroll=n_chunks if unroll else 1)
+    out, _ = finalize(state, dtype=q.dtype)
+    return out
+
+
+def window_banded_attention(
+    q: jax.Array,          # (b, hq, s, d)
+    k: jax.Array,          # (b, hkv, s, d)
+    v: jax.Array,
+    *,
+    window: int,
+    scale: float | None = None,
+    pv_bf16: bool = False,
+) -> jax.Array:
+    """Causal sliding-window attention computed on a banded layout.
+
+    The chunked path scores every q against every kv chunk and masks; for a
+    window w that wastes s/(2w) of the score bytes and drags the online-
+    softmax merge chain along. Here q is blocked into chunks of W = window;
+    each chunk attends to exactly [prev chunk | own chunk] (2W keys), which
+    COVERS the causal window, so a single local softmax is exact — no
+    running (m, l) state at all. Score bytes: s * 2W instead of s * s.
+    (§Perf cell A lever; exactness tested against standard_attention.)
+    """
+    b, hq, s, d = q.shape
+    _, hkv, _, _ = k.shape
+    n_rep = hq // hkv
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    W = window
+    pad = (-s) % W
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    sp = q.shape[2]
+    nc = sp // W
+    k = repeat_kv(k, n_rep)
+    v = repeat_kv(v, n_rep)
+
+    qc = q.reshape(b, hq, nc, W, d)
+    # banded keys: [chunk i-1 | chunk i], left-padded with zeros for i = 0
+    kp = jnp.pad(k, ((0, 0), (0, 0), (W, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (W, 0), (0, 0)))
+    gather_idx = (jnp.arange(nc)[:, None] * W
+                  + jnp.arange(2 * W)[None, :])          # (nc, 2W)
+    kb = kp[:, :, gather_idx]                            # (b, hq, nc, 2W, d)
+    vb = vp[:, :, gather_idx]
+
+    sc = jnp.einsum("bhcqd,bhckd->bhcqk", qc.astype(jnp.float32),
+                    kb.astype(jnp.float32)) * scale      # (b,hq,nc,W,2W)
+    r = jnp.arange(W)[:, None]
+    c = jnp.arange(2 * W)[None, :]
+    band_ok = (c <= r + W) & (c > r)                     # 0 < qpos-kpos <= W-?.
+    # positions: q_pos = iW + r ; k_pos = iW - W + c ; attend iff
+    # 0 <= q_pos - k_pos < W  <=>  r < c <= r + W  (and k_pos >= 0)
+    k_pos_valid = (jnp.arange(nc)[:, None, None] * W - W + c[None]) >= 0
+    ok = band_ok[None] & k_pos_valid                     # (nc, W, 2W)
+    sc = jnp.where(ok[None, None], sc, NEG_INF)
+
+    m = jnp.max(sc, axis=-1, keepdims=True)
+    p = jnp.exp(sc - m)
+    p = jnp.where(sc <= NEG_INF / 2, 0.0, p)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    p = p / jnp.where(l == 0.0, 1.0, l)
+    if pv_bf16:
+        o = jax.lax.dot_general(
+            p.astype(jnp.bfloat16), vb.astype(jnp.bfloat16),
+            (((4,), (3,)), ((0, 1, 2), (0, 1, 2))),
+            preferred_element_type=jnp.float32)
+    else:
+        o = jnp.einsum("bhcqk,bhckd->bhcqd", p, vb.astype(jnp.float32))
+    o = o.reshape(b, hq, sp, d).astype(q.dtype)
+    return o[:, :, :s]

@@ -1,0 +1,24 @@
+"""Production mesh (assignment-specified).
+
+Defined as a FUNCTION so importing this module never touches jax device
+state — device count is locked on first jax init, and only dryrun.py sets
+the 512-device host-platform flag.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_test_mesh(data: int = 2, model: int = 4):
+    """Small mesh for subprocess tests (8 fake devices)."""
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)

@@ -1,0 +1,189 @@
+"""Multi-head / grouped-query attention layer built on the flash core.
+
+Supports three execution modes:
+  * full-sequence (training / prefill)  — ``core.attention`` dispatch
+  * prefill-with-cache                  — full-seq attention + cache write
+  * single-token decode                 — ``core.decode_attention`` against
+                                          a fixed-capacity KV cache
+plus cross-attention (enc-dec) where K/V come from the encoder stream.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.core.attention import AttentionSpec, attention, decode_attention
+from repro.models.layers import apply_rope, dense_init, rms_normalize
+
+
+def attn_spec_from_config(cfg: ModelConfig) -> AttentionSpec:
+    return AttentionSpec(
+        impl=cfg.attn_impl, causal=cfg.causal, window=cfg.window,
+        dropout_p=cfg.attn_dropout, unroll_chunks=cfg.unroll_chunks,
+        chunk_size=cfg.attn_chunk_size, pv_bf16=cfg.attn_pv_bf16,
+        banded_window=cfg.banded_window)
+
+
+def init_attention(key, cfg: ModelConfig, dtype):
+    hq, hkv, hd, d = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim, cfg.d_model
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, hq * hd, dtype),
+        "wk": dense_init(ks[1], d, hkv * hd, dtype),
+        "wv": dense_init(ks[2], d, hkv * hd, dtype),
+        "wo": dense_init(ks[3], hq * hd, d, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def attention_specs(cfg: ModelConfig):
+    s = {
+        "wq": P("embed", "heads"),
+        "wk": P("embed", "heads"),
+        "wv": P("embed", "heads"),
+        "wo": P("heads", "embed"),
+    }
+    if cfg.qk_norm:
+        s["q_norm"] = P(None)
+        s["k_norm"] = P(None)
+    return s
+
+
+def _split_heads(x, n_heads, head_dim):
+    b, s, _ = x.shape
+    return x.reshape(b, s, n_heads, head_dim).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x):
+    b, h, s, d = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, s, h * d)
+
+
+def _project_qkv(params, cfg: ModelConfig, x, kv_x, positions, kv_positions):
+    hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = _split_heads(x @ params["wq"], hq, hd)
+    k = _split_heads(kv_x @ params["wk"], hkv, hd)
+    v = _split_heads(kv_x @ params["wv"], hkv, hd)
+    if cfg.qk_norm:
+        q = rms_normalize(q) * params["q_norm"]
+        k = rms_normalize(k) * params["k_norm"]
+    if positions is not None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+    if kv_positions is not None:
+        k = apply_rope(k, kv_positions, cfg.rope_theta)
+    return q, k, v
+
+
+def apply_attention(
+    params, cfg: ModelConfig, x,
+    *,
+    spec: AttentionSpec | None = None,
+    kv_x: jax.Array | None = None,        # cross-attention source
+    positions: jax.Array | None = None,
+    kv_mask: jax.Array | None = None,
+    block_layout=None,
+    deterministic: bool = True,
+    dropout_seed: int = 0,
+):
+    """Full-sequence attention. x: (b, s, d_model) -> (b, s, d_model)."""
+    cross = kv_x is not None
+    kv_src = kv_x if cross else x
+    sq = x.shape[1]
+    if positions is None:
+        positions = jnp.arange(sq)
+    # cross-attention carries no RoPE (decoder q / encoder k live in
+    # different position spaces); self-attention ropes both.
+    q_positions = None if cross else positions
+    kv_positions = None if cross else positions
+    q, k, v = _project_qkv(params, cfg, x, kv_src, q_positions, kv_positions)
+    spec = spec or attn_spec_from_config(cfg)
+    if cross:
+        spec = AttentionSpec(**{**spec.__dict__, "causal": False, "window": None})
+    o = attention(q, k, v, spec, kv_mask=kv_mask, block_layout=block_layout,
+                  deterministic=deterministic, dropout_seed=dropout_seed)
+    return _merge_heads(o) @ params["wo"]
+
+
+# ---------------------------------------------------------------------------
+# KV cache paths (serving)
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(cfg: ModelConfig, batch: int, capacity: int, dtype):
+    hkv, hd = cfg.num_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, hkv, capacity, hd), dtype),
+        "v": jnp.zeros((batch, hkv, capacity, hd), dtype),
+    }
+
+
+def kv_cache_specs():
+    # capacity ("kv_seq") shards on the model axis: always divisible (32k/512k
+    # cells), and decode attention over a sequence-sharded cache is the XLA
+    # analogue of the split-KV decode kernel (DESIGN.md §6). KV-head counts
+    # (5/8/...) often do NOT divide TP=16, so heads stay local.
+    return {"k": P("data", None, "kv_seq", None),
+            "v": P("data", None, "kv_seq", None)}
+
+
+def prefill_attention(params, cfg: ModelConfig, x, cache, *, kv_mask=None,
+                      spec: AttentionSpec | None = None):
+    """Full-seq attention that also writes K/V into the cache at [0, s)."""
+    sq = x.shape[1]
+    positions = jnp.arange(sq)
+    q, k, v = _project_qkv(params, cfg, x, x, positions, positions)
+    spec = spec or attn_spec_from_config(cfg)
+    o = attention(q, k, v, spec, kv_mask=kv_mask, deterministic=True)
+    cache = {
+        "k": jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0)),
+        "v": jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0)),
+    }
+    return _merge_heads(o) @ params["wo"], cache
+
+
+def decode_attention_step(params, cfg: ModelConfig, x, cache, kv_len,
+                          *, spec: AttentionSpec | None = None):
+    """Single-token decode. x: (b, 1, d_model); kv_len: (b,) current lengths.
+
+    Writes the new K/V at position kv_len (per sequence), then attends over
+    [0, kv_len]. Returns (out, new_cache).
+    """
+    b = x.shape[0]
+    positions = kv_len[:, None]                  # (b, 1) position of new token
+    q, k, v = _project_qkv(params, cfg, x, x, positions, positions)
+
+    # scatter the new token's K/V at per-sequence write positions.
+    if cfg.masked_cache_write:
+        # iota-mask select: elementwise on the capacity dim, so a sequence-
+        # sharded cache updates LOCALLY (no gather/reshard — §Perf decode
+        # lever). Costs a full cache rewrite, which donation makes an
+        # in-place HBM pass.
+        capacity = cache["k"].shape[2]
+        hit = (jnp.arange(capacity)[None, None, :, None]
+               == kv_len[:, None, None, None])
+
+        def _upd(c, new):
+            return jnp.where(hit, new.astype(c.dtype), c)
+
+        cache = {"k": _upd(cache["k"], k), "v": _upd(cache["v"], v)}
+    else:
+        # dynamic_update_slice (vmapped over batch) writes O(1 token); with
+        # a sequence-sharded cache, the traced per-sequence index forces
+        # GSPMD to reshard (measured in §Roofline as the decode collective
+        # term) — flip cfg.masked_cache_write to trade it for a local pass.
+        def _upd(c, new, pos):  # c: (hkv, cap, hd); new: (hkv, 1, hd)
+            return jax.lax.dynamic_update_slice(c, new, (0, pos, 0))
+
+        cache = {
+            "k": jax.vmap(_upd)(cache["k"], k.astype(cache["k"].dtype), kv_len),
+            "v": jax.vmap(_upd)(cache["v"], v.astype(cache["v"].dtype), kv_len),
+        }
+
+    spec = spec or attn_spec_from_config(cfg)
+    o = decode_attention(q, cache["k"], cache["v"], kv_len + 1, spec)
+    return _merge_heads(o) @ params["wo"], cache

@@ -1,0 +1,125 @@
+"""Primitive layers: norms, RoPE, MLPs, initializers, logical sharding specs.
+
+Params are plain nested dicts of jnp arrays. Every ``init_*`` has a matching
+``*_specs`` returning a pytree of *logical* PartitionSpecs (tuples of logical
+axis names or None) with the same structure; ``repro.distributed.sharding``
+resolves logical names to mesh axes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def truncated_normal_init(key, shape, scale, dtype):
+    stddev = scale / max(1.0, (shape[-2] if len(shape) >= 2 else shape[-1])) ** 0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * stddev).astype(dtype)
+
+
+def dense_init(key, d_in, d_out, dtype, scale: float = 1.0):
+    return truncated_normal_init(key, (d_in, d_out), scale, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_norm(key, d, norm_type: str, dtype):
+    if norm_type == "rmsnorm":
+        return {"w": jnp.ones((d,), dtype)}
+    if norm_type == "layernorm":
+        return {"w": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)}
+    if norm_type == "layernorm_np":   # non-parametric (OLMo)
+        return {}
+    raise ValueError(norm_type)
+
+
+def norm_specs(norm_type: str):
+    if norm_type == "rmsnorm":
+        return {"w": P(None)}
+    if norm_type == "layernorm":
+        return {"w": P(None), "b": P(None)}
+    return {}
+
+
+def apply_norm(params, x, norm_type: str, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    if norm_type == "rmsnorm":
+        y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+        return (y * params["w"].astype(jnp.float32)).astype(x.dtype)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mean), axis=-1, keepdims=True)
+    y = (xf - mean) * jax.lax.rsqrt(var + eps)
+    if norm_type == "layernorm":
+        y = y * params["w"].astype(jnp.float32) + params["b"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def rms_normalize(x, eps: float = 1e-6):
+    """Parameter-free RMS normalization (qk-norm base, Hymba path norm)."""
+    xf = x.astype(jnp.float32)
+    return (xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (b, h, s, d); positions: (s,) or (b, s)."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)                       # (d/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., s, d/2)
+    if angles.ndim == 2:                                     # (s, d/2) -> bcast
+        angles = angles[None, None]
+    else:                                                    # (b, s, d/2)
+        angles = angles[:, None]
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (dense FFN)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d_model, d_ff, mlp_type, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    if mlp_type in ("swiglu", "geglu"):
+        return {
+            "w_gate": dense_init(k1, d_model, d_ff, dtype),
+            "w_up": dense_init(k2, d_model, d_ff, dtype),
+            "w_down": dense_init(k3, d_ff, d_model, dtype),
+        }
+    return {
+        "w_up": dense_init(k1, d_model, d_ff, dtype),
+        "w_down": dense_init(k2, d_ff, d_model, dtype),
+    }
+
+
+def mlp_specs(mlp_type):
+    if mlp_type in ("swiglu", "geglu"):
+        return {
+            "w_gate": P("embed", "ff"),
+            "w_up": P("embed", "ff"),
+            "w_down": P("ff", "embed"),
+        }
+    return {"w_up": P("embed", "ff"), "w_down": P("ff", "embed")}
+
+
+def apply_mlp(params, x, mlp_type):
+    if mlp_type == "swiglu":
+        h = jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])
+    elif mlp_type == "geglu":
+        h = jax.nn.gelu(x @ params["w_gate"]) * (x @ params["w_up"])
+    else:
+        h = jax.nn.gelu(x @ params["w_up"])
+    return h @ params["w_down"]

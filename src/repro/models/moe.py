@@ -1,0 +1,145 @@
+"""Mixture-of-Experts FFN with grouped top-k token-choice routing.
+
+Routing is done *per group* (one group = one sequence row), so the sort /
+scatter that builds expert buffers is batch-parallel and generates no
+cross-device collectives on the data axis; experts are sharded on the model
+axis (EP), so the expert matmuls reduce-scatter over it. Capacity-factor
+token dropping (GShard-style) keeps shapes static.
+
+Two execution modes:
+  * ``capacity`` (default): sort-based dispatch into (B, E, C, d) buffers,
+    batched expert matmuls, scatter-combine. Production path.
+  * ``dense``: computes every expert for every token and masks (E/k× FLOPs).
+    Tiny-config oracle used by tests to validate the capacity path.
+
+Load-balancing auxiliary loss (Switch-style) is returned alongside.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init
+
+
+def init_moe(key, cfg: ModelConfig, dtype):
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ks = jax.random.split(key, 4)
+
+    def expert_init(k, d_in, d_out):
+        keys = jax.random.split(k, e)
+        return jnp.stack([dense_init(kk, d_in, d_out, dtype) for kk in keys])
+
+    return {
+        "router": dense_init(ks[0], d, e, jnp.float32),
+        "w_gate": expert_init(ks[1], d, ff),
+        "w_up": expert_init(ks[2], d, ff),
+        "w_down": expert_init(ks[3], ff, d),
+    }
+
+
+def moe_specs(cfg: ModelConfig):
+    return {
+        "router": P("embed", None),
+        "w_gate": P("expert", "embed", None),
+        "w_up": P("expert", "embed", None),
+        "w_down": P("expert", None, "embed"),
+    }
+
+
+def _route(router_logits, k):
+    """top-k routing. Returns (expert_idx (..., k), weights (..., k), probs)."""
+    probs = jax.nn.softmax(router_logits.astype(jnp.float32), axis=-1)
+    weights, idx = jax.lax.top_k(probs, k)
+    weights = weights / jnp.sum(weights, axis=-1, keepdims=True)  # renormalize
+    return idx, weights, probs
+
+
+def load_balance_loss(probs, idx, num_experts):
+    """Switch-Transformer aux loss: E * sum_e f_e * p_e."""
+    # f_e: fraction of tokens whose top-1 choice is e; p_e: mean router prob
+    top1 = idx[..., 0]
+    f = jnp.mean(jax.nn.one_hot(top1, num_experts, dtype=jnp.float32),
+                 axis=tuple(range(top1.ndim)))
+    p = jnp.mean(probs, axis=tuple(range(probs.ndim - 1)))
+    return num_experts * jnp.sum(f * p)
+
+
+def apply_moe(params, cfg: ModelConfig, x, *, mode: str = "capacity"):
+    """x: (b, s, d) -> (y, aux_loss)."""
+    e, k = cfg.num_experts, cfg.num_experts_per_token
+    logits = x @ params["router"].astype(x.dtype)                    # (b, s, e)
+    idx, weights, probs = _route(logits, k)
+    aux = load_balance_loss(probs, idx, e)
+
+    if mode == "dense":
+        # oracle: all experts for all tokens
+        h_g = jnp.einsum("bsd,edf->besf", x, params["w_gate"])
+        h_u = jnp.einsum("bsd,edf->besf", x, params["w_up"])
+        h = jax.nn.silu(h_g) * h_u
+        y_e = jnp.einsum("besf,efd->besd", h, params["w_down"])      # (b,e,s,d)
+        mask = jax.nn.one_hot(idx, e, dtype=jnp.float32)             # (b,s,k,e)
+        comb = jnp.einsum("bske,bsk->bse", mask, weights)            # (b,s,e)
+        return jnp.einsum("besd,bse->bsd", y_e, comb.astype(y_e.dtype)), aux
+
+    b, s, d = x.shape
+    cap = int(cfg.moe_capacity_factor * s * k / e + 0.999)
+    cap = max(cap, 1)
+
+    def route_group(xg, idxg, wg):
+        """One sequence row: xg (s, d), idxg (s, k), wg (s, k)."""
+        flat_e = idxg.reshape(-1)                                    # (s*k,)
+        order = jnp.argsort(flat_e)                                  # stable
+        sorted_e = flat_e[order]
+        # position of each entry within its expert
+        pos_in_e = jnp.arange(s * k) - jnp.searchsorted(sorted_e, sorted_e, side="left")
+        slot = sorted_e * cap + pos_in_e                             # dest slot
+        ok = pos_in_e < cap                                          # capacity drop
+        token_of = order // k                                        # source token
+        # build (e*cap, d) buffer
+        buf = jnp.zeros((e * cap, d), x.dtype)
+        buf = buf.at[jnp.where(ok, slot, e * cap)].set(
+            xg[token_of], mode="drop")
+        buf = buf.reshape(e, cap, d)
+        return buf, order, slot, ok, token_of
+
+    idx_flat = idx
+    w_flat = weights
+    buf, order, slot, ok, token_of = jax.vmap(route_group)(x, idx_flat, w_flat)
+
+    def _hint(t, spec):
+        # MoE dispatch sharding hints (§Perf cell B): without them XLA's
+        # SPMD propagation shards the dispatch gathers on d_model and
+        # REPLICATES the batch, moving full-batch f32 tensors through
+        # all-reduce. Pinning buf to (data, expert->model) keeps routing
+        # batch-local and makes the EP exchange a single all-to-all.
+        if not cfg.moe_sharding_hints:
+            return t
+        from jax.sharding import PartitionSpec as P
+        try:
+            return jax.lax.with_sharding_constraint(t, P(*spec))
+        except (ValueError, RuntimeError):  # no ambient mesh (tests on CPU)
+            return t
+
+    buf = _hint(buf, ("data", "model", None, None))
+    # buf: (b, e, cap, d) — expert matmuls, batched over (b, e)
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", buf, params["w_gate"]))
+    h = h * jnp.einsum("becd,edf->becf", buf, params["w_up"])
+    out_buf = jnp.einsum("becf,efd->becd", h, params["w_down"])      # (b,e,cap,d)
+    out_buf = _hint(out_buf, ("data", "model", None, None))
+
+    def combine_group(outg, orderg, slotg, okg, token_ofg, wg):
+        flat_out = outg.reshape(e * cap, d)
+        contrib = flat_out[jnp.where(okg, slotg, 0)]                 # (s*k, d)
+        contrib = jnp.where(okg[:, None], contrib, 0.0)
+        w_sorted = wg.reshape(-1)[orderg]                            # (s*k,)
+        y = jnp.zeros((s, d), x.dtype)
+        y = y.at[token_ofg].add(contrib * w_sorted[:, None].astype(x.dtype))
+        return y
+
+    y = jax.vmap(combine_group)(out_buf, order, slot, ok, token_of, w_flat)
+    y = _hint(y, ("data", None, None))
+    return y, aux

@@ -1,0 +1,264 @@
+"""Mamba2 (SSD — state-space duality) layer [arXiv:2405.21060].
+
+FlashAttention is inapplicable to this attention-free family (DESIGN.md §4);
+the SSD *chunked* algorithm implemented here is itself an IO-aware tiled
+computation in the paper's spirit: chunk-local matmul form (the "dual"
+quadratic form inside a chunk, never materializing the full (s, s) decay
+matrix) + an inter-chunk state recurrence carried by lax.scan.
+
+Layer structure (faithful to Mamba2):
+  in_proj -> [z | x | B | C | dt] -> causal depthwise conv (x,B,C) -> SiLU
+  -> SSD(x, dt, A, B, C) + D*x -> gated RMSNorm(y * silu(z)) -> out_proj
+
+Decode carries (ssm_state (b, h, p, n), conv_state (b, w-1, conv_ch)) and is
+parity-tested against the full forward.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, rms_normalize
+
+
+def _dims(cfg: ModelConfig):
+    d_inner = cfg.ssm_d_inner
+    nheads = cfg.ssm_num_heads
+    p = cfg.ssm_head_dim
+    n = cfg.ssm_state
+    conv_ch = d_inner + 2 * n          # x, B, C go through the conv
+    return d_inner, nheads, p, n, conv_ch
+
+
+def init_ssm(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    d_inner, nheads, p, n, conv_ch = _dims(cfg)
+    ks = jax.random.split(key, 5)
+    proj_out = 2 * d_inner + 2 * n + nheads      # z, x, B, C, dt
+    return {
+        "in_proj": dense_init(ks[0], d, proj_out, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv_width, conv_ch), jnp.float32)
+                   * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nheads, dtype=jnp.float32)),
+        "D": jnp.ones((nheads,), jnp.float32),
+        "dt_bias": jnp.log(jnp.exp(jnp.linspace(1e-3, 0.1, nheads)) - 1.0).astype(jnp.float32),
+        "norm_w": jnp.ones((d_inner,), dtype),
+        "out_proj": dense_init(ks[4], d_inner, d, dtype),
+    }
+
+
+def ssm_specs(cfg: ModelConfig):
+    # "ssm_ff" is a dedicated logical axis: SSM projection widths
+    # (2*d_inner + 2n + nheads) are not always divisible by TP, and
+    # auto_rules demotes only this axis when they aren't.
+    return {
+        "in_proj": P("embed", "ssm_ff"),
+        "conv_w": P(None, "ssm_ff"),
+        "conv_b": P("ssm_ff"),
+        "A_log": P(None),
+        "D": P(None),
+        "dt_bias": P(None),
+        "norm_w": P("ssm_ff"),
+        "out_proj": P("ssm_ff", "embed"),
+    }
+
+
+def _split_proj(cfg, proj):
+    d_inner, nheads, p, n, _ = _dims(cfg)
+    z, xin, b_in, c_in, dt = jnp.split(
+        proj, [d_inner, 2 * d_inner, 2 * d_inner + n, 2 * d_inner + 2 * n], axis=-1)
+    return z, xin, b_in, c_in, dt
+
+
+def _causal_conv(conv_in, w, b, width, fast: bool = False):
+    """(b, s, ch) depthwise causal conv.
+
+    fast=False (baseline): width shifted full-tensor multiply-adds — simple
+    but materializes ~2*width copies of the (b, s, ch) stream (measured as
+    the #2 HBM consumer of hymba train; §Perf cell A).
+    fast=True: one lax.conv_general_dilated with feature_group_count=ch —
+    a single fused pass over the stream.
+    """
+    if fast:
+        kernel = w.astype(conv_in.dtype)[:, None, :]       # (W, 1, ch)
+        out = jax.lax.conv_general_dilated(
+            conv_in, kernel,
+            window_strides=(1,), padding=[(width - 1, 0)],
+            dimension_numbers=("NWC", "WIO", "NWC"),
+            feature_group_count=conv_in.shape[-1])
+        return jax.nn.silu(out + b)
+    out = jnp.zeros_like(conv_in)
+    for i in range(width):
+        shift = width - 1 - i
+        shifted = jnp.pad(conv_in, ((0, 0), (shift, 0), (0, 0)))[:, :conv_in.shape[1]]
+        out = out + shifted * w[i]
+    return jax.nn.silu(out + b)
+
+
+def ssd_chunked(x, dt, a_log_decay, b_in, c_in, chunk: int,
+                return_final_state: bool = False,
+                decay_dtype=jnp.float32):
+    """SSD chunked scan.
+
+    x:   (b, s, h, p)   per-head inputs
+    dt:  (b, s, h)      positive step sizes
+    a_log_decay: (b, s, h)  log a_t = dt * A  (A < 0)
+    b_in/c_in: (b, s, n)    shared across heads (ngroups = 1)
+    Returns y: (b, s, h, p).
+    """
+    bsz, s, h, p = x.shape
+    n = b_in.shape[-1]
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        a_log_decay = jnp.pad(a_log_decay, ((0, 0), (0, pad), (0, 0)))
+        b_in = jnp.pad(b_in, ((0, 0), (0, pad), (0, 0)))
+        c_in = jnp.pad(c_in, ((0, 0), (0, pad), (0, 0)))
+    sp = x.shape[1]
+    nc = sp // chunk
+
+    # reshape to chunks: (b, nc, chunk, ...)
+    xc = x.reshape(bsz, nc, chunk, h, p).astype(jnp.float32)
+    dtc = dt.reshape(bsz, nc, chunk, h).astype(jnp.float32)
+    ac = a_log_decay.reshape(bsz, nc, chunk, h).astype(jnp.float32)
+    bc = b_in.reshape(bsz, nc, chunk, n).astype(jnp.float32)
+    cc = c_in.reshape(bsz, nc, chunk, n).astype(jnp.float32)
+
+    cum = jnp.cumsum(ac, axis=2)                         # (b, nc, Q, h) inclusive
+    total = cum[:, :, -1]                                # (b, nc, h) chunk decay (log)
+
+    # ---- intra-chunk (dual quadratic form, masked by the decay matrix) ----
+    # M[i, j] = exp(cum_i - cum_j) for j <= i  (includes a_i ... a_{j+1}).
+    # The exponent is clamped BEFORE exp: for j > i it is positive and would
+    # overflow to inf, and `where(mask, inf, 0)` yields NaN gradients
+    # (inf * 0 in the cotangent) — the clamp keeps both branches finite.
+    li = cum[:, :, :, None, :]                           # (b,nc,Q,1,h)
+    lj = cum[:, :, None, :, :]                           # (b,nc,1,Q,h)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    decay = jnp.where(mask[None, None, :, :, None],
+                      jnp.exp(jnp.minimum(li - lj, 0.0)), 0.0)
+    cb = jnp.einsum("bzin,bzjn->bzij", cc, bc)           # (b,nc,Q,Q)
+    xdt = xc * dtc[..., None]                            # dt_j x_j
+    # decay_dtype=bf16 halves the O(s*Q*h) HBM footprint of the intra-chunk
+    # decay tensor (the dominant SSD memory term; §Perf cell A). Decays are
+    # in [0, 1], so bf16's 8-bit mantissa costs ~0.4% relative error; the
+    # contraction still accumulates in fp32.
+    y_intra = jnp.einsum("bzij,bzijh,bzjhp->bzihp",
+                         cb.astype(decay_dtype), decay.astype(decay_dtype),
+                         xdt.astype(decay_dtype),
+                         preferred_element_type=jnp.float32)
+
+    # ---- chunk-end states ----
+    # S_c = sum_j exp(total - cum_j) * (dt_j x_j) ⊗ B_j   -> (b,nc,h,p,n)
+    w_end = jnp.exp(total[:, :, None, :] - cum)          # (b,nc,Q,h)
+    states = jnp.einsum("bzjh,bzjhp,bzjn->bzhpn", w_end, xdt, bc)
+
+    # ---- inter-chunk recurrence over nc (scan) ----
+    def body(h_prev, inp):
+        decay_c, s_c = inp                               # (b,h), (b,h,p,n)
+        h_new = h_prev * jnp.exp(decay_c)[:, :, None, None] + s_c
+        return h_new, h_prev                             # emit state BEFORE chunk
+
+    h0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+    h_final, h_before = jax.lax.scan(
+        body, h0, (total.transpose(1, 0, 2), states.transpose(1, 0, 2, 3, 4)))
+    h_before = h_before.transpose(1, 0, 2, 3, 4)         # (b,nc,h,p,n)
+
+    # y_inter[i] = exp(cum_i) * C_i · H_{chunk_start}
+    y_inter = jnp.einsum("bzih,bzin,bzhpn->bzihp", jnp.exp(cum), cc, h_before)
+
+    y = (y_intra + y_inter).reshape(bsz, sp, h, p)
+    y = y[:, :s] if pad else y
+    if return_final_state:
+        # padded steps have dt == 0 and log-decay 0, so they leave the state
+        # untouched — h_final is exact for the unpadded sequence.
+        return y, h_final
+    return y
+
+
+def apply_ssm(params, cfg: ModelConfig, x, *, return_final_state: bool = False):
+    """Full-sequence SSD. x: (b, s, d_model) -> (b, s, d_model)
+    [, final state dict for serving prefill]."""
+    d_inner, nheads, p, n, conv_ch = _dims(cfg)
+    bsz, s, _ = x.shape
+    proj = x @ params["in_proj"]
+    z, xin, b_in, c_in, dt = _split_proj(cfg, proj)
+
+    conv_in = jnp.concatenate([xin, b_in, c_in], axis=-1)
+    conv_out = _causal_conv(conv_in, params["conv_w"], params["conv_b"],
+                            cfg.ssm_conv_width, fast=cfg.fast_conv)
+    xin_c, b_in, c_in = jnp.split(conv_out, [d_inner, d_inner + n], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (b,s,h)
+    a = -jnp.exp(params["A_log"])                                     # (h,)
+    a_log_decay = dt * a                                              # (b,s,h)
+
+    xh = xin_c.reshape(bsz, s, nheads, p)
+    res = ssd_chunked(xh, dt, a_log_decay, b_in, c_in, cfg.ssm_chunk,
+                      return_final_state=return_final_state,
+                      decay_dtype=jnp.dtype(cfg.ssm_decay_dtype))
+    y, h_final = res if return_final_state else (res, None)
+    y = y + params["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(bsz, s, d_inner).astype(x.dtype)
+
+    y = rms_normalize(y * jax.nn.silu(z)) * params["norm_w"]
+    out = y @ params["out_proj"]
+    if return_final_state:
+        w = cfg.ssm_conv_width
+        state = {"h": h_final, "conv": conv_in[:, s - (w - 1):, :]}
+        return out, state
+    return out
+
+
+# ---------------------------------------------------------------------------
+# decode path
+# ---------------------------------------------------------------------------
+
+def init_ssm_state(cfg: ModelConfig, batch: int, dtype):
+    d_inner, nheads, p, n, conv_ch = _dims(cfg)
+    return {
+        "h": jnp.zeros((batch, nheads, p, n), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_ch), dtype),
+    }
+
+
+def ssm_state_specs():
+    return {"h": P("data", "ssm_heads", None, None),
+            "conv": P("data", None, "ssm_ff")}
+
+
+def decode_ssm_step(params, cfg: ModelConfig, x, state):
+    """x: (b, 1, d_model). Returns (y (b, 1, d_model), new_state)."""
+    d_inner, nheads, p, n, conv_ch = _dims(cfg)
+    bsz = x.shape[0]
+    proj = x[:, 0] @ params["in_proj"]                   # (b, proj_out)
+    z, xin, b_in, c_in, dt = _split_proj(cfg, proj)
+
+    conv_in = jnp.concatenate([xin, b_in, c_in], axis=-1)  # (b, conv_ch)
+    window = jnp.concatenate([state["conv"], conv_in[:, None]], axis=1)  # (b, w, ch)
+    conv_out = jax.nn.silu(
+        jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                   params["conv_w"].astype(jnp.float32)) + params["conv_b"].astype(jnp.float32))
+    conv_out = conv_out.astype(x.dtype)
+    xin, b_in, c_in = jnp.split(conv_out, [d_inner, d_inner + n], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (b,h)
+    a = -jnp.exp(params["A_log"])
+    decay = jnp.exp(dt * a)                                           # (b,h)
+
+    xh = xin.reshape(bsz, nheads, p).astype(jnp.float32)
+    dbx = jnp.einsum("bh,bhp,bn->bhpn", dt, xh, b_in.astype(jnp.float32))
+    h_new = state["h"] * decay[:, :, None, None] + dbx
+    y = jnp.einsum("bn,bhpn->bhp", c_in.astype(jnp.float32), h_new)
+    y = y + params["D"][None, :, None] * xh
+    y = y.reshape(bsz, d_inner).astype(x.dtype)
+
+    y = rms_normalize(y * jax.nn.silu(z)) * params["norm_w"]
+    y = (y @ params["out_proj"])[:, None]
+    new_state = {"h": h_new, "conv": window[:, 1:]}
+    return y, new_state

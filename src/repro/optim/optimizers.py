@@ -1,0 +1,132 @@
+"""Optimizers: AdamW (GPT-2 recipe, paper App. E.2) and LAMB (the MLPerf
+BERT recipe the paper compares against in Table 1, App. E.1).
+
+Functional API (no optax dependency — built from scratch per assignment):
+  opt = adamw(lr_fn, ...)
+  state = opt.init(params)
+  updates, state = opt.update(grads, state, params)
+  params = apply_updates(params, updates)
+
+Optimizer state is a pytree mirroring params (mu/nu) + a scalar step — this
+is what ZeRO-1 shards over the data axis (repro.distributed.zero).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), tree), norm
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(
+        lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype), params, updates)
+
+
+def _is_matrix(p) -> bool:
+    return p.ndim >= 2
+
+
+def adamw(lr: Callable[[jax.Array], jax.Array] | float,
+          b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: jnp.float32(lr))
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"step": jnp.zeros((), jnp.int32),
+                "mu": jax.tree.map(zeros, params),
+                "nu": jax.tree.map(zeros, params)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = lr_fn(step)
+        b1c = 1.0 - b1 ** step.astype(jnp.float32)
+        b2c = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            mhat = m / b1c
+            vhat = v / b2c
+            u = -lr_t * (mhat / (jnp.sqrt(vhat) + eps)
+                         + (weight_decay * p.astype(jnp.float32)
+                            if _is_matrix(p) else 0.0))
+            return u, m, v
+
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_m = tdef.flatten_up_to(state["mu"])
+        flat_v = tdef.flatten_up_to(state["nu"])
+        flat_p = tdef.flatten_up_to(params)
+        outs = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        updates = tdef.unflatten([o[0] for o in outs])
+        new_state = {"step": step,
+                     "mu": tdef.unflatten([o[1] for o in outs]),
+                     "nu": tdef.unflatten([o[2] for o in outs])}
+        return updates, new_state
+
+    return Optimizer(init, update)
+
+
+def lamb(lr: Callable[[jax.Array], jax.Array] | float,
+         b1: float = 0.9, b2: float = 0.999, eps: float = 1e-6,
+         weight_decay: float = 0.01) -> Optimizer:
+    """LAMB [You et al.] — layerwise trust-ratio AdamW (MLPerf BERT)."""
+    lr_fn = lr if callable(lr) else (lambda _: jnp.float32(lr))
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"step": jnp.zeros((), jnp.int32),
+                "mu": jax.tree.map(zeros, params),
+                "nu": jax.tree.map(zeros, params)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = lr_fn(step)
+        b1c = 1.0 - b1 ** step.astype(jnp.float32)
+        b2c = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            pf = p.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            r = (m / b1c) / (jnp.sqrt(v / b2c) + eps)
+            if _is_matrix(p):
+                r = r + weight_decay * pf
+            w_norm = jnp.linalg.norm(pf)
+            r_norm = jnp.linalg.norm(r)
+            trust = jnp.where((w_norm > 0) & (r_norm > 0), w_norm / r_norm, 1.0)
+            return -lr_t * trust * r, m, v
+
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_m = tdef.flatten_up_to(state["mu"])
+        flat_v = tdef.flatten_up_to(state["nu"])
+        flat_p = tdef.flatten_up_to(params)
+        outs = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        updates = tdef.unflatten([o[0] for o in outs])
+        new_state = {"step": step,
+                     "mu": tdef.unflatten([o[1] for o in outs]),
+                     "nu": tdef.unflatten([o[2] for o in outs])}
+        return updates, new_state
+
+    return Optimizer(init, update)

@@ -1,0 +1,35 @@
+"""LR schedules: linear warmup + cosine decay (GPT-2 recipe) and the
+MLPerf-BERT polynomial decay used with LAMB."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int,
+                  end_lr_frac: float = 0.1):
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(warmup_steps, 1)
+        prog = jnp.clip((step - warmup_steps) / max(total_steps - warmup_steps, 1),
+                        0.0, 1.0)
+        cos = peak_lr * (end_lr_frac + (1 - end_lr_frac) * 0.5 *
+                         (1.0 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return fn
+
+
+def warmup_poly(peak_lr: float, warmup_steps: int, total_steps: int,
+                power: float = 1.0):
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(warmup_steps, 1)
+        prog = jnp.clip((step - warmup_steps) / max(total_steps - warmup_steps, 1),
+                        0.0, 1.0)
+        poly = peak_lr * (1.0 - prog) ** power
+        return jnp.where(step < warmup_steps, warm, poly)
+    return fn
+
+
+def constant(lr: float):
+    return lambda step: jnp.float32(lr)

@@ -1,0 +1,125 @@
+"""Serving engine: continuous (iteration-level) batching over a slotted,
+batched KV cache — the Orca/vLLM scheduling pattern on top of the paper's
+linear-memory attention.
+
+Why this is the paper's payoff at serving time: the decode step's attention
+reads O(kv_len) cache bytes per token (no N x N materialization), so a slot's
+memory footprint is exactly its cache capacity — FlashAttention's linear
+memory is what makes large decode batches fit at all (paper §4.3, Fig. 3
+right).
+
+Mechanics:
+  * B fixed slots, each with capacity C in the stacked per-layer cache;
+  * new requests are prefilled with a batch-1 model call and INSERTED into
+    their slot (dynamic_update_slice on the batch axis of every cache leaf);
+  * every engine step decodes ALL slots in one jitted call (inactive slots
+    compute garbage that is never emitted — the static-shape trade);
+  * finished slots are immediately refilled from the queue (continuous).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model_zoo import Model
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new_tokens: int
+    output: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(self, model: Model, params, *, num_slots: int,
+                 capacity: int, eos_id: int | None = None,
+                 greedy: bool = True):
+        self.model = model
+        self.params = params
+        self.B = num_slots
+        self.capacity = capacity
+        self.eos_id = eos_id
+        assert greedy, "only greedy decoding implemented"
+        self.state = model.init_decode_state(num_slots, capacity)
+        self.slot_req: list[Request | None] = [None] * num_slots
+        self.queue: list[Request] = []
+        self.finished: list[Request] = []
+        self.next_token = np.zeros((num_slots,), np.int32)
+        self._rid = itertools.count()
+        self._decode = jax.jit(model.decode_step, donate_argnums=(1,))
+
+        def _insert(state, slot_state, slot, kv_len_new, slot_sizes=None):
+            def ins(big, small):
+                # big: (L, B, ...); small: (L, 1, ...) -> write at batch idx
+                idx = (0, slot) + (0,) * (big.ndim - 2)
+                return jax.lax.dynamic_update_slice(big, small.astype(big.dtype), idx)
+
+            caches = jax.tree.map(ins, state["caches"], slot_state["caches"])
+            kv_len = state["kv_len"].at[slot].set(kv_len_new)
+            return {"caches": caches, "kv_len": kv_len}
+
+        self._insert = jax.jit(_insert, donate_argnums=(0,),
+                               static_argnums=(2,))
+
+    # ----------------------------------------------------------------- admit
+    def submit(self, prompt: list[int], max_new_tokens: int) -> int:
+        rid = next(self._rid)
+        self.queue.append(Request(rid, list(prompt), max_new_tokens))
+        return rid
+
+    def _admit(self) -> None:
+        for slot in range(self.B):
+            if self.slot_req[slot] is not None or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            toks = jnp.asarray([req.prompt], jnp.int32)
+            slot_state, logits = self.model.prefill(
+                self.params, {"tokens": toks}, self.capacity)
+            self.state = self._insert(self.state, slot_state, slot,
+                                      len(req.prompt))
+            first = int(jnp.argmax(logits[0, -1]))
+            req.output.append(first)
+            # the prefill-produced token can already terminate the request
+            if ((self.eos_id is not None and first == self.eos_id)
+                    or req.max_new_tokens <= 1):
+                req.done = True
+                self.finished.append(req)
+                continue
+            self.next_token[slot] = first
+            self.slot_req[slot] = req
+
+    # ------------------------------------------------------------------ step
+    def step(self) -> None:
+        self._admit()
+        if not any(r is not None for r in self.slot_req):
+            return
+        tok = jnp.asarray(self.next_token)
+        self.state, logits = self._decode(self.params, self.state, tok)
+        nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1), np.int32)
+        for slot, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            t = int(nxt[slot])
+            req.output.append(t)
+            self.next_token[slot] = t
+            hit_eos = self.eos_id is not None and t == self.eos_id
+            if len(req.output) >= req.max_new_tokens or hit_eos:
+                req.done = True
+                self.finished.append(req)
+                self.slot_req[slot] = None
+
+    def run(self, max_steps: int = 10_000) -> list[Request]:
+        for _ in range(max_steps):
+            if not self.queue and all(r is None for r in self.slot_req):
+                break
+            self.step()
+        return self.finished

@@ -1,0 +1,3 @@
+from repro.train.loop import Trainer, TrainerConfig  # noqa: F401
+from repro.train.steps import (make_sharded_serve_steps,  # noqa: F401
+                               make_sharded_train_step, make_train_step)

@@ -1,0 +1,118 @@
+"""Fault-tolerant trainer loop.
+
+Production behaviours implemented and tested (tests/test_train_loop.py):
+  * checkpoint every N steps (atomic, last-k, async-capable);
+  * automatic resume from the newest VALID checkpoint (corrupted checkpoints
+    are skipped — node-failure recovery);
+  * deterministic data: the pipeline is random-access by step, so a resumed
+    run consumes exactly the batches it would have (bitwise-identical loss
+    curves across restarts — asserted in tests);
+  * preemption hook: call trainer.request_checkpoint() from a signal handler
+    and the loop saves at the next step boundary;
+  * straggler bookkeeping: per-step wall-time EWMA + slow-step counter; at
+    scale the launcher feeds this to the scheduler (here: logged + tested).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Iterator
+
+import jax
+import numpy as np
+
+from repro.checkpoint.checkpointer import Checkpointer
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int
+    ckpt_every: int = 100
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    ckpt_keep: int = 3
+    async_ckpt: bool = False
+    log_every: int = 10
+    straggler_ewma: float = 0.9
+    straggler_factor: float = 3.0    # step counts as "slow" above EWMA * factor
+
+
+class Trainer:
+    def __init__(self, cfg: TrainerConfig, step_fn: Callable,
+                 params, opt_state,
+                 batch_fn: Callable[[int], Any],
+                 param_shardings=None, opt_shardings=None):
+        self.cfg = cfg
+        self.step_fn = step_fn
+        self.params = params
+        self.opt_state = opt_state
+        self.batch_fn = batch_fn
+        self.param_shardings = param_shardings
+        self.opt_shardings = opt_shardings
+        self.ckpt = Checkpointer(cfg.ckpt_dir, keep=cfg.ckpt_keep,
+                                 async_save=cfg.async_ckpt)
+        self.step = 0
+        self.history: list[dict] = []
+        self._ckpt_requested = False
+        self._ewma: float | None = None
+        self.slow_steps = 0
+
+    # ----------------------------------------------------------- checkpoints
+    def save(self) -> None:
+        self.ckpt.save(self.step, {"params": self.params,
+                                   "opt_state": self.opt_state})
+
+    def try_resume(self) -> bool:
+        """Restore the newest valid checkpoint (elastic: re-shards onto the
+        current shardings). Returns True if resumed."""
+        if not self.ckpt.all_steps():
+            return False
+        target = {"params": self.params, "opt_state": self.opt_state}
+        shardings = None
+        if self.param_shardings is not None:
+            shardings = {"params": self.param_shardings,
+                         "opt_state": self.opt_shardings}
+        try:
+            tree, step = self.ckpt.restore(target, shardings=shardings)
+        except FileNotFoundError:
+            return False
+        self.params = tree["params"]
+        self.opt_state = tree["opt_state"]
+        self.step = step
+        return True
+
+    def request_checkpoint(self) -> None:
+        """Preemption-signal hook (SIGTERM handler calls this)."""
+        self._ckpt_requested = True
+
+    # ------------------------------------------------------------------ run
+    def run(self, max_steps: int | None = None) -> list[dict]:
+        end = min(self.cfg.total_steps,
+                  self.step + (max_steps or self.cfg.total_steps))
+        while self.step < end:
+            batch = self.batch_fn(self.step)
+            t0 = time.perf_counter()
+            self.params, self.opt_state, metrics = self.step_fn(
+                self.params, self.opt_state, batch)
+            jax.block_until_ready(metrics["loss"])
+            dt = time.perf_counter() - t0
+            self._track_straggler(dt)
+            self.step += 1
+            rec = {k: float(np.asarray(v)) for k, v in metrics.items()}
+            rec["step"] = self.step
+            rec["step_time_s"] = dt
+            self.history.append(rec)
+            if self._ckpt_requested or self.step % self.cfg.ckpt_every == 0:
+                self.save()
+                self._ckpt_requested = False
+        self.ckpt.wait()
+        return self.history
+
+    def _track_straggler(self, dt: float) -> None:
+        if self._ewma is None:
+            self._ewma = dt
+            return
+        if dt > self.cfg.straggler_factor * self._ewma:
+            self.slow_steps += 1
+        a = self.cfg.straggler_ewma
+        self._ewma = a * self._ewma + (1 - a) * dt

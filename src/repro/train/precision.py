@@ -1,0 +1,33 @@
+"""Precision control utilities.
+
+``ct_cast(x, dtype)`` — identity in the forward pass; casts the COTANGENT
+to ``dtype`` in the backward pass. Placed at block boundaries it forces the
+backward residual-stream tensors (and therefore the TP all-reduces and HBM
+traffic of the backward) to bf16 instead of the f32 they inherit from the
+fp32 loss/norm regions. This is the MaxText/Megatron "bf16 gradient
+all-reduce" optimization expressed as a boundary op (recorded as a
+beyond-paper §Perf lever in EXPERIMENTS.md)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def ct_cast(x, dtype=jnp.bfloat16):
+    return x
+
+
+def _fwd(x, dtype):
+    return x, None
+
+
+def _bwd(dtype, _, ct):
+    return (ct.astype(dtype).astype(ct.dtype)
+            if jnp.issubdtype(ct.dtype, jnp.floating) else ct,)
+
+
+ct_cast.defvjp(_fwd, _bwd)

@@ -1,0 +1,13 @@
+import os
+
+# Smoke tests and benches must see ONE device (the 512-device flag belongs
+# to launch/dryrun.py only — assignment requirement). Subprocess-based
+# distributed tests set their own XLA_FLAGS.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+from hypothesis import HealthCheck, settings
+
+settings.register_profile(
+    "ci", max_examples=20, deadline=None,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large])
+settings.load_profile("ci")

@@ -1,0 +1,116 @@
+"""Block-sparse FlashAttention (Alg. 5) + split-KV decode kernel tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import masks as M
+from repro.kernels.flash_decode import flash_decode
+from repro.kernels.ops import flash_attention
+from repro.kernels.ref import standard_attention
+
+TOL = dict(rtol=2e-3, atol=2e-5)
+
+
+def _qkv(seed, b, hq, hkv, sq, sk, d):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    return (jax.random.normal(ks[0], (b, hq, sq, d)),
+            jax.random.normal(ks[1], (b, hkv, sk, d)),
+            jax.random.normal(ks[2], (b, hkv, sk, d)))
+
+
+# ---------------------------------------------------------------------------
+# block-sparse
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("builder,causal", [
+    (M.butterfly_block_layout, False),
+    (lambda *a: M.butterfly_block_layout(*a, causal=True), True),
+    (M.causal_block_layout, True),
+])
+def test_blocksparse_fwd(builder, causal):
+    s, bq, bk = 512, 128, 128
+    q, k, v = _qkv(0, 2, 2, 2, s, s, 32)
+    layout = builder(s, s, bq, bk)
+    o = flash_attention(q, k, v, causal=causal, block_q=bq, block_k=bk,
+                        block_layout=layout)
+    base = M.causal_mask(s, s) if causal else None
+    emask = M.layout_to_element_mask(layout, bq, bk, s, s, base_mask=base)
+    o_ref = standard_attention(q, k, v, mask=emask)
+    np.testing.assert_allclose(o, o_ref, **TOL)
+
+
+def test_blocksparse_grads():
+    s, bq, bk = 256, 64, 64
+    q, k, v = _qkv(1, 1, 2, 2, s, s, 32)
+    layout = M.butterfly_block_layout(s, s, bq, bk, causal=True)
+    emask = M.layout_to_element_mask(layout, bq, bk, s, s,
+                                     base_mask=M.causal_mask(s, s))
+    gf = jax.grad(lambda q, k, v: (flash_attention(
+        q, k, v, causal=True, block_q=bq, block_k=bk,
+        block_layout=layout) ** 2).sum(), argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(lambda q, k, v: (standard_attention(
+        q, k, v, mask=emask) ** 2).sum(), argnums=(0, 1, 2))(q, k, v)
+    for name, a, b in zip("qkv", gf, gr):
+        scale = float(jnp.max(jnp.abs(b))) or 1.0
+        np.testing.assert_allclose(a / scale, b / scale, rtol=1e-4,
+                                   atol=1e-5, err_msg=f"d{name}")
+
+
+def test_sliding_window_layout_density():
+    """Prop. 4 structure: window layout density ~ window/(seq) for seq >> w."""
+    s, w, b = 4096, 256, 128
+    layout = M.sliding_window_block_layout(s, s, b, b, w)
+    dens = M.layout_density(layout)
+    assert dens < 0.15, dens
+    full = M.causal_block_layout(s, s, b, b)
+    assert dens < M.layout_density(full)
+
+
+def test_blocksparse_skips_zero_blocks_output():
+    """Rows whose layout row is all-skip produce zeros, not NaNs."""
+    s, bq = 256, 64
+    q, k, v = _qkv(2, 1, 1, 1, s, s, 16)
+    layout = np.zeros((4, 4), np.uint8)
+    layout[0, 0] = 1  # only the first block attends
+    o = flash_attention(q, k, v, block_q=bq, block_k=bq, block_layout=layout)
+    assert not bool(jnp.any(jnp.isnan(o)))
+    np.testing.assert_allclose(o[:, :, bq:], 0.0, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# split-KV decode
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("splits,block_k", [(1, 128), (4, 64), (8, 128)])
+def test_decode_matches_standard(splits, block_k):
+    b, hq, hkv, cap, d = 3, 4, 2, 512, 64
+    q, k, v = _qkv(3, b, hq, hkv, 1, cap, d)
+    kv_len = jnp.array([100, 512, 257], jnp.int32)
+    o = flash_decode(q, k, v, kv_len, num_splits=splits, block_k=block_k)
+    kvm = jnp.arange(cap)[None, :] < kv_len[:, None]
+    o_ref = standard_attention(q, k, v, kv_mask=kvm)
+    np.testing.assert_allclose(o, o_ref, **TOL)
+
+
+def test_decode_empty_splits_no_nan():
+    """kv_len much shorter than capacity: trailing splits fully masked."""
+    b, h, cap, d = 2, 2, 1024, 32
+    q, k, v = _qkv(4, b, h, h, 1, cap, d)
+    kv_len = jnp.array([3, 65], jnp.int32)
+    o = flash_decode(q, k, v, kv_len, num_splits=8, block_k=128)
+    assert not bool(jnp.any(jnp.isnan(o)))
+    kvm = jnp.arange(cap)[None, :] < kv_len[:, None]
+    np.testing.assert_allclose(o, standard_attention(q, k, v, kv_mask=kvm),
+                               **TOL)
+
+
+def test_decode_gqa():
+    b, hq, hkv, cap, d = 2, 8, 2, 256, 32
+    q, k, v = _qkv(5, b, hq, hkv, 1, cap, d)
+    kv_len = jnp.array([256, 128], jnp.int32)
+    o = flash_decode(q, k, v, kv_len, num_splits=4, block_k=64)
+    kvm = jnp.arange(cap)[None, :] < kv_len[:, None]
+    np.testing.assert_allclose(o, standard_attention(q, k, v, kv_mask=kvm),
+                               **TOL)

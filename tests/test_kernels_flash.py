@@ -1,0 +1,166 @@
+"""Pallas FlashAttention kernels vs the Algorithm-0 oracle: shape/dtype
+sweeps, causal/window/GQA/padding/dropout, both accumulator variants,
+gradients, and hypothesis-driven cases."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels.ops import flash_attention
+from repro.kernels.ref import chunked_attention, standard_attention
+
+
+def _qkv(seed, b, hq, hkv, sq, sk, d, dtype=jnp.float32):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (b, hq, sq, d), dtype)
+    k = jax.random.normal(ks[1], (b, hkv, sk, d), dtype)
+    v = jax.random.normal(ks[2], (b, hkv, sk, d), dtype)
+    return q, k, v
+
+
+TOL = dict(rtol=2e-3, atol=2e-5)
+
+
+@pytest.mark.parametrize("sq,sk,block", [
+    (128, 128, 128), (256, 256, 128), (128, 384, 128),
+    (96, 160, 64),                       # padding path
+    (512, 512, 256),
+])
+@pytest.mark.parametrize("causal", [False, True])
+def test_fwd_shapes(sq, sk, block, causal):
+    q, k, v = _qkv(0, 2, 4, 4, sq, sk, 64)
+    o = flash_attention(q, k, v, causal=causal, block_q=block, block_k=block)
+    o_ref = standard_attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(o, o_ref, **TOL)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fwd_dtypes(dtype):
+    q, k, v = _qkv(1, 1, 2, 2, 256, 256, 64, dtype)
+    o = flash_attention(q, k, v, causal=True)
+    o_ref = standard_attention(q, k, v, causal=True)
+    tol = dict(rtol=3e-2, atol=3e-2) if dtype == jnp.bfloat16 else TOL
+    np.testing.assert_allclose(o.astype(jnp.float32),
+                               o_ref.astype(jnp.float32), **tol)
+
+
+@pytest.mark.parametrize("hq,hkv", [(4, 4), (4, 2), (8, 1), (6, 2)])
+def test_gqa_head_grouping(hq, hkv):
+    q, k, v = _qkv(2, 2, hq, hkv, 192, 192, 32)
+    o = flash_attention(q, k, v, causal=True, block_q=64, block_k=64)
+    o_ref = standard_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(o, o_ref, **TOL)
+
+
+@pytest.mark.parametrize("variant", ["paper", "fa2"])
+def test_variants_agree(variant):
+    """Alg.-1-faithful rescaling and the deferred-normalization variant are
+    algebraically identical (the beyond-paper change is FLOPs, not math)."""
+    q, k, v = _qkv(3, 1, 2, 2, 256, 256, 64)
+    o = flash_attention(q, k, v, causal=True, variant=variant)
+    o_ref = standard_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(o, o_ref, **TOL)
+
+
+def test_sliding_window():
+    q, k, v = _qkv(4, 2, 2, 2, 256, 256, 32)
+    o = flash_attention(q, k, v, window=64, block_q=64, block_k=64)
+    o_ref = standard_attention(q, k, v, window=64)
+    np.testing.assert_allclose(o, o_ref, **TOL)
+
+
+def test_kv_padding_mask():
+    q, k, v = _qkv(5, 2, 2, 2, 128, 128, 32)
+    kvm = jax.random.bernoulli(jax.random.PRNGKey(9), 0.7, (2, 128))
+    o = flash_attention(q, k, v, kv_mask=kvm, block_q=64, block_k=64)
+    o_ref = standard_attention(q, k, v, kv_mask=kvm)
+    np.testing.assert_allclose(o, o_ref, **TOL)
+
+
+def test_q_offset_decode_suffix():
+    """q is a suffix of the kv stream (chunked prefill shape)."""
+    q, k, v = _qkv(6, 1, 2, 2, 64, 256, 32)
+    o = flash_attention(q, k, v, causal=True, block_q=64, block_k=64)
+    o_ref = standard_attention(q, k, v, causal=True)  # q_offset = sk - sq
+    np.testing.assert_allclose(o, o_ref, **TOL)
+
+
+def test_dropout_matches_ref_and_is_seed_sensitive():
+    q, k, v = _qkv(7, 2, 2, 2, 128, 128, 32)
+    o1 = flash_attention(q, k, v, causal=True, dropout_p=0.2, dropout_seed=11)
+    o_ref = standard_attention(q, k, v, causal=True, dropout_p=0.2,
+                               dropout_seed=11)
+    np.testing.assert_allclose(o1, o_ref, **TOL)
+    o2 = flash_attention(q, k, v, causal=True, dropout_p=0.2, dropout_seed=12)
+    assert float(jnp.max(jnp.abs(o1 - o2))) > 1e-3
+
+
+def test_dropout_mean_preserving():
+    """E[dropout(P)] = P: averaged over many seeds the output approaches the
+    dropout-free output (1/(1-p) scaling correctness)."""
+    q, k, v = _qkv(8, 1, 1, 1, 64, 64, 16)
+    base = flash_attention(q, k, v)
+    acc = jnp.zeros_like(base)
+    n = 64
+    for s in range(n):
+        acc = acc + flash_attention(q, k, v, dropout_p=0.3, dropout_seed=s)
+    mean = acc / n
+    err = float(jnp.mean(jnp.abs(mean - base)) / jnp.mean(jnp.abs(base)))
+    assert err < 0.15, err
+
+
+@pytest.mark.parametrize("causal", [False, True])
+def test_grads_match_oracle(causal):
+    q, k, v = _qkv(9, 2, 4, 2, 128, 192, 32)
+
+    def loss_flash(q, k, v):
+        return (flash_attention(q, k, v, causal=causal,
+                                block_q=64, block_k=64) ** 2).sum()
+
+    def loss_ref(q, k, v):
+        return (standard_attention(q, k, v, causal=causal) ** 2).sum()
+
+    gf = jax.grad(loss_flash, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for name, a, b in zip("qkv", gf, gr):
+        scale = float(jnp.max(jnp.abs(b))) or 1.0
+        np.testing.assert_allclose(a / scale, b / scale, rtol=1e-4,
+                                   atol=1e-5, err_msg=f"d{name}")
+
+
+def test_grads_with_dropout_and_window():
+    q, k, v = _qkv(10, 1, 2, 2, 128, 128, 32)
+    kw = dict(window=48, dropout_p=0.1, dropout_seed=3)
+
+    g1 = jax.grad(lambda q: (flash_attention(q, k, v, **kw) ** 2).sum())(q)
+    g2 = jax.grad(lambda q: (standard_attention(q, k, v, **kw) ** 2).sum())(q)
+    scale = float(jnp.max(jnp.abs(g2)))
+    np.testing.assert_allclose(g1 / scale, g2 / scale, rtol=1e-4, atol=1e-5)
+
+
+def test_chunked_reference_matches():
+    """The XLA-level Algorithm-1 (used by the dry-run) == Algorithm 0."""
+    q, k, v = _qkv(11, 2, 4, 2, 256, 320, 64)
+    o = chunked_attention(q, k, v, causal=True, chunk_size=128)
+    o_ref = standard_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(o, o_ref, **TOL)
+    g1 = jax.grad(lambda q: chunked_attention(q, k, v, causal=True,
+                                              chunk_size=128).sum())(q)
+    g2 = jax.grad(lambda q: standard_attention(q, k, v, causal=True).sum())(q)
+    np.testing.assert_allclose(g1, g2, rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=10)
+@given(st.integers(0, 10_000), st.integers(1, 2), st.sampled_from([1, 2, 4]),
+       st.sampled_from([17, 64, 100, 128]), st.sampled_from([33, 64, 128]),
+       st.sampled_from([16, 32]), st.booleans())
+def test_hypothesis_flash_equals_standard(seed, b, h, sq, sk, d, causal):
+    q, k, v = _qkv(seed, b, h, h, sq, sk, d)
+    o = flash_attention(q, k, v, causal=causal, block_q=64, block_k=64)
+    o_ref = standard_attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(o, o_ref, rtol=5e-3, atol=5e-5)

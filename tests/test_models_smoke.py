@@ -1,0 +1,137 @@
+"""Per-architecture smoke tests (assignment requirement): reduced config of
+the same family, one forward + one train step on CPU, output shapes + no
+NaNs. Plus decode-parity integration per family."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED, get_config, reduced_config
+from repro.models import build_model
+from repro.optim import adamw
+from repro.train import make_train_step
+
+
+def make_batch(cfg, B=2, S=32, seed=0):
+    key = jax.random.PRNGKey(seed)
+    tok = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    if cfg.num_encoder_layers > 0:
+        return {"frames": jax.random.normal(key, (B, S // 2, cfg.frontend_dim)),
+                "tokens": tok[:, :S // 2],
+                "loss_mask": jnp.ones((B, S // 2), jnp.float32)}
+    if cfg.frontend == "vision":
+        nf = cfg.frontend_tokens
+        return {"patches": jax.random.normal(key, (B, nf, cfg.frontend_dim)),
+                "tokens": tok[:, :S - nf],
+                "loss_mask": jnp.ones((B, S - nf), jnp.float32)}
+    return {"tokens": tok, "loss_mask": jnp.ones((B, S), jnp.float32)}
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_full_config_matches_assignment(arch):
+    """The full configs carry the exact assigned dimensions."""
+    cfg = get_config(arch)
+    expected = {
+        "olmo-1b": (16, 2048, 16, 16, 8192, 50304),
+        "internlm2-20b": (48, 6144, 48, 8, 16384, 92544),
+        "granite-3-2b": (40, 2048, 32, 8, 8192, 49155),
+        "qwen3-32b": (64, 5120, 64, 8, 25600, 151936),
+        "phi-3-vision-4.2b": (32, 3072, 32, 32, 8192, 32064),
+        "seamless-m4t-medium": (12, 1024, 16, 16, 4096, 256206),
+        "hymba-1.5b": (32, 1600, 25, 5, 5504, 32001),
+        "olmoe-1b-7b": (16, 2048, 16, 16, 1024, 50304),
+        "phi3.5-moe-42b-a6.6b": (32, 4096, 32, 8, 6400, 32064),
+        "mamba2-2.7b": (64, 2560, 0, 0, 0, 50280),
+    }[arch]
+    got = (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+           cfg.d_ff, cfg.vocab_size)
+    assert got == expected, (got, expected)
+    if arch == "olmoe-1b-7b":
+        assert (cfg.num_experts, cfg.num_experts_per_token) == (64, 8)
+    if arch == "phi3.5-moe-42b-a6.6b":
+        assert (cfg.num_experts, cfg.num_experts_per_token) == (16, 2)
+    if arch == "mamba2-2.7b":
+        assert cfg.ssm_state == 128
+    if arch == "hymba-1.5b":
+        assert cfg.ssm_state == 16 and cfg.hybrid
+    if arch == "qwen3-32b":
+        assert cfg.qk_norm
+    if arch == "olmo-1b":
+        assert cfg.norm_type == "layernorm_np"
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_forward_and_train_step(arch):
+    cfg = reduced_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg)
+
+    logits, aux = model.forward(params, batch)
+    exp_seq = (batch["tokens"].shape[1] + cfg.frontend_tokens
+               if cfg.frontend == "vision" else batch["tokens"].shape[1])
+    assert logits.shape == (2, exp_seq, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+    opt = adamw(1e-3)
+    opt_state = opt.init(params)
+    step = jax.jit(make_train_step(model, opt, deterministic=True))
+    p2, o2, metrics = step(params, opt_state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    assert float(metrics["grad_norm"]) > 0
+    # params actually moved
+    moved = jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                           - b.astype(jnp.float32)))),
+        params, p2)
+    assert max(jax.tree.leaves(moved)) > 0
+
+
+@pytest.mark.parametrize("arch", ["granite-3-2b", "olmoe-1b-7b",
+                                  "mamba2-2.7b", "hymba-1.5b",
+                                  "seamless-m4t-medium",
+                                  "phi-3-vision-4.2b"])
+def test_decode_parity(arch):
+    """prefill + step-wise decode logits == full-forward logits."""
+    cfg = reduced_config(arch, moe_capacity_factor=8.0)  # no-drop for parity
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S = 2, 24
+    tok = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
+    batch = make_batch(cfg, B=B, S=S)
+    if "tokens" in batch and cfg.frontend is None and cfg.num_encoder_layers == 0:
+        batch = {"tokens": tok}
+    off = cfg.frontend_tokens if cfg.frontend == "vision" else 0
+    toks = batch["tokens"]
+    n = toks.shape[1]
+    logits_full, _ = model.forward(params, batch)
+    pre = dict(batch)
+    pre["tokens"] = toks[:, :n - 3]
+    pre.pop("loss_mask", None)
+    cap = n + 4 + off
+    state, lg = model.prefill(params, pre, cap)
+    errs = [float(jnp.max(jnp.abs(lg[:, -1] - logits_full[:, n - 4 + off])))]
+    for t in range(n - 3, n):
+        state, lg = model.decode_step(params, state, toks[:, t])
+        errs.append(float(jnp.max(jnp.abs(lg[:, 0] - logits_full[:, t + off]))))
+    rel = max(errs) / float(jnp.max(jnp.abs(logits_full)))
+    assert rel < 2e-4, (arch, errs)
+
+
+def test_long_500k_applicability_rules():
+    from repro.configs import SHAPES, cell_is_applicable
+    long = SHAPES["long_500k"]
+    ok_archs = {a for a in ASSIGNED
+                if cell_is_applicable(get_config(a), long)[0]}
+    assert ok_archs == {"mamba2-2.7b", "hymba-1.5b"}
+    for a in ASSIGNED:
+        assert cell_is_applicable(get_config(a), SHAPES["train_4k"])[0]
+
+
+def test_paper_models_exist():
+    for name in ["gpt2-small", "gpt2-medium", "bert-large"]:
+        cfg = get_config(name)
+        assert cfg.vocab_size > 0
+    assert not get_config("bert-large").causal

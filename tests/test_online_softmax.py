@@ -1,0 +1,98 @@
+"""Property tests for the online-softmax algebra (paper §3.1) — the
+mathematical invariants every kernel relies on."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.online_softmax import (NEG_INF, block_state, finalize,
+                                       init_state, merge_states)
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _rand(seed, *shape, scale=3.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=shape) * scale, jnp.float32)
+
+
+def _softmax_ref(scores, values):
+    p = jax.nn.softmax(scores, axis=-1)
+    return p @ values
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 8), st.integers(1, 6),
+       st.integers(1, 5))
+def test_single_block_matches_softmax(seed, q, k, d):
+    s = _rand(seed, q, k)
+    v = _rand(seed + 1, k, d)
+    out, lse = finalize(block_state(s, v))
+    np.testing.assert_allclose(out, _softmax_ref(s, v), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(
+        lse, jax.scipy.special.logsumexp(s, axis=-1), rtol=1e-5, atol=1e-5)
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 6),
+       st.lists(st.integers(1, 6), min_size=2, max_size=5))
+def test_merge_equals_concat(seed, q, ks):
+    """Merging per-block states == softmax over the concatenation (the
+    paper's decomposition identity)."""
+    d = 4
+    blocks = [( _rand(seed + i, q, k), _rand(seed + 100 + i, k, d))
+              for i, k in enumerate(ks)]
+    state = init_state((q,), d)
+    for s, v in blocks:
+        state = merge_states(state, block_state(s, v))
+    out, _ = finalize(state)
+    s_all = jnp.concatenate([s for s, _ in blocks], axis=-1)
+    v_all = jnp.concatenate([v for _, v in blocks], axis=0)
+    np.testing.assert_allclose(out, _softmax_ref(s_all, v_all),
+                               rtol=1e-5, atol=1e-5)
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 4), st.integers(1, 5),
+       st.integers(1, 5), st.integers(1, 5))
+def test_merge_associative_commutative(seed, q, k1, k2, k3):
+    d = 3
+    a = block_state(_rand(seed, q, k1), _rand(seed + 1, k1, d))
+    b = block_state(_rand(seed + 2, q, k2), _rand(seed + 3, k2, d))
+    c = block_state(_rand(seed + 4, q, k3), _rand(seed + 5, k3, d))
+    left = merge_states(merge_states(a, b), c)
+    right = merge_states(a, merge_states(b, c))
+    swapped = merge_states(b, a)
+    for x, y in [(left, right), (merge_states(a, b), swapped)]:
+        ox, _ = finalize(x)
+        oy, _ = finalize(y)
+        np.testing.assert_allclose(ox, oy, rtol=1e-5, atol=1e-6)
+
+
+def test_identity_element():
+    """init_state is the identity of the merge monoid."""
+    s = _rand(0, 3, 5)
+    v = _rand(1, 5, 4)
+    st_ = block_state(s, v)
+    merged = merge_states(init_state((3,), 4), st_)
+    o1, l1 = finalize(merged)
+    o2, l2 = finalize(st_)
+    np.testing.assert_allclose(o1, o2, rtol=1e-6)
+    np.testing.assert_allclose(l1, l2, rtol=1e-6)
+
+
+def test_fully_masked_rows_are_zero():
+    s = jnp.full((2, 4), NEG_INF)
+    v = _rand(0, 4, 3)
+    out, lse = finalize(block_state(s, v))
+    assert not np.any(np.isnan(out))
+    np.testing.assert_allclose(out, 0.0)
+    assert np.all(lse <= NEG_INF / 2)
+
+
+@given(st.integers(0, 2**31 - 1))
+def test_numerical_stability_large_scores(seed):
+    """Scores at +-1e4 must not overflow (the m-shift at work)."""
+    s = _rand(seed, 2, 8, scale=1e4)
+    v = _rand(seed + 1, 8, 4)
+    out, _ = finalize(block_state(s, v))
+    assert np.all(np.isfinite(out))

@@ -1,0 +1,75 @@
+"""Serving engine tests: continuous batching exactness, slot reuse, EOS,
+capacity behaviour."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import reduced_config
+from repro.models import build_model
+from repro.serve import ServingEngine
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced_config("granite-3-2b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def greedy_ref(model, params, prompt, n):
+    toks = list(prompt)
+    for _ in range(n):
+        logits, _ = model.forward(params,
+                                  {"tokens": jnp.asarray([toks], jnp.int32)})
+        toks.append(int(jnp.argmax(logits[0, -1])))
+    return toks[len(prompt):]
+
+
+def test_continuous_batching_exact(setup):
+    cfg, model, params = setup
+    eng = ServingEngine(model, params, num_slots=3, capacity=64)
+    prompts = [[5, 9, 2], [7, 7, 1, 4], [3], [11, 2], [8, 6, 5, 1, 9]]
+    for p in prompts:
+        eng.submit(p, max_new_tokens=6)
+    done = eng.run()
+    assert len(done) == 5
+    for req in done:
+        assert req.output == greedy_ref(model, params, prompts[req.rid], 6)
+
+
+def test_slot_reuse_after_finish(setup):
+    cfg, model, params = setup
+    eng = ServingEngine(model, params, num_slots=1, capacity=64)
+    eng.submit([1, 2, 3], max_new_tokens=3)
+    eng.submit([4, 5], max_new_tokens=3)
+    done = eng.run()
+    assert len(done) == 2
+    assert done[0].rid == 0 and done[1].rid == 1
+    assert done[1].output == greedy_ref(model, params, [4, 5], 3)
+
+
+def test_eos_stops_generation(setup):
+    cfg, model, params = setup
+    # first generated token becomes EOS
+    first = greedy_ref(model, params, [5, 9, 2], 1)[0]
+    eng = ServingEngine(model, params, num_slots=2, capacity=64, eos_id=first)
+    eng.submit([5, 9, 2], max_new_tokens=10)
+    done = eng.run()
+    assert len(done) == 1 and len(done[0].output) == 1
+
+
+def test_mixed_lengths_interleave(setup):
+    cfg, model, params = setup
+    eng = ServingEngine(model, params, num_slots=2, capacity=64)
+    eng.submit([1], max_new_tokens=8)
+    eng.submit([2, 3, 4, 5, 6], max_new_tokens=2)
+    eng.submit([7, 8], max_new_tokens=4)
+    done = eng.run()
+    assert sorted(len(r.output) for r in done) == [2, 4, 8]
+    for r in done:
+        prompt = {0: [1], 1: [2, 3, 4, 5, 6], 2: [7, 8]}[r.rid]
+        assert r.output == greedy_ref(model, params, prompt,
+                                      len(r.output))
