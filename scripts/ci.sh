@@ -1,0 +1,8 @@
+#!/usr/bin/env bash
+# Tier-1 CI entry point (see ROADMAP.md): runs the full test suite on the
+# CPU backend with the repo's src/ layout on PYTHONPATH.
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"

@@ -59,16 +59,21 @@ def attention(
     spec: AttentionSpec,
     *,
     kv_mask: jax.Array | None = None,
+    segment_ids: jax.Array | None = None,   # (b, s) packed-document ids
     block_layout=None,
     dropout_seed: int = 0,
     deterministic: bool = True,
     q_offset: int | None = None,
     scale: float | None = None,
 ) -> jax.Array:
-    """(b, hq, sq, d) x (b, hkv, sk, d)^2 -> (b, hq, sq, d)."""
+    """(b, hq, sq, d) x (b, hkv, sk, d)^2 -> (b, hq, sq, d).
+
+    ``segment_ids`` makes packed (varlen) sequences first-class for every
+    impl: tokens attend only within their own segment (DESIGN.md §8).
+    """
     dropout_p = 0.0 if deterministic else spec.dropout_p
     common = dict(causal=spec.causal, window=spec.window, kv_mask=kv_mask,
-                  scale=scale, q_offset=q_offset)
+                  segment_ids=segment_ids, scale=scale, q_offset=q_offset)
     if spec.impl == "pallas" or (spec.impl == "block_sparse" and block_layout is not None):
         return kops.flash_attention(
             q, k, v, dropout_p=dropout_p, dropout_seed=dropout_seed,
@@ -82,8 +87,8 @@ def attention(
             # models using it apply residual dropout instead (documented).
             raise ValueError("attention dropout requires impl='pallas'")
         if (spec.banded_window and spec.window is not None
-                and kv_mask is None and q.shape[2] == k.shape[2]
-                and (q_offset in (None, 0))):
+                and kv_mask is None and segment_ids is None
+                and q.shape[2] == k.shape[2] and (q_offset in (None, 0))):
             return kref.window_banded_attention(
                 q, k, v, window=spec.window, scale=scale,
                 pv_bf16=spec.pv_bf16)
@@ -108,7 +113,8 @@ def decode_attention(
     if spec.use_decode_kernel:
         return flash_decode(q, k_cache, v_cache, kv_len,
                             scale=scale, block_k=spec.block_k,
-                            num_splits=spec.num_decode_splits)
+                            num_splits=spec.num_decode_splits,
+                            window=spec.window)
     # XLA path: GQA-NATIVE masked softmax over the cache. q is reshaped to
     # (b, hkv, rep, 1, d) and contracted against the UNEXPANDED cache —
     # repeat_kv would broadcast-materialize the cache and force GSPMD to

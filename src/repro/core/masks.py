@@ -14,6 +14,7 @@ Layout values: 0 = skip block, 1 = full block (no element mask needed),
 from __future__ import annotations
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 
 BLOCK_SKIP = 0
@@ -44,6 +45,78 @@ def padding_mask_to_bias(kv_mask: jnp.ndarray, dtype=jnp.float32) -> jnp.ndarray
     """(batch, k) boolean -> (batch, 1, 1, k) additive bias."""
     neg = jnp.asarray(-1e30, dtype)
     return jnp.where(kv_mask[:, None, None, :], jnp.asarray(0.0, dtype), neg)
+
+
+# ---------------------------------------------------------------------------
+# Packed-segment (varlen) helpers — shared by kernels, oracles, models, data,
+# and the serving engine (DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+# Sentinel segment ids for padded tails. q and kv pads use DIFFERENT
+# sentinels so a padded query row never matches a padded key: padded rows
+# come out fully masked (l == 0 -> output 0) instead of attending garbage.
+SEG_PAD_Q = -1
+SEG_PAD_KV = -2
+
+
+def segment_mask(q_segment_ids: jnp.ndarray,
+                 kv_segment_ids: jnp.ndarray) -> jnp.ndarray:
+    """(b, sq) x (b, sk) int32 -> (b, 1, sq, sk) boolean attend-mask.
+
+    True where query and key belong to the same packed segment. Broadcasts
+    against per-head score tensors (b, h, sq, sk).
+    """
+    return q_segment_ids[:, None, :, None] == kv_segment_ids[:, None, None, :]
+
+
+def resolve_segment_ids(segment_ids, q_segment_ids, kv_segment_ids,
+                        sq: int, sk: int):
+    """Normalize the two ways of passing segment ids into a (q_seg, kv_seg)
+    pair (either may be None).
+
+    ``segment_ids`` is the self-attention shorthand: one (b, s) tensor used
+    for both sides (requires sq == sk). Chunked-prefill / suffix shapes pass
+    ``q_segment_ids`` (b, sq) and ``kv_segment_ids`` (b, sk) explicitly.
+    """
+    if segment_ids is not None:
+        if q_segment_ids is not None or kv_segment_ids is not None:
+            raise ValueError(
+                "pass either segment_ids or q_/kv_segment_ids, not both")
+        if sq != sk:
+            raise ValueError(
+                f"segment_ids shorthand requires sq == sk (got {sq} != {sk}); "
+                "pass q_segment_ids / kv_segment_ids explicitly")
+        return segment_ids, segment_ids
+    if (q_segment_ids is None) != (kv_segment_ids is None):
+        raise ValueError("q_segment_ids and kv_segment_ids must be passed together")
+    return q_segment_ids, kv_segment_ids
+
+
+def segment_relative_positions(segment_ids: jnp.ndarray) -> jnp.ndarray:
+    """(b, s) segment ids -> (b, s) within-segment token positions.
+
+    RoPE must restart at every packed-document boundary so a packed prefill
+    is position-identical to prefilling each document alone. Works for any
+    ids where equal-id runs are contiguous (the packed layout); boundaries
+    are detected by adjacent inequality, so ids need not be sorted.
+    """
+    s = segment_ids.shape[-1]
+    idx = jnp.arange(s, dtype=jnp.int32)
+    boundary = jnp.concatenate(
+        [jnp.ones_like(segment_ids[..., :1], jnp.bool_),
+         segment_ids[..., 1:] != segment_ids[..., :-1]], axis=-1)
+    start = jax.lax.cummax(jnp.where(boundary, idx, 0),
+                           axis=segment_ids.ndim - 1)
+    return idx - start
+
+
+def segment_ids_from_boundaries(boundary: np.ndarray) -> np.ndarray:
+    """(b, s) boolean new-document flags -> (b, s) int32 segment ids.
+
+    boundary[i] = True marks position i as the FIRST token of a new packed
+    document; ids count up from 0 within each row (data pipeline contract).
+    """
+    return np.cumsum(np.asarray(boundary, np.int64), axis=-1).astype(np.int32)
 
 
 # ---------------------------------------------------------------------------

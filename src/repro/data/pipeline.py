@@ -8,8 +8,12 @@ Properties a real pipeline needs and this one has:
   * learnable structure: tokens follow a noisy affine recurrence
     t_{i+1} = (a * t_i + b) % V with occasional resets, so cross-entropy
     drops measurably within a few hundred steps (examples/train_lm.py);
-  * packing: documents of random length are packed back-to-back with a
-    loss mask that zeroes the first token after each boundary.
+  * packing: documents of random length are packed back-to-back with
+    ``segment_ids`` (int32 document ids consumed by the segment-aware
+    attention stack, DESIGN.md §8) and a loss mask that zeroes both the
+    boundary token (its prediction crosses a document boundary) and the
+    first token after it (the recurrence chain restarts at the boundary, so
+    that step is unpredictable too).
 """
 
 from __future__ import annotations
@@ -17,6 +21,8 @@ from __future__ import annotations
 import dataclasses
 
 import numpy as np
+
+from repro.core.masks import segment_ids_from_boundaries
 
 
 @dataclasses.dataclass
@@ -50,13 +56,22 @@ class SyntheticLM:
             toks[:, i] = (a * toks[:, i - 1] + b[:, 0]) % V
         flip = rng.random((B, S)) < self.noise
         toks = np.where(flip, rng.integers(0, V, size=(B, S)), toks)
-        # document boundaries for packing
+        # document boundaries for packing: boundary[p] marks position p as
+        # the FIRST token of a new document (it is resampled below).
         boundary = rng.random((B, S)) < (1.0 / self.mean_doc_len)
         boundary[:, 0] = False
         toks = np.where(boundary, rng.integers(0, V, size=(B, S)), toks)
-        loss_mask = 1.0 - np.roll(boundary, 0, axis=1).astype(np.float32)
+        # loss_mask[p] = 0 suppresses the loss on PREDICTING token p (the
+        # model_zoo loss pairs mask[:, 1:] with targets tokens[:, 1:]).
+        # Zero the boundary token (predicted from the previous document) and
+        # the first token after it (the affine chain restarts at the
+        # boundary, so t_{p+1} does not follow from the resampled t_p).
+        after = np.zeros_like(boundary)
+        after[:, 1:] = boundary[:, :-1]
+        loss_mask = 1.0 - (boundary | after).astype(np.float32)
         return {"tokens": toks.astype(np.int32),
-                "loss_mask": loss_mask}
+                "loss_mask": loss_mask,
+                "segment_ids": segment_ids_from_boundaries(boundary)}
 
     def __iter__(self):
         step = 0

@@ -16,6 +16,10 @@ TPU adaptation of the paper's CUDA kernel (see DESIGN.md §2/§6):
     (seed, b, h, q_pos, k_pos) — a pure function, so the backward pass
     regenerates the identical mask with zero HBM traffic. This replaces the
     paper's "save the Philox state ℛ" (Alg. 2 line 1) TPU-idiomatically.
+  * packed segments (varlen): optional q/kv segment-id tiles mask s where
+    q_seg != kv_seg (on top of causal/window/kv_mask), and a tile whose
+    segment ranges provably don't intersect is skipped at block level —
+    the Alg. 5 block-sparse idea applied to packing (DESIGN.md §8).
   * GQA: kv BlockSpec index_map divides the head index by the group size, so
     grouped heads re-read the same kv tile from HBM (matches production TPU
     kernels; the tile is VMEM-resident across the group on real hardware).
@@ -96,28 +100,51 @@ def _block_should_run(qi, ki, bq, bk, q_offset, causal, window):
     return run
 
 
-def _run_and_mask(layout_ref, qi, ki, bq, bk, q_offset, causal, window):
+def _run_and_mask(layout_ref, qi, ki, bq, bk, q_offset, causal, window,
+                  qseg_ref=None, kseg_ref=None):
     """Block-run predicate + element-mask applicability.
 
     Dense path (layout_ref is None): geometry decides both.
     Block-sparse path (Alg. 5): the prefetched layout decides — 0 skip,
     1 full (no element mask), 2 partial (apply base causal/window mask).
+    Packed segments (qseg/kseg present): a tile whose q-segment range
+    provably misses the kv-segment range is skipped — the Alg. 5 block-skip
+    idea applied to packing. Range disjointness implies no equal id pair
+    regardless of id ordering, so the skip is sound for any layout; the
+    element-level segment mask (applied separately in the compute body)
+    carries correctness.
     Returns (run, apply_mask, full_override) where full_override is a traced
-    bool that disables the element mask for FULL blocks.
+    bool that disables the geometric element mask for FULL blocks.
     """
     if layout_ref is None:
         run = _block_should_run(qi, ki, bq, bk, q_offset, causal, window)
-        return run, (causal or window is not None), None
-    blk = layout_ref[0, 0]
-    return blk != 0, (causal or window is not None), blk == 1
+        apply_mask, full_override = (causal or window is not None), None
+    else:
+        blk = layout_ref[0, 0]
+        run = blk != 0
+        apply_mask, full_override = (causal or window is not None), blk == 1
+    if qseg_ref is not None:
+        qs, ks = qseg_ref[0], kseg_ref[0]
+        run = run & (jnp.min(qs) <= jnp.max(ks)) & (jnp.min(ks) <= jnp.max(qs))
+    return run, apply_mask, full_override
+
+
+def _segment_s_mask(qseg_ref, kseg_ref, s):
+    """Apply the element-level same-segment mask to a score tile. Kept
+    separate from the geometric mask: block-sparse FULL blocks may drop the
+    causal mask but must never drop segment isolation."""
+    if qseg_ref is None:
+        return s
+    ok = qseg_ref[0][:, None] == kseg_ref[0][None, :]
+    return jnp.where(ok, s, NEG_INF)
 
 
 # ---------------------------------------------------------------------------
 # forward kernel
 # ---------------------------------------------------------------------------
 
-def _fwd_kernel(seed_ref, q_ref, k_ref, v_ref, kvm_ref, layout_ref,
-                o_ref, m_ref, l_ref, acc_sc, m_sc, l_sc, *,
+def _fwd_kernel(seed_ref, q_ref, k_ref, v_ref, kvm_ref, qseg_ref, kseg_ref,
+                layout_ref, o_ref, m_ref, l_ref, acc_sc, m_sc, l_sc, *,
                 scale, causal, window, q_offset, dropout_p,
                 num_heads, q_len, k_len, variant):
     b, h = pl.program_id(0), pl.program_id(1)
@@ -133,7 +160,8 @@ def _fwd_kernel(seed_ref, q_ref, k_ref, v_ref, kvm_ref, layout_ref,
         acc_sc[...] = jnp.zeros_like(acc_sc)
 
     run, apply_mask, full_override = _run_and_mask(
-        layout_ref, qi, ki, bq, bk, q_offset, causal, window)
+        layout_ref, qi, ki, bq, bk, q_offset, causal, window,
+        qseg_ref, kseg_ref)
 
     @pl.when(run)
     def _compute():
@@ -152,6 +180,7 @@ def _fwd_kernel(seed_ref, q_ref, k_ref, v_ref, kvm_ref, layout_ref,
             s = jnp.where(ok, s, NEG_INF)
         if kvm_ref is not None:
             s = jnp.where(kvm_ref[0][None, :], s, NEG_INF)
+        s = _segment_s_mask(qseg_ref, kseg_ref, s)
 
         m_prev = m_sc[:, 0]
         l_prev = l_sc[:, 0]
@@ -204,6 +233,8 @@ def flash_attention_forward(
     block_q: int, block_k: int, variant: str = "fa2",
     dropout_dims: tuple[int, int] | None = None,
     block_layout: jax.Array | None = None,
+    q_segment_ids: jax.Array | None = None,
+    kv_segment_ids: jax.Array | None = None,
     interpret: bool = True,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Returns (o, m, l). Shapes: q (b,hq,sq,d), k/v (b,hkv,sk,d),
@@ -211,7 +242,10 @@ def flash_attention_forward(
     (ops.py pads). dropout_seed may be a traced scalar (no retrace per
     step). dropout_dims = (orig_q_len, orig_k_len) keeps the counter-based
     dropout hash independent of padding. block_layout (nq, nk) uint8
-    activates block-sparse FlashAttention (Alg. 5)."""
+    activates block-sparse FlashAttention (Alg. 5). q/kv_segment_ids
+    ((b, sq) / (b, sk) int32, both or neither) isolate packed documents:
+    s is masked where q_seg != kv_seg, and tiles with provably disjoint
+    segment ranges are skipped at block level."""
     b, hq, sq, d = q.shape
     _, hkv, sk, _ = k.shape
     n_rep = hq // hkv
@@ -232,20 +266,29 @@ def flash_attention_forward(
     ]
     args = [seed_arr, q, k, v]
     has_kvm, has_layout = kv_mask is not None, block_layout is not None
+    has_seg = q_segment_ids is not None
     if has_kvm:
         in_specs.append(pl.BlockSpec((1, block_k), lambda b, h, qi, ki: (b, ki)))
         args.append(kv_mask)
+    if has_seg:
+        in_specs.append(pl.BlockSpec((1, block_q), lambda b, h, qi, ki: (b, qi)))
+        args.append(q_segment_ids)
+        in_specs.append(pl.BlockSpec((1, block_k), lambda b, h, qi, ki: (b, ki)))
+        args.append(kv_segment_ids)
     if has_layout:
         in_specs.append(pl.BlockSpec((1, 1), lambda b, h, qi, ki: (qi, ki)))
         args.append(block_layout)
 
     def wrapped(seed_ref, q_ref, k_ref, v_ref, *rest):
-        n_opt = int(has_kvm) + int(has_layout)
+        n_opt = int(has_kvm) + 2 * int(has_seg) + int(has_layout)
         opts = rest[:n_opt]
         rest = rest[n_opt:]
         kvm_ref = opts[0] if has_kvm else None
+        qseg_ref = opts[int(has_kvm)] if has_seg else None
+        kseg_ref = opts[int(has_kvm) + 1] if has_seg else None
         lay_ref = opts[-1] if has_layout else None
-        return kernel(seed_ref, q_ref, k_ref, v_ref, kvm_ref, lay_ref, *rest)
+        return kernel(seed_ref, q_ref, k_ref, v_ref, kvm_ref, qseg_ref,
+                      kseg_ref, lay_ref, *rest)
 
     out_specs = [
         pl.BlockSpec((1, 1, block_q, d), lambda b, h, qi, ki: (b, h, qi, 0)),
@@ -279,7 +322,8 @@ def flash_attention_forward(
 # ---------------------------------------------------------------------------
 
 def _recompute_p(q, k, m_row, l_row, scale, q0, k0, bq, bk,
-                 causal, window, kvm_row, full_override=None):
+                 causal, window, kvm_row, full_override=None,
+                 qseg_ref=None, kseg_ref=None):
     """Recompute P tile = diag(l)^-1 exp(S - m) (Alg. 4 line 13)."""
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * scale
@@ -290,6 +334,7 @@ def _recompute_p(q, k, m_row, l_row, scale, q0, k0, bq, bk,
         s = jnp.where(ok, s, NEG_INF)
     if kvm_row is not None:
         s = jnp.where(kvm_row[None, :], s, NEG_INF)
+    s = _segment_s_mask(qseg_ref, kseg_ref, s)
     m_safe = jnp.where(l_row == 0.0, 0.0, m_row)
     l_safe = jnp.where(l_row == 0.0, 1.0, l_row)
     p = jnp.where(s <= NEG_INF / 2, 0.0, jnp.exp(s - m_safe[:, None])) / l_safe[:, None]
@@ -297,7 +342,7 @@ def _recompute_p(q, k, m_row, l_row, scale, q0, k0, bq, bk,
 
 
 def _dq_kernel(seed_ref, q_ref, k_ref, v_ref, do_ref, m_ref, l_ref, dd_ref,
-               kvm_ref, layout_ref, dq_ref, dq_sc, *,
+               kvm_ref, qseg_ref, kseg_ref, layout_ref, dq_ref, dq_sc, *,
                scale, causal, window, q_offset, dropout_p,
                num_heads, q_len, k_len):
     b, h = pl.program_id(0), pl.program_id(1)
@@ -311,7 +356,8 @@ def _dq_kernel(seed_ref, q_ref, k_ref, v_ref, do_ref, m_ref, l_ref, dd_ref,
         dq_sc[...] = jnp.zeros_like(dq_sc)
 
     run, _, full_override = _run_and_mask(
-        layout_ref, qi, ki, bq, bk, q_offset, causal, window)
+        layout_ref, qi, ki, bq, bk, q_offset, causal, window,
+        qseg_ref, kseg_ref)
 
     @pl.when(run)
     def _compute():
@@ -324,7 +370,8 @@ def _dq_kernel(seed_ref, q_ref, k_ref, v_ref, do_ref, m_ref, l_ref, dd_ref,
         k0 = ki * bk
         kvm_row = kvm_ref[0] if kvm_ref is not None else None
         _, p = _recompute_p(q, k, m_row, l_row, scale, q0, k0, bq, bk,
-                            causal, window, kvm_row, full_override)
+                            causal, window, kvm_row, full_override,
+                            qseg_ref, kseg_ref)
         dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
                                  preferred_element_type=jnp.float32)
         if dropout_p > 0.0:
@@ -345,7 +392,8 @@ def _dq_kernel(seed_ref, q_ref, k_ref, v_ref, do_ref, m_ref, l_ref, dd_ref,
 # ---------------------------------------------------------------------------
 
 def _dkv_kernel(seed_ref, q_ref, k_ref, v_ref, do_ref, m_ref, l_ref, dd_ref,
-                kvm_ref, layout_ref, dk_ref, dv_ref, dk_sc, dv_sc, *,
+                kvm_ref, qseg_ref, kseg_ref, layout_ref, dk_ref, dv_ref,
+                dk_sc, dv_sc, *,
                 scale, causal, window, q_offset, dropout_p,
                 num_heads, q_len, k_len):
     b, h = pl.program_id(0), pl.program_id(1)
@@ -360,7 +408,8 @@ def _dkv_kernel(seed_ref, q_ref, k_ref, v_ref, do_ref, m_ref, l_ref, dd_ref,
         dv_sc[...] = jnp.zeros_like(dv_sc)
 
     run, _, full_override = _run_and_mask(
-        layout_ref, qi, ki, bq, bk, q_offset, causal, window)
+        layout_ref, qi, ki, bq, bk, q_offset, causal, window,
+        qseg_ref, kseg_ref)
 
     @pl.when(run)
     def _compute():
@@ -373,7 +422,8 @@ def _dkv_kernel(seed_ref, q_ref, k_ref, v_ref, do_ref, m_ref, l_ref, dd_ref,
         k0 = ki * bk
         kvm_row = kvm_ref[0] if kvm_ref is not None else None
         _, p = _recompute_p(q, k, m_row, l_row, scale, q0, k0, bq, bk,
-                            causal, window, kvm_row, full_override)
+                            causal, window, kvm_row, full_override,
+                            qseg_ref, kseg_ref)
         if dropout_p > 0.0:
             keep = _dropout_keep(seed_ref[0], b, h, q0 - q_offset, k0, bq, bk,
                                  num_heads, q_len, k_len, dropout_p)
@@ -406,6 +456,8 @@ def flash_attention_backward(
     scale, causal, window, q_offset, dropout_p, dropout_seed,
     block_q, block_k, dropout_dims: tuple[int, int] | None = None,
     block_layout: jax.Array | None = None,
+    q_segment_ids: jax.Array | None = None,
+    kv_segment_ids: jax.Array | None = None,
     interpret: bool = True,
 ):
     """Returns (dq, dk, dv) with dk/dv already group-summed for GQA."""
@@ -415,6 +467,7 @@ def flash_attention_backward(
     nq, nk = sq // block_q, sk // block_k
     dq_len, dk_len = dropout_dims if dropout_dims is not None else (sq, sk)
     has_kvm, has_layout = kv_mask is not None, block_layout is not None
+    has_seg = q_segment_ids is not None
     seed_arr = jnp.asarray(dropout_seed, jnp.uint32).reshape(1)
 
     # D_i = rowsum(dO ∘ O) (paper Eq. 4 / Alg. 4 line 19). O(Nd) IO, done at
@@ -429,13 +482,28 @@ def flash_attention_backward(
         def wrapped(*refs):
             fixed = refs[:n_fixed]
             rest = refs[n_fixed:]
-            n_opt = int(has_kvm) + int(has_layout)
+            n_opt = int(has_kvm) + 2 * int(has_seg) + int(has_layout)
             opts = rest[:n_opt]
             rest = rest[n_opt:]
             kvm_ref = opts[0] if has_kvm else None
+            qseg_ref = opts[int(has_kvm)] if has_seg else None
+            kseg_ref = opts[int(has_kvm) + 1] if has_seg else None
             lay_ref = opts[-1] if has_layout else None
-            return kernel(*fixed, kvm_ref, lay_ref, *rest)
+            return kernel(*fixed, kvm_ref, qseg_ref, kseg_ref, lay_ref, *rest)
         return wrapped
+
+    def _append_opts(in_specs, args, kvm_spec, qseg_spec, kseg_spec, lay_spec):
+        if has_kvm:
+            in_specs.append(kvm_spec)
+            args.append(kv_mask)
+        if has_seg:
+            in_specs.append(qseg_spec)
+            args.append(q_segment_ids)
+            in_specs.append(kseg_spec)
+            args.append(kv_segment_ids)
+        if has_layout:
+            in_specs.append(lay_spec)
+            args.append(block_layout)
 
     # ---- dq kernel ----
     dq_kernel = functools.partial(_dq_kernel, **common)
@@ -450,12 +518,12 @@ def flash_attention_backward(
         pl.BlockSpec((1, 1, block_q), lambda b, h, qi, ki: (b, h, qi)),
     ]
     args = [seed_arr, q, k, v, do, m, l, dd]
-    if has_kvm:
-        in_specs.append(pl.BlockSpec((1, block_k), lambda b, h, qi, ki: (b, ki)))
-        args.append(kv_mask)
-    if has_layout:
-        in_specs.append(pl.BlockSpec((1, 1), lambda b, h, qi, ki: (qi, ki)))
-        args.append(block_layout)
+    _append_opts(
+        in_specs, args,
+        pl.BlockSpec((1, block_k), lambda b, h, qi, ki: (b, ki)),
+        pl.BlockSpec((1, block_q), lambda b, h, qi, ki: (b, qi)),
+        pl.BlockSpec((1, block_k), lambda b, h, qi, ki: (b, ki)),
+        pl.BlockSpec((1, 1), lambda b, h, qi, ki: (qi, ki)))
     dq_wrapped = _route(dq_kernel, 8)
 
     dq = pl.pallas_call(
@@ -481,12 +549,12 @@ def flash_attention_backward(
         pl.BlockSpec((1, 1, block_q), lambda b, h, ki, qi: (b, h, qi)),
     ]
     args = [seed_arr, q, k, v, do, m, l, dd]
-    if has_kvm:
-        in_specs.append(pl.BlockSpec((1, block_k), lambda b, h, ki, qi: (b, ki)))
-        args.append(kv_mask)
-    if has_layout:
-        in_specs.append(pl.BlockSpec((1, 1), lambda b, h, ki, qi: (qi, ki)))
-        args.append(block_layout)
+    _append_opts(
+        in_specs, args,
+        pl.BlockSpec((1, block_k), lambda b, h, ki, qi: (b, ki)),
+        pl.BlockSpec((1, block_q), lambda b, h, ki, qi: (b, qi)),
+        pl.BlockSpec((1, block_k), lambda b, h, ki, qi: (b, ki)),
+        pl.BlockSpec((1, 1), lambda b, h, ki, qi: (qi, ki)))
     dkv_wrapped = _route(dkv_kernel, 8)
 
     dk_p, dv_p = pl.pallas_call(

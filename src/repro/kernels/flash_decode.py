@@ -28,7 +28,7 @@ from repro.kernels.flash_attention import LANES, NEG_INF
 
 
 def _decode_kernel(kvl_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
-                   acc_sc, m_sc, l_sc, *, scale, block_k):
+                   acc_sc, m_sc, l_sc, *, scale, block_k, window):
     b, h = pl.program_id(0), pl.program_id(1)
     si, ki = pl.program_id(2), pl.program_id(3)   # split idx, block-in-split
     nk_in = pl.num_programs(3)
@@ -40,26 +40,40 @@ def _decode_kernel(kvl_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
         l_sc[...] = jnp.zeros_like(l_sc)
         acc_sc[...] = jnp.zeros_like(acc_sc)
 
-    q = q_ref[0, 0].astype(jnp.float32)              # (1, d)
-    k = k_ref[0, 0].astype(jnp.float32)              # (bk, d)
-    v = v_ref[0, 0].astype(jnp.float32)
-    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                            preferred_element_type=jnp.float32) * scale  # (1, bk)
-
     kv_len = kvl_ref[0]
     k0 = (si * nk_in + ki) * block_k
-    k_pos = k0 + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-    s = jnp.where(k_pos < kv_len, s, NEG_INF)
 
-    m_prev, l_prev = m_sc[:, 0], l_sc[:, 0]
-    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
-    p = jnp.where(s <= NEG_INF / 2, 0.0, jnp.exp(s - m_new[:, None]))
-    corr = jnp.where(m_prev <= NEG_INF / 2, 0.0, jnp.exp(m_prev - m_new))
-    l_new = l_prev * corr + jnp.sum(p, axis=-1)
-    acc_sc[...] = acc_sc[...] * corr[:, None] + jax.lax.dot_general(
-        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
-    m_sc[...] = jnp.broadcast_to(m_new[:, None], m_sc.shape)
-    l_sc[...] = jnp.broadcast_to(l_new[:, None], l_sc.shape)
+    # block-level skip: blocks entirely past the valid length, or (sliding
+    # window) entirely before the window start, contribute nothing.
+    run = k0 < kv_len
+    if window is not None:
+        run = run & (k0 + block_k > kv_len - window)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)              # (1, d)
+        k = k_ref[0, 0].astype(jnp.float32)              # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale  # (1, bk)
+
+        k_pos = k0 + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        ok = k_pos < kv_len
+        if window is not None:
+            # same semantics as the XLA decode path: keep the last `window`
+            # cache positions, i.e. k_pos in [kv_len - window, kv_len)
+            ok &= k_pos >= kv_len - window
+        s = jnp.where(ok, s, NEG_INF)
+
+        m_prev, l_prev = m_sc[:, 0], l_sc[:, 0]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.where(s <= NEG_INF / 2, 0.0, jnp.exp(s - m_new[:, None]))
+        corr = jnp.where(m_prev <= NEG_INF / 2, 0.0, jnp.exp(m_prev - m_new))
+        l_new = l_prev * corr + jnp.sum(p, axis=-1)
+        acc_sc[...] = acc_sc[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_sc[...] = jnp.broadcast_to(m_new[:, None], m_sc.shape)
+        l_sc[...] = jnp.broadcast_to(l_new[:, None], l_sc.shape)
 
     @pl.when(ki == nk_in - 1)
     def _emit_partial():
@@ -77,10 +91,13 @@ def flash_decode(
     scale: float | None = None,
     block_k: int = 256,
     num_splits: int = 8,
+    window: int | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
     """One-token attention against a fixed-capacity KV cache. Returns
-    (b, hq, 1, d). GQA handled via kv index_map."""
+    (b, hq, 1, d). GQA handled via kv index_map. ``window`` keeps only the
+    last ``window`` valid cache positions (matches the XLA decode path's
+    sliding-window semantics); out-of-window blocks are skipped."""
     b, hq, sq, d = q.shape
     _, hkv, sk, _ = k.shape
     assert sq == 1, "flash_decode handles single-token decode; use flash_attention otherwise"
@@ -101,7 +118,8 @@ def flash_decode(
     skp = k.shape[2]
     nk_in = skp // (num_splits * block_k)
 
-    kernel = functools.partial(_decode_kernel, scale=scale, block_k=block_k)
+    kernel = functools.partial(_decode_kernel, scale=scale, block_k=block_k,
+                               window=window)
 
     o_p, m_p, l_p = pl.pallas_call(
         kernel,

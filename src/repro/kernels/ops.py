@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.masks import SEG_PAD_KV, SEG_PAD_Q, resolve_segment_ids
 from repro.kernels import flash_attention as fa
 from repro.kernels import ref as ref_mod
 
@@ -39,46 +40,51 @@ def _pad_to(x: jax.Array, axis: int, mult: int) -> tuple[jax.Array, int]:
 
 @functools.partial(
     jax.custom_vjp,
-    nondiff_argnums=(6, 7, 8, 9, 10, 11, 12, 13, 14, 15),
+    nondiff_argnums=(8, 9, 10, 11, 12, 13, 14, 15, 16, 17),
 )
-def _flash_core(q, k, v, kv_mask, block_layout, dropout_seed, scale, causal,
-                window, q_offset, dropout_p, block_q, block_k, variant,
-                dropout_dims, interpret):
+def _flash_core(q, k, v, kv_mask, q_seg, kv_seg, block_layout, dropout_seed,
+                scale, causal, window, q_offset, dropout_p, block_q, block_k,
+                variant, dropout_dims, interpret):
     o, _, _ = fa.flash_attention_forward(
         q, k, v, kv_mask, scale=scale, causal=causal, window=window,
         q_offset=q_offset, dropout_p=dropout_p, dropout_seed=dropout_seed,
         block_q=block_q, block_k=block_k, variant=variant,
         dropout_dims=dropout_dims, block_layout=block_layout,
+        q_segment_ids=q_seg, kv_segment_ids=kv_seg,
         interpret=interpret)
     return o
 
 
-def _flash_core_fwd(q, k, v, kv_mask, block_layout, dropout_seed, scale,
-                    causal, window, q_offset, dropout_p, block_q, block_k,
-                    variant, dropout_dims, interpret):
+def _flash_core_fwd(q, k, v, kv_mask, q_seg, kv_seg, block_layout,
+                    dropout_seed, scale, causal, window, q_offset, dropout_p,
+                    block_q, block_k, variant, dropout_dims, interpret):
     o, m, l = fa.flash_attention_forward(
         q, k, v, kv_mask, scale=scale, causal=causal, window=window,
         q_offset=q_offset, dropout_p=dropout_p, dropout_seed=dropout_seed,
         block_q=block_q, block_k=block_k, variant=variant,
         dropout_dims=dropout_dims, block_layout=block_layout,
+        q_segment_ids=q_seg, kv_segment_ids=kv_seg,
         interpret=interpret)
-    return o, (q, k, v, kv_mask, block_layout, dropout_seed, o, m, l)
+    return o, (q, k, v, kv_mask, q_seg, kv_seg, block_layout, dropout_seed,
+               o, m, l)
 
 
 def _flash_core_bwd(scale, causal, window, q_offset, dropout_p,
                     block_q, block_k, variant, dropout_dims, interpret, res, do):
-    q, k, v, kv_mask, block_layout, dropout_seed, o, m, l = res
+    q, k, v, kv_mask, q_seg, kv_seg, block_layout, dropout_seed, o, m, l = res
     dq, dk, dv = fa.flash_attention_backward(
         q, k, v, o, do, m, l, kv_mask,
         scale=scale, causal=causal, window=window, q_offset=q_offset,
         dropout_p=dropout_p, dropout_seed=dropout_seed,
         block_q=block_q, block_k=block_k, dropout_dims=dropout_dims,
-        block_layout=block_layout, interpret=interpret)
+        block_layout=block_layout,
+        q_segment_ids=q_seg, kv_segment_ids=kv_seg, interpret=interpret)
 
     def _zero_tangent(x):
         return None if x is None else np.zeros(x.shape, jax.dtypes.float0)
 
-    return (dq, dk, dv, _zero_tangent(kv_mask), _zero_tangent(block_layout),
+    return (dq, dk, dv, _zero_tangent(kv_mask), _zero_tangent(q_seg),
+            _zero_tangent(kv_seg), _zero_tangent(block_layout),
             np.zeros((), jax.dtypes.float0))
 
 
@@ -101,16 +107,24 @@ def flash_attention(
     block_k: int = 128,
     variant: str = "fa2",              # "paper" (Alg. 1 faithful) | "fa2"
     block_layout=None,                 # (nq, nk) uint8 -> block-sparse (Alg. 5)
+    segment_ids: jax.Array | None = None,     # (b, s) packed ids (self-attn)
+    q_segment_ids: jax.Array | None = None,   # (b, sq) explicit q-side ids
+    kv_segment_ids: jax.Array | None = None,  # (b, sk) explicit kv-side ids
     interpret: bool | None = None,
 ) -> jax.Array:
     """Differentiable FlashAttention (Pallas). Pads seq dims to block
     multiples internally; GQA inferred from head counts. ``block_layout``
     switches to block-sparse FlashAttention (paper Alg. 5): 0 skip, 1 full,
-    2 partial (partial blocks additionally apply the causal/window mask)."""
+    2 partial (partial blocks additionally apply the causal/window mask).
+    ``segment_ids`` isolates packed (varlen) documents: tokens attend only
+    within their own segment. Padded tails get sentinel segments (q/kv pads
+    differ), so padded rows come out fully masked."""
     b, hq, sq, d = q.shape
     _, hkv, sk, _ = k.shape
     if hq % hkv != 0:
         raise ValueError(f"q heads {hq} not a multiple of kv heads {hkv}")
+    q_seg, kv_seg = resolve_segment_ids(segment_ids, q_segment_ids,
+                                        kv_segment_ids, sq, sk)
     if scale is None:
         scale = 1.0 / (d ** 0.5)
     if q_offset is None:
@@ -130,6 +144,11 @@ def flash_attention(
             kvm = kvm & jnp.pad(kv_mask, ((0, 0), (0, kpad)))
     else:
         kvm = None
+    if q_seg is not None:
+        q_seg = jnp.pad(jnp.asarray(q_seg, jnp.int32), ((0, 0), (0, qpad)),
+                        constant_values=SEG_PAD_Q)
+        kv_seg = jnp.pad(jnp.asarray(kv_seg, jnp.int32), ((0, 0), (0, kpad)),
+                         constant_values=SEG_PAD_KV)
 
     layout = None
     if block_layout is not None:
@@ -142,9 +161,9 @@ def flash_attention(
                 f"({block_q}, {block_k})")
 
     seed = jnp.asarray(dropout_seed, jnp.uint32)
-    o = _flash_core(qp, kp, vp, kvm, layout, seed, scale, causal, window,
-                    q_offset, dropout_p, block_q, block_k, variant,
-                    (sq, sk), interpret)
+    o = _flash_core(qp, kp, vp, kvm, q_seg, kv_seg, layout, seed, scale,
+                    causal, window, q_offset, dropout_p, block_q, block_k,
+                    variant, (sq, sk), interpret)
     return o[:, :, :sq]
 
 

@@ -21,6 +21,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.masks import resolve_segment_ids, segment_mask
 from repro.core.online_softmax import NEG_INF, SoftmaxState, block_state, finalize, merge_states
 
 
@@ -83,6 +84,9 @@ def standard_attention(
     bias: jax.Array | None = None,      # broadcastable to (b, hq, sq, sk)
     kv_mask: jax.Array | None = None,   # (b, sk) True = valid key
     mask: jax.Array | None = None,      # explicit (sq, sk) boolean attend-mask
+    segment_ids: jax.Array | None = None,     # (b, s) packed-segment ids (self-attn)
+    q_segment_ids: jax.Array | None = None,   # (b, sq) explicit q-side ids
+    kv_segment_ids: jax.Array | None = None,  # (b, sk) explicit kv-side ids
     scale: float | None = None,
     dropout_p: float = 0.0,
     dropout_seed: int = 0,
@@ -92,6 +96,8 @@ def standard_attention(
     b, hq, sq, d = q.shape
     _, hkv, sk, _ = k.shape
     assert hq % hkv == 0, (hq, hkv)
+    q_seg, kv_seg = resolve_segment_ids(segment_ids, q_segment_ids,
+                                        kv_segment_ids, sq, sk)
     k = repeat_kv(k, hq // hkv)
     v = repeat_kv(v, hq // hkv)
     if scale is None:
@@ -112,6 +118,8 @@ def standard_attention(
         s = jnp.where((q_pos >= k_pos) & (q_pos - k_pos < window), s, neg)
     if mask is not None:
         s = jnp.where(mask, s, neg)
+    if q_seg is not None:
+        s = jnp.where(segment_mask(q_seg, kv_seg), s, neg)
     if kv_mask is not None:
         s = jnp.where(kv_mask[:, None, None, :], s, neg)
 
@@ -146,6 +154,9 @@ def chunked_attention(
     causal: bool = False,
     window: int | None = None,
     kv_mask: jax.Array | None = None,
+    segment_ids: jax.Array | None = None,     # (b, s) packed-segment ids
+    q_segment_ids: jax.Array | None = None,
+    kv_segment_ids: jax.Array | None = None,
     scale: float | None = None,
     chunk_size: int = 1024,
     q_offset: int | None = None,
@@ -157,12 +168,19 @@ def chunked_attention(
     jax.grad recomputes per-chunk scores, mirroring the paper's backward
     recomputation at the XLA level. ``unroll=True`` removes the while loop
     (used by the dry-run cost probes: XLA cost_analysis counts loop bodies
-    once, so probes unroll and extrapolate).
+    once, so probes unroll and extrapolate). Packed segments are masked
+    per chunk, the O(n) Rabe–Staats formulation inheriting the fix for free
+    (DESIGN.md §8).
     """
     b, hq, sq, d = q.shape
     _, hkv, sk, _ = k.shape
     assert hq % hkv == 0
     n_rep = hq // hkv
+    q_seg, kv_seg = resolve_segment_ids(segment_ids, q_segment_ids,
+                                        kv_segment_ids, sq, sk)
+    # self-packing (one id tensor both sides): every causal q row keeps its
+    # own diagonal key, so the guard-free fast path below stays NaN-safe.
+    self_seg = q_seg is kv_seg
     if scale is None:
         scale = 1.0 / (d ** 0.5)
     if q_offset is None:
@@ -177,6 +195,9 @@ def chunked_attention(
             kv_mask = jnp.broadcast_to(valid[None, :], (b, sk + pad))
         else:
             kv_mask = jnp.pad(kv_mask, ((0, 0), (0, pad))) & valid[None, :]
+        if kv_seg is not None:
+            # pad keys get a sentinel id no real query carries
+            kv_seg = jnp.pad(kv_seg, ((0, 0), (0, pad)), constant_values=-2)
     sk_p = k.shape[2]
     n_chunks = sk_p // chunk_size
 
@@ -186,6 +207,10 @@ def chunked_attention(
         mc = kv_mask.reshape(b, n_chunks, chunk_size).transpose(1, 0, 2)
     else:
         mc = None
+    if kv_seg is not None:
+        sc_seg = kv_seg.reshape(b, n_chunks, chunk_size).transpose(1, 0, 2)
+    else:
+        sc_seg = None
 
     qf = q.astype(jnp.float32)
     q_pos = jnp.arange(sq) + q_offset
@@ -194,15 +219,15 @@ def chunked_attention(
     # padding mask, every q row has at least one valid key in chunk 0 (its
     # own position), so the fully-masked-row NaN guards are unreachable.
     # Masking with a soft -3e4 (exp underflows to exactly 0 in fp32) lets us
-    # drop two score-sized selects per chunk.
-    fast = causal and mc is None and window is None and q_offset >= 0
+    # drop two score-sized selects per chunk. Self-packed segments keep the
+    # diagonal valid, so they ride the same path.
+    fast = (causal and mc is None and window is None and q_offset >= 0
+            and (q_seg is None or self_seg))
 
     def body(state: SoftmaxState, inputs):
-        if mc is None:
-            (ci, kb, vb) = inputs
-            mb = None
-        else:
-            (ci, kb, vb, mb) = inputs
+        (ci, kb, vb), rest = inputs[:3], inputs[3:]
+        mb = rest[0] if mc is not None else None
+        sb = rest[-1] if sc_seg is not None else None
         kb = repeat_kv(kb, n_rep)
         vb = repeat_kv(vb, n_rep)
         s = jnp.einsum("bhqd,bhkd->bhqk", qf, kb.astype(jnp.float32)) * scale
@@ -215,6 +240,8 @@ def chunked_attention(
             s = jnp.where(ok, s, neg)
         if mb is not None:
             s = jnp.where(mb[:, None, None, :], s, neg)
+        if sb is not None:
+            s = jnp.where(segment_mask(q_seg, sb), s, neg)
         if fast:
             m = jnp.maximum(state.m, jnp.max(s, axis=-1))
             p = jnp.exp(s - m[..., None])
@@ -244,7 +271,11 @@ def chunked_attention(
         acc=jnp.zeros((b, hq, sq, d), jnp.float32),
     )
     idx = jnp.arange(n_chunks)
-    xs = (idx, kc, vc) if mc is None else (idx, kc, vc, mc)
+    xs = (idx, kc, vc)
+    if mc is not None:
+        xs = xs + (mc,)
+    if sc_seg is not None:
+        xs = xs + (sc_seg,)
     state, _ = jax.lax.scan(body, state0, xs,
                             unroll=n_chunks if unroll else 1)
     out, _ = finalize(state, dtype=q.dtype)

@@ -11,14 +11,13 @@ import jax
 
 
 def make_production_mesh(*, multi_pod: bool = False):
+    from repro.distributed.meshes import make_mesh
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_test_mesh(data: int = 2, model: int = 4):
     """Small mesh for subprocess tests (8 fake devices)."""
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.distributed.meshes import make_mesh
+    return make_mesh((data, model), ("data", "model"))

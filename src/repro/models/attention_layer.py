@@ -16,6 +16,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.core.attention import AttentionSpec, attention, decode_attention
+from repro.core.masks import segment_relative_positions
 from repro.models.layers import apply_rope, dense_init, rms_normalize
 
 
@@ -87,16 +88,26 @@ def apply_attention(
     kv_x: jax.Array | None = None,        # cross-attention source
     positions: jax.Array | None = None,
     kv_mask: jax.Array | None = None,
+    segment_ids: jax.Array | None = None,  # (b, s) packed-document ids
     block_layout=None,
     deterministic: bool = True,
     dropout_seed: int = 0,
 ):
-    """Full-sequence attention. x: (b, s, d_model) -> (b, s, d_model)."""
+    """Full-sequence attention. x: (b, s, d_model) -> (b, s, d_model).
+
+    ``segment_ids`` isolates packed documents in self-attention AND makes
+    RoPE segment-relative (positions restart at each document boundary), so
+    packed execution is position-identical to per-document execution.
+    Cross-attention ignores segment_ids (encoder K/V are a single stream).
+    """
     cross = kv_x is not None
     kv_src = kv_x if cross else x
     sq = x.shape[1]
     if positions is None:
-        positions = jnp.arange(sq)
+        if segment_ids is not None and not cross:
+            positions = segment_relative_positions(segment_ids)
+        else:
+            positions = jnp.arange(sq)
     # cross-attention carries no RoPE (decoder q / encoder k live in
     # different position spaces); self-attention ropes both.
     q_positions = None if cross else positions
@@ -105,7 +116,9 @@ def apply_attention(
     spec = spec or attn_spec_from_config(cfg)
     if cross:
         spec = AttentionSpec(**{**spec.__dict__, "causal": False, "window": None})
-    o = attention(q, k, v, spec, kv_mask=kv_mask, block_layout=block_layout,
+    o = attention(q, k, v, spec, kv_mask=kv_mask,
+                  segment_ids=None if cross else segment_ids,
+                  block_layout=block_layout,
                   deterministic=deterministic, dropout_seed=dropout_seed)
     return _merge_heads(o) @ params["wo"]
 
@@ -132,13 +145,23 @@ def kv_cache_specs():
 
 
 def prefill_attention(params, cfg: ModelConfig, x, cache, *, kv_mask=None,
+                      segment_ids=None, positions=None,
                       spec: AttentionSpec | None = None):
-    """Full-seq attention that also writes K/V into the cache at [0, s)."""
+    """Full-seq attention that also writes K/V into the cache at [0, s).
+
+    Packed prefill passes ``segment_ids`` (and usually segment-relative
+    ``positions``): each packed request's K/V rows are then identical to a
+    batch-1 prefill of that request alone, so the serving engine can scatter
+    row ranges straight into per-slot caches.
+    """
     sq = x.shape[1]
-    positions = jnp.arange(sq)
+    if positions is None:
+        positions = (segment_relative_positions(segment_ids)
+                     if segment_ids is not None else jnp.arange(sq))
     q, k, v = _project_qkv(params, cfg, x, x, positions, positions)
     spec = spec or attn_spec_from_config(cfg)
-    o = attention(q, k, v, spec, kv_mask=kv_mask, deterministic=True)
+    o = attention(q, k, v, spec, kv_mask=kv_mask, segment_ids=segment_ids,
+                  deterministic=True)
     cache = {
         "k": jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0)),
         "v": jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0)),

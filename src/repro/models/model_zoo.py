@@ -103,13 +103,24 @@ class Model:
 
     def forward(self, params, batch, *, deterministic: bool = True,
                 dropout_seed: int = 0):
-        """Returns (logits, aux_loss)."""
+        """Returns (logits, aux_loss). ``batch["segment_ids"]`` (B, S) int32,
+        when present, isolates packed documents in decoder self-attention
+        and makes RoPE segment-relative (boundary-correct packed training)."""
         cfg = self.cfg
+        segment_ids = batch.get("segment_ids")
+        if segment_ids is not None and (cfg.frontend is not None
+                                        or cfg.num_encoder_layers > 0):
+            raise ValueError(
+                "packed segment_ids are a text-decoder feature: frontends "
+                "prepend a modality stream with its own position space, and "
+                "cross-attention reads one shared encoder stream that cannot "
+                "be isolated per packed document")
         enc_out = None
         if cfg.num_encoder_layers > 0:
             enc_out = self._encode(params, batch, deterministic)
         x = self._embed_decoder_input(params, batch)
         h, aux = tfm.apply_stack(params["blocks"], cfg, x, enc_out=enc_out,
+                                 segment_ids=segment_ids,
                                  deterministic=deterministic,
                                  dropout_seed=dropout_seed)
         return self._logits(params, h), aux
@@ -161,6 +172,34 @@ class Model:
                  "kv_len": jnp.full((x.shape[0],), x.shape[1], jnp.int32)}
         return state, logits
 
+    def supports_packed_prefill(self) -> bool:
+        """Packed prefill scatters per-segment KV-cache row ranges into
+        slots; that requires every cache leaf to be a (length-indexed) KV
+        cache. SSM/hybrid states and encoder/frontend streams don't split
+        per segment."""
+        cfg = self.cfg
+        return (cfg.family in ("dense", "moe") and not cfg.hybrid
+                and cfg.num_encoder_layers == 0 and cfg.frontend is None)
+
+    def prefill_packed(self, params, batch):
+        """Prefill SEVERAL requests packed into one (1, ΣLᵢ) sequence.
+
+        batch: {"tokens": (1, S), "segment_ids": (1, S)} where segment i
+        occupies a contiguous token run (pad tail uses a sentinel id).
+        Segment masking + segment-relative RoPE make each request's hidden
+        states and K/V rows identical to a batch-1 prefill of that request
+        alone. Returns (caches, logits (1, S, V)): the caller gathers each
+        segment's last-token logits and scatters its K/V row range into a
+        decode slot (serve/engine.py).
+        """
+        cfg = self.cfg
+        assert self.supports_packed_prefill(), cfg.family
+        seg = batch["segment_ids"]
+        x = self._embed_decoder_input(params, batch)
+        h, caches = tfm.apply_stack_prefill(
+            params["blocks"], cfg, x, x.shape[1], segment_ids=seg)
+        return caches, self._logits(params, h)
+
     def decode_step(self, params, state, token):
         """token: (B,) i32. Returns (new_state, logits (B, 1, V))."""
         cfg = self.cfg
@@ -200,6 +239,10 @@ class Model:
             else:
                 batch = {"tokens": tok(B, S)}
                 specs = {"tokens": P(data, None)}
+                if shape.kind == "train":
+                    # packed-document ids from the data pipeline (§7.5)
+                    batch["segment_ids"] = tok(B, S)
+                    specs["segment_ids"] = P(data, None)
             if shape.kind == "train":
                 batch["loss_mask"] = jax.ShapeDtypeStruct((B, *batch["tokens"].shape[1:]),
                                                           jnp.float32)

@@ -80,9 +80,16 @@ def block_specs(cfg: ModelConfig, *, cross_attn: bool = False):
 
 
 def apply_block(params: Params, cfg: ModelConfig, x, *,
-                enc_out=None, enc_mask=None, deterministic=True,
-                dropout_seed=0, causal_override: bool | None = None):
-    """One block, full sequence. Returns (x, aux_loss)."""
+                enc_out=None, enc_mask=None, segment_ids=None,
+                deterministic=True, dropout_seed=0,
+                causal_override: bool | None = None):
+    """One block, full sequence. Returns (x, aux_loss).
+
+    ``segment_ids`` (b, s) isolates packed documents in the self-attention
+    path (mask + segment-relative RoPE). SSM blocks scan the raw sequence
+    and do NOT reset state at boundaries — packing is an attention-family
+    feature (DESIGN.md §8).
+    """
     aux = jnp.float32(0.0)
     if cfg.sp_activations and x.ndim == 3:
         # sequence-parallel residual stream (§Perf lever): shard the seq dim
@@ -105,6 +112,7 @@ def apply_block(params: Params, cfg: ModelConfig, x, *,
         # input in parallel; per-path RMS-normalized outputs are averaged.
         h = apply_norm(params["attn_norm"], x, cfg.norm_type)
         a = attn_mod.apply_attention(params["attn"], cfg, h, spec=spec,
+                                     segment_ids=segment_ids,
                                      deterministic=deterministic,
                                      dropout_seed=dropout_seed)
         m = ssm_mod.apply_ssm(params["ssm"], cfg, h)
@@ -115,6 +123,7 @@ def apply_block(params: Params, cfg: ModelConfig, x, *,
     else:
         h = apply_norm(params["attn_norm"], x, cfg.norm_type)
         x = x + attn_mod.apply_attention(params["attn"], cfg, h, spec=spec,
+                                         segment_ids=segment_ids,
                                          deterministic=deterministic,
                                          dropout_seed=dropout_seed)
 
@@ -159,11 +168,12 @@ def stack_specs(cfg: ModelConfig, *, cross_attn: bool = False):
 
 
 def apply_stack(params: Params, cfg: ModelConfig, x, *,
-                enc_out=None, enc_mask=None, deterministic=True,
-                dropout_seed=0, causal_override=None):
+                enc_out=None, enc_mask=None, segment_ids=None,
+                deterministic=True, dropout_seed=0, causal_override=None):
     """Scan over stacked layers. Returns (x, total_aux_loss)."""
     block_fn = functools.partial(
         apply_block, cfg=cfg, enc_out=enc_out, enc_mask=enc_mask,
+        segment_ids=segment_ids,
         deterministic=deterministic, dropout_seed=dropout_seed,
         causal_override=causal_override)
 
@@ -298,16 +308,20 @@ def apply_stack_decode(params: Params, cfg: ModelConfig, x, caches, kv_len):
 # ---------------------------------------------------------------------------
 
 def apply_block_prefill(params: Params, cfg: ModelConfig, x, capacity: int,
-                        *, kv_mask=None, enc_out=None):
-    """One block over the prompt; returns (x, cache_l)."""
+                        *, kv_mask=None, enc_out=None, segment_ids=None,
+                        positions=None):
+    """One block over the prompt; returns (x, cache_l). ``segment_ids`` /
+    ``positions`` make the prompt a PACKED batch of requests (serving's
+    packed prefill; see serve/engine.py and DESIGN.md §6)."""
     cache_l: Params = {}
     dtype = x.dtype
     b = x.shape[0]
     if cfg.hybrid:
         h = apply_norm(params["attn_norm"], x, cfg.norm_type)
         kv = attn_mod.init_kv_cache(cfg, b, capacity, dtype)
-        a, cache_l["kv"] = attn_mod.prefill_attention(params["attn"], cfg, h,
-                                                      kv, kv_mask=kv_mask)
+        a, cache_l["kv"] = attn_mod.prefill_attention(
+            params["attn"], cfg, h, kv, kv_mask=kv_mask,
+            segment_ids=segment_ids, positions=positions)
         m, cache_l["ssm"] = ssm_mod.apply_ssm(params["ssm"], cfg, h,
                                               return_final_state=True)
         x = x + 0.5 * (rms_normalize(a) + rms_normalize(m))
@@ -319,8 +333,9 @@ def apply_block_prefill(params: Params, cfg: ModelConfig, x, capacity: int,
     else:
         h = apply_norm(params["attn_norm"], x, cfg.norm_type)
         kv = attn_mod.init_kv_cache(cfg, b, capacity, dtype)
-        a, cache_l["kv"] = attn_mod.prefill_attention(params["attn"], cfg, h,
-                                                      kv, kv_mask=kv_mask)
+        a, cache_l["kv"] = attn_mod.prefill_attention(
+            params["attn"], cfg, h, kv, kv_mask=kv_mask,
+            segment_ids=segment_ids, positions=positions)
         x = x + a
 
     if "cross_attn" in params and enc_out is not None:
@@ -348,7 +363,8 @@ def apply_block_prefill(params: Params, cfg: ModelConfig, x, capacity: int,
 
 
 def apply_stack_prefill(params: Params, cfg: ModelConfig, x, capacity: int,
-                        *, kv_mask=None, enc_out=None):
+                        *, kv_mask=None, enc_out=None, segment_ids=None,
+                        positions=None):
     """Prompt through all layers; emits the stacked decode cache."""
     if not cfg.scan_layers:
         outs = []
@@ -358,14 +374,18 @@ def apply_stack_prefill(params: Params, cfg: ModelConfig, x, capacity: int,
             p_l = (params[l] if isinstance(params, list)
                    else jax.tree.map(lambda p: p[l], params))
             x, cache_l = apply_block_prefill(p_l, cfg, x, capacity,
-                                             kv_mask=kv_mask, enc_out=enc_out)
+                                             kv_mask=kv_mask, enc_out=enc_out,
+                                             segment_ids=segment_ids,
+                                             positions=positions)
             outs.append(cache_l)
         caches = jax.tree.map(lambda *cs: jnp.stack(cs), *outs)
         return x, caches
 
     def body(x, p_l):
         x, cache_l = apply_block_prefill(p_l, cfg, x, capacity,
-                                         kv_mask=kv_mask, enc_out=enc_out)
+                                         kv_mask=kv_mask, enc_out=enc_out,
+                                         segment_ids=segment_ids,
+                                         positions=positions)
         return x, cache_l
 
     x, caches = jax.lax.scan(body, x, params)

@@ -10,11 +10,23 @@ right).
 
 Mechanics:
   * B fixed slots, each with capacity C in the stacked per-layer cache;
-  * new requests are prefilled with a batch-1 model call and INSERTED into
-    their slot (dynamic_update_slice on the batch axis of every cache leaf);
+  * PACKED PREFILL (default, DESIGN.md §6): each admit drains up to
+    min(#free slots, queue) requests, packs their prompts back-to-back into
+    ONE (1, ΣLᵢ) model call with ``segment_ids`` (the same tensor the
+    segment-aware attention stack uses for packed training), then scatters
+    each segment's K/V row range into its slot. One model invocation
+    prefills K requests; segment masking + segment-relative RoPE make the
+    result token-identical to K batch-1 calls. Padding to a bucket multiple
+    bounds retracing;
+  * the sequential batch-1 prefill loop is kept (``packed_prefill=False``)
+    as the exactness baseline and for models whose per-layer state cannot
+    be split per segment (SSM/hybrid/enc-dec/frontends);
   * every engine step decodes ALL slots in one jitted call (inactive slots
     compute garbage that is never emitted — the static-shape trade);
   * finished slots are immediately refilled from the queue (continuous).
+
+``prefill_calls`` / ``decode_calls`` count model invocations (observability
++ the packed-vs-sequential benchmark in benchmarks/bench_packed_prefill.py).
 """
 
 from __future__ import annotations
@@ -27,6 +39,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.masks import SEG_PAD_Q
 from repro.models.model_zoo import Model
 
 
@@ -42,13 +55,18 @@ class Request:
 class ServingEngine:
     def __init__(self, model: Model, params, *, num_slots: int,
                  capacity: int, eos_id: int | None = None,
-                 greedy: bool = True):
+                 greedy: bool = True, packed_prefill: bool = True,
+                 prefill_bucket: int = 64):
         self.model = model
         self.params = params
         self.B = num_slots
         self.capacity = capacity
         self.eos_id = eos_id
         assert greedy, "only greedy decoding implemented"
+        self.packed_prefill = packed_prefill and model.supports_packed_prefill()
+        self.prefill_bucket = prefill_bucket
+        self.prefill_calls = 0
+        self.decode_calls = 0
         self.state = model.init_decode_state(num_slots, capacity)
         self.slot_req: list[Request | None] = [None] * num_slots
         self.queue: list[Request] = []
@@ -70,32 +88,86 @@ class ServingEngine:
         self._insert = jax.jit(_insert, donate_argnums=(0,),
                                static_argnums=(2,))
 
+        def _insert_segment(state, packed_caches, slot, offset, length):
+            """Scatter one packed segment's K/V rows [offset, offset+length)
+            into slot's cache rows [0, length). Cache leaves are
+            (L, B, hkv, capacity, hd); packed leaves (L, 1, hkv, ΣL, hd)."""
+            def ins(big, small):
+                seg = jax.lax.dynamic_slice_in_dim(small, offset, length, axis=3)
+                idx = (0, slot) + (0,) * (big.ndim - 2)
+                return jax.lax.dynamic_update_slice(big, seg.astype(big.dtype), idx)
+
+            caches = jax.tree.map(ins, state["caches"], packed_caches)
+            kv_len = state["kv_len"].at[slot].set(length)
+            return {"caches": caches, "kv_len": kv_len}
+
+        # slot and length static (shape-determining); offset traced, so one
+        # trace per (slot, prompt length) pair, not per packing layout.
+        self._insert_segment = jax.jit(_insert_segment, donate_argnums=(0,),
+                                       static_argnums=(2, 4))
+
     # ----------------------------------------------------------------- admit
     def submit(self, prompt: list[int], max_new_tokens: int) -> int:
         rid = next(self._rid)
         self.queue.append(Request(rid, list(prompt), max_new_tokens))
         return rid
 
+    def _start_or_finish(self, slot: int, req: Request, first: int) -> None:
+        """Common post-prefill bookkeeping for both prefill paths."""
+        req.output.append(first)
+        # the prefill-produced token can already terminate the request
+        if ((self.eos_id is not None and first == self.eos_id)
+                or req.max_new_tokens <= 1):
+            req.done = True
+            self.finished.append(req)
+            return
+        self.next_token[slot] = first
+        self.slot_req[slot] = req
+
+    def _admit_one(self, slot: int, req: Request) -> None:
+        """Sequential path: one batch-1 prefill call + whole-state insert."""
+        toks = jnp.asarray([req.prompt], jnp.int32)
+        slot_state, logits = self.model.prefill(
+            self.params, {"tokens": toks}, self.capacity)
+        self.prefill_calls += 1
+        self.state = self._insert(self.state, slot_state, slot,
+                                  len(req.prompt))
+        self._start_or_finish(slot, req, int(jnp.argmax(logits[0, -1])))
+
+    def _admit_packed(self, slots: list[int], reqs: list[Request]) -> None:
+        """Packed path: ONE (1, ΣLᵢ) prefill for all drained requests."""
+        lengths = [len(r.prompt) for r in reqs]
+        offsets = np.concatenate([[0], np.cumsum(lengths)])
+        total = int(offsets[-1])
+        padded = total + (-total) % self.prefill_bucket
+        toks = np.zeros((1, padded), np.int32)
+        segs = np.full((1, padded), SEG_PAD_Q, np.int32)
+        for i, r in enumerate(reqs):
+            toks[0, offsets[i]:offsets[i + 1]] = r.prompt
+            segs[0, offsets[i]:offsets[i + 1]] = i
+        caches, logits = self.model.prefill_packed(
+            self.params, {"tokens": jnp.asarray(toks),
+                          "segment_ids": jnp.asarray(segs)})
+        self.prefill_calls += 1
+        lasts = np.asarray(
+            jnp.argmax(logits[0, jnp.asarray(offsets[1:] - 1)], axis=-1),
+            np.int32)
+        for i, (slot, req) in enumerate(zip(slots, reqs)):
+            self.state = self._insert_segment(
+                self.state, caches, slot, int(offsets[i]), lengths[i])
+            self._start_or_finish(slot, req, int(lasts[i]))
+
     def _admit(self) -> None:
-        for slot in range(self.B):
-            if self.slot_req[slot] is not None or not self.queue:
-                continue
-            req = self.queue.pop(0)
-            toks = jnp.asarray([req.prompt], jnp.int32)
-            slot_state, logits = self.model.prefill(
-                self.params, {"tokens": toks}, self.capacity)
-            self.state = self._insert(self.state, slot_state, slot,
-                                      len(req.prompt))
-            first = int(jnp.argmax(logits[0, -1]))
-            req.output.append(first)
-            # the prefill-produced token can already terminate the request
-            if ((self.eos_id is not None and first == self.eos_id)
-                    or req.max_new_tokens <= 1):
-                req.done = True
-                self.finished.append(req)
-                continue
-            self.next_token[slot] = first
-            self.slot_req[slot] = req
+        free = [s for s in range(self.B) if self.slot_req[s] is None]
+        n = min(len(free), len(self.queue))
+        if n == 0:
+            return
+        reqs = [self.queue.pop(0) for _ in range(n)]
+        if self.packed_prefill and n > 1:
+            self._admit_packed(free[:n], reqs)
+        else:
+            for slot, req in zip(free, reqs):
+                self._admit_one(slot, req)
 
     # ------------------------------------------------------------------ step
     def step(self) -> None:
@@ -104,6 +176,7 @@ class ServingEngine:
             return
         tok = jnp.asarray(self.next_token)
         self.state, logits = self._decode(self.params, self.state, tok)
+        self.decode_calls += 1
         nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1), np.int32)
         for slot, req in enumerate(self.slot_req):
             if req is None:

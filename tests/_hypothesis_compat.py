@@ -1,0 +1,34 @@
+"""Optional-hypothesis shim: real ``given``/``settings``/``st`` when the
+package is installed, no-op stand-ins that SKIP the decorated tests when it
+is not (offline containers). Import from here instead of ``hypothesis`` so
+the non-property tests in a module still collect and run."""
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            return pytest.mark.skip(reason="hypothesis not installed")(fn)
+        return deco
+
+    def settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+        return deco
+
+    class _AnyStrategy:
+        """Accepts any strategy constructor call; returns None placeholders
+        (the decorated test is skipped, so values are never drawn)."""
+
+        def __getattr__(self, _name):
+            def _strategy(*_args, **_kwargs):
+                return None
+            return _strategy
+
+    st = _AnyStrategy()

@@ -5,9 +5,15 @@ import os
 # distributed tests set their own XLA_FLAGS.
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
-from hypothesis import HealthCheck, settings
-
-settings.register_profile(
-    "ci", max_examples=20, deadline=None,
-    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large])
-settings.load_profile("ci")
+# hypothesis is optional (offline containers may lack it): register the CI
+# profile only when importable. Property tests themselves are guarded by
+# tests/_hypothesis_compat.py, which skips them when the package is absent.
+try:
+    from hypothesis import HealthCheck, settings
+except ImportError:
+    pass
+else:
+    settings.register_profile(
+        "ci", max_examples=20, deadline=None,
+        suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large])
+    settings.load_profile("ci")

@@ -1,0 +1,52 @@
+"""Data pipeline regression tests: packing loss mask + segment ids."""
+
+import numpy as np
+
+from repro.data import SyntheticLM
+
+
+def _batch(mean_doc_len=16, seq=256, batch=4, seed=11):
+    data = SyntheticLM(vocab_size=97, seq_len=seq, global_batch=batch,
+                       seed=seed, mean_doc_len=mean_doc_len)
+    return data.batch_at(0)
+
+
+def test_batch_has_segment_ids():
+    b = _batch()
+    assert set(b) == {"tokens", "loss_mask", "segment_ids"}
+    seg = b["segment_ids"]
+    assert seg.dtype == np.int32 and seg.shape == b["tokens"].shape
+    # ids start at 0 and increase by exactly 1 at each boundary
+    assert np.all(seg[:, 0] == 0)
+    diffs = np.diff(seg, axis=1)
+    assert np.all((diffs == 0) | (diffs == 1))
+    assert seg.max() > 0, "expected at least one packed boundary at this doc len"
+
+
+def test_loss_mask_zeroes_boundary_and_next_token():
+    """Regression for the np.roll(boundary, 0) no-op: the boundary token
+    (whose prediction crosses documents) AND the first token after it (the
+    recurrence restarts) must be masked; everything else kept."""
+    b = _batch()
+    seg, mask = b["segment_ids"], b["loss_mask"]
+    boundary = np.zeros_like(seg, bool)
+    boundary[:, 1:] = seg[:, 1:] != seg[:, :-1]
+    after = np.zeros_like(boundary)
+    after[:, 1:] = boundary[:, :-1]
+    expected = 1.0 - (boundary | after).astype(np.float32)
+    np.testing.assert_array_equal(mask, expected)
+    # the docstring's promise: the first token AFTER each boundary is zeroed
+    rows, cols = np.nonzero(boundary[:, :-1])
+    assert len(rows) > 0
+    assert np.all(mask[rows, cols + 1] == 0.0)
+
+
+def test_determinism_and_host_sharding_unchanged():
+    a = _batch(seed=3)
+    b = _batch(seed=3)
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k])
+    full = SyntheticLM(97, 64, 4, seed=5)
+    shard0 = SyntheticLM(97, 64, 4, seed=5, num_hosts=2, host_id=0)
+    assert shard0.batch_at(0)["tokens"].shape[0] == 2
+    assert full.batch_at(0)["tokens"].shape[0] == 4

@@ -22,8 +22,19 @@ def run_devices(body: str, n_devices: int = 8, timeout: int = 420) -> str:
     script = textwrap.dedent(f"""
         import os
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={n_devices}"
+        import inspect
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P, NamedSharding
+        # jax < 0.5 compat: AxisType / make_mesh(axis_types=...) landed
+        # later; older versions build Auto meshes by default.
+        if not hasattr(jax.sharding, "AxisType"):
+            class _AxisType:
+                Auto = None
+            jax.sharding.AxisType = _AxisType
+        if "axis_types" not in inspect.signature(jax.make_mesh).parameters:
+            _make_mesh = jax.make_mesh
+            jax.make_mesh = (lambda shape, names, **kw:
+                             _make_mesh(shape, names))
     """) + textwrap.dedent(body)
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(REPO, "src")

@@ -4,8 +4,7 @@ mathematical invariants every kernel relies on."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.online_softmax import (NEG_INF, block_state, finalize,
                                        init_state, merge_states)

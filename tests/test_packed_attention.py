@@ -1,0 +1,187 @@
+"""Segment-aware packed (varlen) attention vs a per-document reference loop:
+forward + all three gradients, across causal/GQA/window, on both the Pallas
+(interpret) kernel and the chunked XLA path; dropout against the packed
+oracle; padding sentinels; model-level packed == per-document equivalence."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.attention import AttentionSpec, attention
+from repro.core.masks import (segment_ids_from_boundaries, segment_mask,
+                              segment_relative_positions)
+from repro.kernels.ops import flash_attention
+from repro.kernels.ref import chunked_attention, standard_attention
+
+TOL = dict(rtol=1e-5, atol=1e-5)
+
+
+def _assert_close_normalized(a, b, name):
+    """Grad comparison in normalized units (repo convention): fp32 roundoff
+    scales with tensor magnitude, the ≤1e-5 criterion is per unit scale."""
+    scale = float(jnp.max(jnp.abs(b))) or 1.0
+    np.testing.assert_allclose(np.asarray(a) / scale, np.asarray(b) / scale,
+                               err_msg=name, **TOL)
+
+
+def _qkv(seed, b, hq, hkv, s, d):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (b, hq, s, d))
+    k = jax.random.normal(ks[1], (b, hkv, s, d))
+    v = jax.random.normal(ks[2], (b, hkv, s, d))
+    return q, k, v
+
+
+def _segments(doc_lens: list[list[int]]) -> np.ndarray:
+    """Per-row document lengths -> (b, s) int32 segment ids."""
+    rows = []
+    for lens in doc_lens:
+        rows.append(np.concatenate([np.full(n, i, np.int32)
+                                    for i, n in enumerate(lens)]))
+    return np.stack(rows)
+
+
+def _spans(seg_row: np.ndarray):
+    s = len(seg_row)
+    bounds = [0] + [i for i in range(1, s) if seg_row[i] != seg_row[i - 1]] + [s]
+    return list(zip(bounds[:-1], bounds[1:]))
+
+
+def per_document_attention(q, k, v, seg, **kw):
+    """Oracle: run standard attention on each document slice independently."""
+    out = np.zeros(q.shape, np.float32)
+    seg = np.asarray(seg)
+    for r in range(q.shape[0]):
+        for a, b in _spans(seg[r]):
+            out[r:r + 1, :, a:b] = standard_attention(
+                q[r:r + 1, :, a:b], k[r:r + 1, :, a:b], v[r:r + 1, :, a:b], **kw)
+    return out
+
+
+def per_document_grads(q, k, v, seg, **kw):
+    def loss(q, k, v):
+        total = 0.0
+        seg_np = np.asarray(seg)
+        for r in range(q.shape[0]):
+            for a, b in _spans(seg_np[r]):
+                o = standard_attention(q[r:r + 1, :, a:b], k[r:r + 1, :, a:b],
+                                       v[r:r + 1, :, a:b], **kw)
+                total = total + (o.astype(jnp.float32) ** 2).sum()
+        return total
+    return jax.grad(loss, argnums=(0, 1, 2))(q, k, v)
+
+
+DOCS = [[30, 40, 30], [55, 45]]          # two rows, different layouts
+
+
+@pytest.mark.parametrize("impl,kw", [
+    ("pallas_causal", dict(causal=True)),
+    ("pallas_noncausal", dict(causal=False)),
+    ("pallas_window", dict(causal=True, window=16)),
+    ("chunked_causal", dict(causal=True)),
+    ("chunked_window", dict(causal=True, window=16)),
+])
+def test_packed_fwd_matches_per_document(impl, kw):
+    q, k, v = _qkv(0, 2, 4, 4, 100, 32)
+    seg = jnp.asarray(_segments(DOCS))
+    ref = per_document_attention(q, k, v, seg, **kw)
+    if impl.startswith("pallas"):
+        o = flash_attention(q, k, v, segment_ids=seg, block_q=32, block_k=32, **kw)
+    else:
+        win = kw.pop("window", None)
+        o = chunked_attention(q, k, v, segment_ids=seg, chunk_size=32,
+                              window=win, **kw)
+    np.testing.assert_allclose(np.asarray(o), ref, **TOL)
+
+
+@pytest.mark.parametrize("hq,hkv", [(4, 2), (8, 1)])
+def test_packed_gqa_fwd_and_grads(hq, hkv):
+    q, k, v = _qkv(1, 2, hq, hkv, 96, 32)
+    seg = jnp.asarray(_segments([[20, 50, 26], [64, 32]]))
+
+    o = flash_attention(q, k, v, causal=True, segment_ids=seg,
+                        block_q=32, block_k=32)
+    ref = per_document_attention(q, k, v, seg, causal=True)
+    np.testing.assert_allclose(np.asarray(o), ref, **TOL)
+
+    gf = jax.grad(lambda q, k, v: (flash_attention(
+        q, k, v, causal=True, segment_ids=seg, block_q=32, block_k=32
+    ) ** 2).sum(), argnums=(0, 1, 2))(q, k, v)
+    gr = per_document_grads(q, k, v, seg, causal=True)
+    for name, a, b in zip("qkv", gf, gr):
+        _assert_close_normalized(a, b, f"d{name}")
+
+
+@pytest.mark.parametrize("path", ["pallas", "chunked"])
+@pytest.mark.parametrize("kw", [dict(causal=True), dict(causal=True, window=24),
+                                dict(causal=False)])
+def test_packed_grads_match_per_document(path, kw):
+    q, k, v = _qkv(2, 2, 2, 2, 80, 16)
+    seg = jnp.asarray(_segments([[25, 55], [40, 24, 16]]))
+
+    if path == "pallas":
+        def loss(q, k, v):
+            return (flash_attention(q, k, v, segment_ids=seg,
+                                    block_q=32, block_k=32, **kw) ** 2).sum()
+    else:
+        def loss(q, k, v):
+            return (chunked_attention(q, k, v, segment_ids=seg,
+                                      chunk_size=32, **kw) ** 2).sum()
+    gf = jax.grad(loss, argnums=(0, 1, 2))(q, k, v)
+    gr = per_document_grads(q, k, v, seg, **kw)
+    for name, a, b in zip("qkv", gf, gr):
+        _assert_close_normalized(a, b, f"d{name}")
+
+
+def test_packed_dropout_matches_oracle_and_masks_cross_segment():
+    """Dropout uses GLOBAL packed coordinates, so the comparison oracle is
+    the packed standard attention with the same segment ids + seed."""
+    q, k, v = _qkv(3, 2, 2, 2, 64, 16)
+    seg = jnp.asarray(_segments([[20, 44], [30, 34]]))
+    kw = dict(causal=True, dropout_p=0.2, dropout_seed=7)
+    o = flash_attention(q, k, v, segment_ids=seg, block_q=32, block_k=32, **kw)
+    o_ref = standard_attention(q, k, v, segment_ids=seg, **kw)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref),
+                               rtol=2e-3, atol=2e-5)
+    # grads under dropout + segments
+    g1 = jax.grad(lambda q: (flash_attention(
+        q, k, v, segment_ids=seg, block_q=32, block_k=32, **kw) ** 2).sum())(q)
+    g2 = jax.grad(lambda q: (standard_attention(
+        q, k, v, segment_ids=seg, **kw) ** 2).sum())(q)
+    scale = float(jnp.max(jnp.abs(g2)))
+    np.testing.assert_allclose(g1 / scale, g2 / scale, rtol=1e-4, atol=1e-5)
+
+
+def test_packed_padding_sentinels():
+    """Sequence length not a block multiple: padded q rows are fully masked
+    (distinct q/kv pad sentinels), so outputs match the unpadded oracle."""
+    q, k, v = _qkv(4, 1, 2, 2, 70, 16)          # 70 % 32 != 0
+    seg = jnp.asarray(_segments([[30, 40]]))
+    o = flash_attention(q, k, v, causal=True, segment_ids=seg,
+                        block_q=32, block_k=32)
+    ref = per_document_attention(q, k, v, seg, causal=True)
+    np.testing.assert_allclose(np.asarray(o), ref, **TOL)
+    assert not np.any(np.isnan(np.asarray(o)))
+
+
+def test_dispatch_segment_ids_all_impls_agree():
+    q, k, v = _qkv(5, 2, 4, 2, 64, 16)
+    seg = jnp.asarray(_segments([[16, 48], [40, 24]]))
+    outs = {}
+    for impl in ("pallas", "chunked", "reference"):
+        spec = AttentionSpec(impl=impl, causal=True, block_q=32, block_k=32,
+                             chunk_size=32)
+        outs[impl] = np.asarray(attention(q, k, v, spec, segment_ids=seg))
+    np.testing.assert_allclose(outs["pallas"], outs["reference"], **TOL)
+    np.testing.assert_allclose(outs["chunked"], outs["reference"], **TOL)
+
+
+def test_segment_helpers():
+    boundary = np.array([[False, False, True, False, True, False]])
+    seg = segment_ids_from_boundaries(boundary)
+    np.testing.assert_array_equal(seg, [[0, 0, 1, 1, 2, 2]])
+    pos = np.asarray(segment_relative_positions(jnp.asarray(seg)))
+    np.testing.assert_array_equal(pos, [[0, 1, 0, 1, 0, 1]])
+    m = np.asarray(segment_mask(jnp.asarray(seg), jnp.asarray(seg)))[0, 0]
+    assert m[0, 1] and not m[0, 2] and m[2, 3] and not m[3, 4]

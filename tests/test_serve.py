@@ -73,3 +73,75 @@ def test_mixed_lengths_interleave(setup):
         prompt = {0: [1], 1: [2, 3, 4, 5, 6], 2: [7, 8]}[r.rid]
         assert r.output == greedy_ref(model, params, prompt,
                                       len(r.output))
+
+
+# ---------------------------------------------------------------------------
+# packed prefill
+# ---------------------------------------------------------------------------
+
+PROMPTS = [[5, 9, 2], [7, 7, 1, 4], [3], [11, 2], [8, 6, 5, 1, 9]]
+
+
+def _run_engine(model, params, *, packed, num_slots=3, n_new=6):
+    eng = ServingEngine(model, params, num_slots=num_slots, capacity=64,
+                        packed_prefill=packed)
+    for p in PROMPTS:
+        eng.submit(p, max_new_tokens=n_new)
+    done = eng.run()
+    return eng, {r.rid: r.output for r in done}
+
+
+def test_packed_prefill_single_call_for_k_requests(setup):
+    """K>1 queued requests must be prefilled by ONE packed model call."""
+    cfg, model, params = setup
+    eng = ServingEngine(model, params, num_slots=4, capacity=64,
+                        packed_prefill=True)
+    for p in PROMPTS[:4]:
+        eng.submit(p, max_new_tokens=4)
+    eng.step()
+    assert eng.prefill_calls == 1
+    assert sum(r is not None for r in eng.slot_req) == 4
+
+
+def test_packed_prefill_identical_to_sequential(setup):
+    """Packed prefill outputs are byte-identical to the sequential batch-1
+    path, with strictly fewer prefill invocations."""
+    cfg, model, params = setup
+    e_seq, out_seq = _run_engine(model, params, packed=False)
+    e_pk, out_pk = _run_engine(model, params, packed=True)
+    assert len(out_pk) == len(PROMPTS)
+    assert out_pk == out_seq
+    assert e_seq.prefill_calls == len(PROMPTS)
+    assert e_pk.prefill_calls < e_seq.prefill_calls
+
+
+def test_packed_prefill_matches_full_context_greedy(setup):
+    cfg, model, params = setup
+    _, out = _run_engine(model, params, packed=True)
+    for rid, output in out.items():
+        assert output == greedy_ref(model, params, PROMPTS[rid], len(output))
+
+
+def test_packed_prefill_single_request_falls_back(setup):
+    """A lone queued request takes the batch-1 path (no packing overhead)."""
+    cfg, model, params = setup
+    eng = ServingEngine(model, params, num_slots=2, capacity=64,
+                        packed_prefill=True)
+    eng.submit([4, 2, 7], max_new_tokens=3)
+    done = eng.run()
+    assert done[0].output == greedy_ref(model, params, [4, 2, 7], 3)
+    assert eng.prefill_calls == 1
+
+
+def test_packed_prefill_eos_at_prefill(setup):
+    """A request whose first generated token is EOS finishes at packed
+    prefill without occupying a decode slot."""
+    cfg, model, params = setup
+    first = greedy_ref(model, params, PROMPTS[0], 1)[0]
+    eng = ServingEngine(model, params, num_slots=3, capacity=64,
+                        eos_id=first, packed_prefill=True)
+    for p in PROMPTS[:3]:
+        eng.submit(p, max_new_tokens=10)
+    done = eng.run()
+    by_rid = {r.rid: r for r in done}
+    assert by_rid[0].output == [first]
