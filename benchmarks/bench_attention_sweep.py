@@ -4,22 +4,59 @@ Offline columns: CPU wall-clock (fwd and fwd+bwd) for Algorithm 0 vs the
 XLA-level Algorithm 1 (flash semantics) vs block-sparse-masked, plus
 compiled peak memory per impl — reproducing the tables' structure (runtime
 grows quadratically for both on CPU where HBM locality is absent, memory
-linear for flash vs quadratic for standard — the Table 21 claim)."""
+linear for flash vs quadratic for standard — the Table 21 claim).
+
+Also reports the mask IR's block-layout skip rates (Prop. 4's sparsity
+fraction s): how many blocks the compiled layout proves skippable for
+causal, sliding-window, and packed-with-padded-tail masks — the packed row
+counts cross-document and padding-tail tiles the dense geometry alone would
+execute.
+
+``run(smoke=True)`` (scripts/ci.sh via ``benchmarks.run --smoke``) shrinks
+the sweep so layout-compiler changes can't silently break the harness.
+"""
 
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from benchmarks.common import time_call
 from repro.core import masks as M
 from repro.kernels.ref import chunked_attention, standard_attention
 
 
-def run() -> list[tuple[str, float, str]]:
+def _layout_skip_rows(seq: int, block: int) -> list[tuple[str, float, str]]:
+    """Skip-rate report from the layout compiler (trace-time, cheap)."""
+    rows = []
+    win = min(256, seq // 4)
+    cases = {
+        "causal": M.MaskSpec(causal=True),
+        f"window{win}": M.MaskSpec(causal=True, window=win),
+    }
+    # packed batch with a padded tail: 3 documents + 25% padding
+    doc = seq // 4
+    ids = np.concatenate([np.full(doc, 0), np.full(doc, 1), np.full(doc, 2),
+                          np.full(seq - 3 * doc, M.SEG_PAD_KV)]).astype(np.int32)
+    q_ids = np.where(ids == M.SEG_PAD_KV, M.SEG_PAD_Q, ids)
+    cases["packed_padded"] = M.MaskSpec(
+        causal=True, q_segment_ids=jnp.asarray(q_ids[None]),
+        kv_segment_ids=jnp.asarray(ids[None]))
+    for name, spec in cases.items():
+        layout = M.compile_block_layout(spec, seq, seq, block, block)
+        rows.append((f"sweep_layout_skiprate_{name}_N{seq}",
+                     M.layout_skip_rate(layout),
+                     f"density={M.layout_density(layout):.3f}"))
+    return rows
+
+
+def run(smoke: bool = False) -> list[tuple[str, float, str]]:
     rows = []
     b, h, d = 2, 4, 64
-    for n in [128, 256, 512, 1024, 2048]:
+    seq_lens = [128, 256] if smoke else [128, 256, 512, 1024, 2048]
+    iters = 1 if smoke else 3
+    for n in seq_lens:
         ks = jax.random.split(jax.random.PRNGKey(n), 3)
         q = jax.random.normal(ks[0], (b, h, n, d))
         k = jax.random.normal(ks[1], (b, h, n, d))
@@ -29,18 +66,18 @@ def run() -> list[tuple[str, float, str]]:
                                                            causal=True))
         f_fla = jax.jit(lambda q, k, v: chunked_attention(
             q, k, v, causal=True, chunk_size=min(256, n)))
-        t_std = time_call(f_std, q, k, v, iters=3, warmup=1)
-        t_fla = time_call(f_fla, q, k, v, iters=3, warmup=1)
+        t_std = time_call(f_std, q, k, v, iters=iters, warmup=1)
+        t_fla = time_call(f_fla, q, k, v, iters=iters, warmup=1)
         rows.append((f"sweep_fwd_standard_N{n}_us", t_std * 1e6, "cpu"))
         rows.append((f"sweep_fwd_flashsem_N{n}_us", t_fla * 1e6, "cpu"))
 
-        if n <= 1024:   # fwd+bwd
+        if n <= 1024 and not smoke:   # fwd+bwd
             g_std = jax.jit(jax.grad(lambda q: f_std(q, k, v).sum()))
             g_fla = jax.jit(jax.grad(lambda q: f_fla(q, k, v).sum()))
             rows.append((f"sweep_fwdbwd_standard_N{n}_us",
-                         time_call(g_std, q, iters=3, warmup=1) * 1e6, "cpu"))
+                         time_call(g_std, q, iters=iters, warmup=1) * 1e6, "cpu"))
             rows.append((f"sweep_fwdbwd_flashsem_N{n}_us",
-                         time_call(g_fla, q, iters=3, warmup=1) * 1e6, "cpu"))
+                         time_call(g_fla, q, iters=iters, warmup=1) * 1e6, "cpu"))
 
         # memory (Table 21): compiled peak temp
         sds = jax.ShapeDtypeStruct((b, h, n, d), jnp.float32)
@@ -51,6 +88,10 @@ def run() -> list[tuple[str, float, str]]:
         rows.append((f"sweep_mem_standard_N{n}_MB", m_std / 1e6, "compiled"))
         rows.append((f"sweep_mem_flashsem_N{n}_MB", m_fla / 1e6,
                      f"reduction={m_std / max(m_fla, 1):.1f}x"))
+
+    # mask IR skip-rate report (Prop. 4 structure, incl. packed padded tail)
+    report_n = 512 if smoke else 4096
+    rows.extend(_layout_skip_rows(report_n, 128))
     return rows
 
 

@@ -69,6 +69,10 @@ def main():
     print(f"\nprefill-call reduction: {seq.prefill_calls}x -> "
           f"{pk.prefill_calls}x ({seq.prefill_calls / pk.prefill_calls:.1f}x "
           f"fewer model invocations, token-identical outputs)")
+    if pk.blocks_total:
+        print(f"packed-prefill layout: {pk.blocks_skipped}/{pk.blocks_total} "
+              f"attention blocks provably SKIP (cross-document + padded "
+              f"tail; last call density {pk.last_prefill_layout_density:.2f})")
 
 
 if __name__ == "__main__":

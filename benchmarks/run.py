@@ -2,14 +2,19 @@
 
     PYTHONPATH=src python -m benchmarks.run            # all (CSV to stdout)
     PYTHONPATH=src python -m benchmarks.run --only fig2
+    PYTHONPATH=src python -m benchmarks.run --smoke    # CI: cheap subset
 
 Prints ``name,us_per_call,derived`` CSV rows (us_per_call is the benchmark's
-primary scalar; unit given in the name)."""
+primary scalar; unit given in the name). ``--smoke`` runs a reduced subset
+(scripts/ci.sh) so harness regressions — e.g. from layout-compiler changes —
+fail CI instead of rotting silently; modules whose ``run`` accepts a
+``smoke`` keyword shrink their sweeps."""
 
 from __future__ import annotations
 
 import argparse
 import importlib
+import inspect
 import sys
 import traceback
 
@@ -19,23 +24,34 @@ MODULES = [
     "benchmarks.bench_table2_gpt2",     # Tables 2 & 4
     "benchmarks.bench_table3_lra",      # Table 3 (+ Fig. 3 memory)
     "benchmarks.bench_table7_kernel",   # Table 7
-    "benchmarks.bench_attention_sweep", # Tables 9-21
+    "benchmarks.bench_attention_sweep", # Tables 9-21 (+ layout skip rates)
     "benchmarks.bench_io_model",        # Theorem 2 / Props. 3-4
+]
+
+SMOKE_MODULES = [
+    "benchmarks.bench_attention_sweep",
+    "benchmarks.bench_io_model",
 ]
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="cheap CI subset with reduced sweep sizes")
     args = ap.parse_args()
+    modules = SMOKE_MODULES if args.smoke else MODULES
     print("name,us_per_call,derived")
     failed = []
-    for mod_name in MODULES:
+    for mod_name in modules:
         if args.only and args.only not in mod_name:
             continue
         try:
             mod = importlib.import_module(mod_name)
-            for name, val, derived in mod.run():
+            kwargs = {}
+            if args.smoke and "smoke" in inspect.signature(mod.run).parameters:
+                kwargs["smoke"] = True
+            for name, val, derived in mod.run(**kwargs):
                 print(f"{name},{val:.6g},{derived}")
             sys.stdout.flush()
         except Exception:

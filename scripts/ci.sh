@@ -1,8 +1,13 @@
 #!/usr/bin/env bash
 # Tier-1 CI entry point (see ROADMAP.md): runs the full test suite on the
-# CPU backend with the repo's src/ layout on PYTHONPATH.
+# CPU backend with the repo's src/ layout on PYTHONPATH, then a benchmark
+# smoke pass so layout-compiler / harness regressions fail here instead of
+# rotting silently.
 set -euo pipefail
 
 cd "$(dirname "$0")/.."
 
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
+
+echo "== benchmark smoke (benchmarks.run --smoke) =="
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.run --smoke

@@ -11,11 +11,18 @@
   * ``reference`` — Algorithm 0 (materializes S/P). The paper's baseline;
                     kept as a first-class impl so every benchmark can
                     compare standard vs flash on equal footing.
-  * ``block_sparse`` — block-sparse FlashAttention (Alg. 5) with a layout.
+  * ``block_sparse`` — the same Pallas path with an Alg. 5 sparse pattern.
+
+There is no block-sparse-vs-dense fork: EVERY Pallas call's masks compile
+to a block layout (``core.masks.compile_block_layout`` in kernels/ops.py);
+"block_sparse" merely adds a sparse pattern to that compilation, and the
+oracles evaluate the same ``core.masks`` fused element mask (DESIGN.md §3).
 
 ``decode_attention(...)`` is the single-token serving path (split-KV flash
 decode kernel or an XLA softmax fallback — decode scores are (b,h,1,L), so
 the XLA path is already O(L) memory; the kernel exists for IO/parallelism).
+Both paths derive key validity from ``masks.decode_kv_valid`` (kv_len +
+window + optional slot mask) and mask with the shared NEG_INF sentinel.
 
 Implementations are numerically interchangeable (tests assert pairwise
 agreement) — exactness is the paper's core claim.
@@ -29,6 +36,7 @@ from typing import Literal
 import jax
 import jax.numpy as jnp
 
+from repro.core import masks
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
 from repro.kernels.flash_decode import flash_decode
@@ -74,13 +82,16 @@ def attention(
     dropout_p = 0.0 if deterministic else spec.dropout_p
     common = dict(causal=spec.causal, window=spec.window, kv_mask=kv_mask,
                   segment_ids=segment_ids, scale=scale, q_offset=q_offset)
-    if spec.impl == "pallas" or (spec.impl == "block_sparse" and block_layout is not None):
+    if spec.impl in ("pallas", "block_sparse"):
+        # One path: every call's masks compile to a block layout inside
+        # kernels/ops.py; "block_sparse" is just the Alg. 5 sparse pattern
+        # folded into the same compilation (and requires one).
+        if spec.impl == "block_sparse" and block_layout is None:
+            raise ValueError("impl=block_sparse requires block_layout")
         return kops.flash_attention(
             q, k, v, dropout_p=dropout_p, dropout_seed=dropout_seed,
             block_q=spec.block_q, block_k=spec.block_k, variant=spec.variant,
             block_layout=block_layout, **common)
-    if spec.impl == "block_sparse":
-        raise ValueError("impl=block_sparse requires block_layout")
     if spec.impl == "chunked":
         if dropout_p > 0.0:
             # chunked XLA path does not implement attention-matrix dropout;
@@ -108,13 +119,14 @@ def decode_attention(
     kv_len: jax.Array,       # (b,) int32
     spec: AttentionSpec,
     *,
+    kv_mask: jax.Array | None = None,   # (b, capacity) True = valid slot
     scale: float | None = None,
 ) -> jax.Array:
     if spec.use_decode_kernel:
         return flash_decode(q, k_cache, v_cache, kv_len,
                             scale=scale, block_k=spec.block_k,
                             num_splits=spec.num_decode_splits,
-                            window=spec.window)
+                            window=spec.window, kv_mask=kv_mask)
     # XLA path: GQA-NATIVE masked softmax over the cache. q is reshaped to
     # (b, hkv, rep, 1, d) and contracted against the UNEXPANDED cache —
     # repeat_kv would broadcast-materialize the cache and force GSPMD to
@@ -131,11 +143,12 @@ def decode_attention(
     qg = q.reshape(b, hkv, rep, sq, d)
     s = jnp.einsum("bkrqd,bksd->bkrqs", qg.astype(jnp.float32),
                    k_cache.astype(jnp.float32)) * scale
-    kvm = jnp.arange(capacity)[None, :] < kv_len[:, None]
-    if spec.window is not None:
-        lo = kv_len[:, None] - spec.window
-        kvm = kvm & (jnp.arange(capacity)[None, :] >= lo)
-    s = jnp.where(kvm[:, None, None, None, :], s, -3e4)
+    # the same validity band the decode kernel compiles its layout from
+    # (kv_len + window + optional slot mask), masked with the one NEG_INF
+    # sentinel every impl shares.
+    kvm = masks.decode_kv_valid(kv_len, capacity, window=spec.window,
+                                kv_mask=kv_mask)
+    s = jnp.where(kvm[:, None, None, None, :], s, masks.NEG_INF)
     m = jnp.max(s, axis=-1, keepdims=True)
     p = jnp.exp(s - m)
     p = p / jnp.sum(p, axis=-1, keepdims=True)

@@ -1,29 +1,159 @@
-"""Mask and block-sparse layout builders.
+"""Mask IR: one declarative ``MaskSpec`` + one layout compiler feeding every
+attention consumer (DESIGN.md §3).
 
-Two granularities:
-  * element masks — additive bias or boolean (batch, q, k) style, used by the
-    reference implementations and the XLA-level chunked attention;
-  * block layouts — uint8 (num_q_blocks, num_kv_blocks) arrays consumed by
-    block-sparse FlashAttention (paper Alg. 5) and by the causal block-skip
-    logic of the dense kernel.
+Three layers:
 
-Layout values: 0 = skip block, 1 = full block (no element mask needed),
-2 = partial block (apply element-level mask inside the kernel).
+  * **MaskSpec** — a declarative description of the attention mask
+    (causal ∧ sliding window ∧ kv padding ∧ packed segments ∧ sparse
+    pattern, plus a query position offset). Built once per call by
+    ``kernels/ops.py`` / dispatch; never interpreted ad hoc.
+  * **element_mask(...)** — the single fused element-level attend-mask
+    function. The Pallas kernels call it per tile (PARTIAL blocks), the
+    oracles call it over full (q, k) ranges; kernel/oracle agreement is by
+    construction because both evaluate the same predicate.
+  * **compile_block_layout(spec, ...)** — lowers a MaskSpec to a block
+    layout: a static ``(nq, nk)`` uint8 numpy array when the mask structure
+    is known at trace time (causal/window/sparse/kv padding tail), widened
+    to a traced ``(b, nq, nk)`` array when data-dependent components
+    (kv_mask, segment ids) participate. The per-block segment min/max
+    reduction happens HERE, once per batch at the XLA level — not per
+    (batch, head, q_block, kv_block) grid step inside each kernel.
+
+Layout values:
+  0 = SKIP          no unmasked element; the kernel never touches the tile
+  1 = FULL          every element unmasked; the kernel drops ALL element
+                    masking (including the packed-segment compare)
+  2 = PARTIAL       apply the fused element mask (geometry + data terms)
+  3 = PARTIAL_DATA  apply only the data terms (kv validity / segments).
+                    Emitted when a geometrically/sparse FULL block is
+                    demoted by a data mask: geometry is provably all-true
+                    (or deliberately overridden by an Alg. 5 sparse
+                    layout), so only validity/isolation terms remain.
+
+Validity and isolation (kv padding, kv_mask, segments) are never dropped by
+a FULL override — a block is only FULL when they are provably all-true.
 """
 
 from __future__ import annotations
+
+import dataclasses
+from typing import Any
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
+# Canonical masked-score sentinel. Large-negative instead of -inf keeps
+# exp/max NaN-free; every impl (kernels, oracles, decode) masks with this.
+NEG_INF = float(-1e30)
+
+# Soft sentinel for guard-free fast paths (chunked causal self-attention):
+# exp(-3e4 - m) underflows to exactly 0.0 in fp32 for any finite real score
+# m, so the fully-masked-row guards can be dropped WHEN every row provably
+# keeps at least one valid key (e.g. its own diagonal).
+NEG_INF_SOFT = float(-3e4)
+
 BLOCK_SKIP = 0
 BLOCK_FULL = 1
 BLOCK_PARTIAL = 2
+BLOCK_PARTIAL_DATA = 3
 
 
 # ---------------------------------------------------------------------------
-# Element-level masks (for references / chunked attention)
+# The fused element-level mask (single source of truth)
+# ---------------------------------------------------------------------------
+
+def element_mask(q_pos, k_pos, *,
+                 causal: bool = False,
+                 window: int | None = None,
+                 kv_valid_len: int | None = None,
+                 kv_valid=None,
+                 q_seg=None,
+                 kv_seg=None):
+    """Fused boolean attend-mask from broadcastable coordinate/row arrays.
+
+    Terms (ANDed): causal ``q_pos >= k_pos``; sliding window
+    ``q_pos - k_pos < window`` (implies causal); static kv validity
+    ``k_pos < kv_valid_len`` (padding tail); traced kv validity
+    ``kv_valid`` (boolean, broadcastable); packed-segment isolation
+    ``q_seg == kv_seg``. Returns ``None`` when no term is active (attend
+    everything) so callers can skip the select entirely.
+
+    All shapes broadcast: kernels pass per-tile ``(bq, 1)``/``(1, bk)``
+    iotas and tile rows; oracles pass full ``(sq, 1)``/``(1, sk)`` ranges
+    and ``(b, 1, 1, sk)``-style rows.
+    """
+    ok = None
+
+    def _and(acc, term):
+        return term if acc is None else acc & term
+
+    if causal or window is not None:
+        ok = _and(ok, q_pos >= k_pos)
+    if window is not None:
+        ok = _and(ok, (q_pos - k_pos) < window)
+    if kv_valid_len is not None:
+        ok = _and(ok, k_pos < kv_valid_len)
+    if kv_valid is not None:
+        ok = _and(ok, kv_valid)
+    if q_seg is not None:
+        ok = _and(ok, q_seg == kv_seg)
+    return ok
+
+
+# ---------------------------------------------------------------------------
+# MaskSpec — the declarative IR
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MaskSpec:
+    """Declarative attention-mask description. Static fields shape the
+    trace; array fields are traced. ``sparse_layout`` is an authoritative
+    Alg. 5 block pattern: its FULL blocks attend fully regardless of
+    geometry (causal/window shape only its PARTIAL blocks' element masks),
+    while validity/isolation terms still apply everywhere."""
+    causal: bool = False
+    window: int | None = None
+    q_offset: int = 0
+    kv_valid_len: int | None = None       # static: keys >= this are padding
+    kv_mask: Any = None                   # (b, sk) bool, traced
+    q_segment_ids: Any = None             # (b, sq) int32, traced
+    kv_segment_ids: Any = None            # (b, sk) int32, traced
+    sparse_layout: Any = None             # static (nq, nk) uint8 pattern
+
+    @property
+    def has_geometry(self) -> bool:
+        """Geometric terms (subject to sparse-FULL override)."""
+        return self.causal or self.window is not None
+
+    @property
+    def has_data(self) -> bool:
+        """Validity/isolation terms (never overridden by FULL)."""
+        return (self.kv_valid_len is not None or self.kv_mask is not None
+                or self.q_segment_ids is not None)
+
+    @property
+    def has_traced(self) -> bool:
+        return self.kv_mask is not None or self.q_segment_ids is not None
+
+    def element_mask(self, q_len: int, k_len: int):
+        """Full-range fused mask: (b, 1, q, k) if traced terms participate,
+        (q, k) otherwise, or None if unmasked. Oracle-side lowering."""
+        q_pos = jnp.arange(q_len)[:, None] + self.q_offset
+        k_pos = jnp.arange(k_len)[None, :]
+        return element_mask(
+            q_pos, k_pos, causal=self.causal, window=self.window,
+            kv_valid_len=self.kv_valid_len,
+            kv_valid=(self.kv_mask[:, None, None, :]
+                      if self.kv_mask is not None else None),
+            q_seg=(self.q_segment_ids[:, None, :, None]
+                   if self.q_segment_ids is not None else None),
+            kv_seg=(self.kv_segment_ids[:, None, None, :]
+                    if self.kv_segment_ids is not None else None))
+
+
+# ---------------------------------------------------------------------------
+# Element-level convenience masks (oracles / bias construction)
 # ---------------------------------------------------------------------------
 
 def causal_mask(q_len: int, k_len: int, q_offset: int = 0) -> jnp.ndarray:
@@ -31,20 +161,34 @@ def causal_mask(q_len: int, k_len: int, q_offset: int = 0) -> jnp.ndarray:
     positions (used when q is a suffix of the kv sequence, e.g. decode)."""
     q_pos = jnp.arange(q_len)[:, None] + q_offset
     k_pos = jnp.arange(k_len)[None, :]
-    return q_pos >= k_pos
+    return element_mask(q_pos, k_pos, causal=True)
 
 
 def sliding_window_mask(q_len: int, k_len: int, window: int, q_offset: int = 0) -> jnp.ndarray:
     """Causal sliding window: attend to keys in (pos - window, pos]."""
     q_pos = jnp.arange(q_len)[:, None] + q_offset
     k_pos = jnp.arange(k_len)[None, :]
-    return (q_pos >= k_pos) & (q_pos - k_pos < window)
+    return element_mask(q_pos, k_pos, causal=True, window=window)
 
 
 def padding_mask_to_bias(kv_mask: jnp.ndarray, dtype=jnp.float32) -> jnp.ndarray:
     """(batch, k) boolean -> (batch, 1, 1, k) additive bias."""
-    neg = jnp.asarray(-1e30, dtype)
+    neg = jnp.asarray(NEG_INF, dtype)
     return jnp.where(kv_mask[:, None, None, :], jnp.asarray(0.0, dtype), neg)
+
+
+def decode_kv_valid(kv_len: jnp.ndarray, capacity: int, *,
+                    window: int | None = None,
+                    kv_mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """(b,) valid lengths -> (b, capacity) key validity for one-token decode.
+
+    Decode IS the fused mask with ``q_pos = kv_len - 1``: causality gives
+    ``k_pos < kv_len`` and the window term keeps the last ``window`` valid
+    cache positions — the same semantics as the prefill kernels.
+    """
+    k_pos = jnp.arange(capacity)[None, :]
+    return element_mask((kv_len - 1)[:, None], k_pos, causal=True,
+                        window=window, kv_valid=kv_mask)
 
 
 # ---------------------------------------------------------------------------
@@ -120,27 +264,28 @@ def segment_ids_from_boundaries(boundary: np.ndarray) -> np.ndarray:
 
 
 # ---------------------------------------------------------------------------
-# Block layouts (for block-sparse FlashAttention, Alg. 5)
+# Static block-layout builders (vectorized numpy — trace-time structure)
 # ---------------------------------------------------------------------------
+
+def _block_bounds(n_len: int, block: int, offset: int = 0):
+    """Per-block inclusive [lo, hi] position ranges (ragged tail capped)."""
+    n = (n_len + block - 1) // block
+    idx = np.arange(n)
+    lo = idx * block + offset
+    hi = np.minimum((idx + 1) * block, n_len) - 1 + offset
+    return lo, hi
+
 
 def causal_block_layout(q_len: int, k_len: int, block_q: int, block_k: int,
                         q_offset: int = 0) -> np.ndarray:
     """Causal layout: blocks fully below diagonal FULL, diagonal PARTIAL,
     above SKIP. Static numpy (mask structure is compile-time)."""
-    nq = (q_len + block_q - 1) // block_q
-    nk = (k_len + block_k - 1) // block_k
-    out = np.zeros((nq, nk), np.uint8)
-    for i in range(nq):
-        q_lo = i * block_q + q_offset
-        q_hi = min((i + 1) * block_q, q_len) - 1 + q_offset
-        for j in range(nk):
-            k_lo = j * block_k
-            k_hi = min((j + 1) * block_k, k_len) - 1
-            if q_lo >= k_hi:
-                out[i, j] = BLOCK_FULL
-            elif q_hi >= k_lo:
-                out[i, j] = BLOCK_PARTIAL
-    return out
+    q_lo, q_hi = _block_bounds(q_len, block_q, q_offset)
+    k_lo, k_hi = _block_bounds(k_len, block_k)
+    full = q_lo[:, None] >= k_hi[None, :]
+    run = q_hi[:, None] >= k_lo[None, :]
+    return np.where(full, BLOCK_FULL,
+                    np.where(run, BLOCK_PARTIAL, BLOCK_SKIP)).astype(np.uint8)
 
 
 def full_block_layout(q_len: int, k_len: int, block_q: int, block_k: int) -> np.ndarray:
@@ -160,17 +305,15 @@ def butterfly_block_layout(q_len: int, k_len: int, block_q: int, block_k: int,
     """
     nq = (q_len + block_q - 1) // block_q
     nk = (k_len + block_k - 1) // block_k
-    out = np.zeros((nq, nk), np.uint8)
     n = max(nq, nk)
     root = max(1, int(round(np.sqrt(n))))
-    for i in range(nq):
-        for j in range(nk):
-            keep = abs(i - j) <= 1                      # local band
-            keep |= (i % root) == (j % root)            # butterfly stride
-            d = abs(i - j)
-            keep |= d > 0 and (d & (d - 1)) == 0        # power-of-two offsets
-            if keep:
-                out[i, j] = BLOCK_FULL
+    i = np.arange(nq)[:, None]
+    j = np.arange(nk)[None, :]
+    dist = np.abs(i - j)
+    keep = ((dist <= 1)                                  # local band
+            | ((i % root) == (j % root))                 # butterfly stride
+            | ((dist > 0) & ((dist & (dist - 1)) == 0))) # power-of-two offsets
+    out = np.where(keep, BLOCK_FULL, BLOCK_SKIP).astype(np.uint8)
     if causal:
         out = np.minimum(out, causal_block_layout(q_len, k_len, block_q, block_k))
     return out
@@ -179,41 +322,209 @@ def butterfly_block_layout(q_len: int, k_len: int, block_q: int, block_k: int,
 def sliding_window_block_layout(q_len: int, k_len: int, block_q: int, block_k: int,
                                 window: int, q_offset: int = 0) -> np.ndarray:
     """Block layout for a causal sliding-window mask (Hymba / long-context)."""
+    q_lo, q_hi = _block_bounds(q_len, block_q, q_offset)
+    k_lo, k_hi = _block_bounds(k_len, block_k)
+    # overlap of [q_lo, q_hi] x [k_lo, k_hi] with the band k <= q < k + window
+    outside = ((q_lo[:, None] > k_hi[None, :] + window - 1)
+               | (q_hi[:, None] < k_lo[None, :]))
+    fully_inside = ((q_lo[:, None] >= k_hi[None, :])
+                    & ((q_hi[:, None] - k_lo[None, :]) < window))
+    return np.where(outside, BLOCK_SKIP,
+                    np.where(fully_inside, BLOCK_FULL,
+                             BLOCK_PARTIAL)).astype(np.uint8)
+
+
+# ---------------------------------------------------------------------------
+# Traced block classifiers (data-dependent components, one XLA pass / batch)
+# ---------------------------------------------------------------------------
+
+def kv_block_layout(kv_valid: jnp.ndarray, block_k: int) -> jnp.ndarray:
+    """(b, sk) boolean key validity -> (b, nk) uint8 per-kv-block classes.
+
+    All valid -> FULL, none -> SKIP, else PARTIAL. Used for kv padding
+    masks and for the decode kernel's kv_len/window band (sk % block_k == 0).
+    """
+    b, sk = kv_valid.shape
+    r = kv_valid.reshape(b, sk // block_k, block_k)
+    allv = jnp.all(r, axis=-1)
+    anyv = jnp.any(r, axis=-1)
+    return jnp.where(allv, BLOCK_FULL,
+                     jnp.where(anyv, BLOCK_PARTIAL, BLOCK_SKIP))
+
+
+def segment_block_layout(q_segment_ids: jnp.ndarray,
+                         kv_segment_ids: jnp.ndarray,
+                         block_q: int, block_k: int) -> jnp.ndarray:
+    """(b, sq) x (b, sk) ids -> (b, nq, nk) uint8 segment block classes.
+
+    Per-block id [min, max] ranges, reduced ONCE per batch at the XLA level
+    (the kernels previously recomputed this per (b, h, qi, ki) grid step).
+    Disjoint ranges -> SKIP (sound for any id ordering: disjoint ranges
+    contain no equal pair). Both blocks uniform with the same id -> FULL
+    (the element compare is provably all-true). Else PARTIAL.
+    """
+    b, sq = q_segment_ids.shape
+    _, sk = kv_segment_ids.shape
+    qr = q_segment_ids.reshape(b, sq // block_q, block_q)
+    kr = kv_segment_ids.reshape(b, sk // block_k, block_k)
+    qmin, qmax = jnp.min(qr, -1)[:, :, None], jnp.max(qr, -1)[:, :, None]
+    kmin, kmax = jnp.min(kr, -1)[:, None, :], jnp.max(kr, -1)[:, None, :]
+    intersect = (qmin <= kmax) & (kmin <= qmax)
+    uniform = (qmin == qmax) & (kmin == kmax) & (qmin == kmin)
+    return jnp.where(intersect,
+                     jnp.where(uniform, BLOCK_FULL, BLOCK_PARTIAL),
+                     BLOCK_SKIP)
+
+
+def combine_block_layouts(layout, data):
+    """Fold a data-mask block classification into a layout.
+
+    SKIP dominates. A data-PARTIAL demotes FULL to PARTIAL_DATA (geometry
+    is provably all-true or sparse-overridden there — only the data terms
+    need applying) and leaves PARTIAL/PARTIAL_DATA as they are.
+    Works for numpy (static x static) and jnp (anything traced).
+    """
+    xp = np if isinstance(layout, np.ndarray) and isinstance(data, np.ndarray) else jnp
+    run = (layout != BLOCK_SKIP) & (data != BLOCK_SKIP)
+    demoted = xp.where(data == BLOCK_FULL, layout,
+                       xp.where(layout == BLOCK_PARTIAL, BLOCK_PARTIAL,
+                                BLOCK_PARTIAL_DATA))
+    return xp.where(run, demoted, BLOCK_SKIP)
+
+
+# ---------------------------------------------------------------------------
+# The layout compiler: MaskSpec -> block layout
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BlockLayout:
+    """Compiled block layout. ``layout`` is a static (nq, nk) numpy uint8
+    array when the spec has no traced components, else a traced
+    (b, nq, nk) array."""
+    layout: Any
+    block_q: int
+    block_k: int
+    q_len: int
+    k_len: int
+
+    @property
+    def is_static(self) -> bool:
+        return isinstance(self.layout, np.ndarray)
+
+    def as_array(self) -> jnp.ndarray:
+        """Kernel-operand form (int32; uint8 loads are awkward on TPU)."""
+        return jnp.asarray(self.layout, jnp.int32)
+
+    def density(self) -> float:
+        """Fraction of non-skipped blocks (Prop. 4's sparsity fraction s)."""
+        return layout_density(self)
+
+    def skip_count(self) -> int:
+        return int(jnp.sum(jnp.asarray(self.layout) == BLOCK_SKIP))
+
+    def block_count(self) -> int:
+        return int(np.prod(jnp.asarray(self.layout).shape))
+
+
+def compile_block_layout(spec: MaskSpec, q_len: int, k_len: int,
+                         block_q: int, block_k: int) -> BlockLayout:
+    """Lower a MaskSpec to a block layout (see module docstring).
+
+    Static lowering (numpy, vectorized): sparse pattern if given (Alg. 5 —
+    authoritative over geometry), else causal/window classification, else
+    all-FULL; then the static kv padding tail (``kv_valid_len``). Traced
+    widening (XLA, once per batch): kv_mask block classes and packed-segment
+    range classes fold in via ``combine_block_layouts``.
+
+    Traced components require q_len/k_len divisible by the block sizes
+    (kernels compile on padded lengths — ``ops.py`` guarantees this).
+    """
     nq = (q_len + block_q - 1) // block_q
     nk = (k_len + block_k - 1) // block_k
-    out = np.zeros((nq, nk), np.uint8)
-    for i in range(nq):
-        q_lo = i * block_q + q_offset
-        q_hi = min((i + 1) * block_q, q_len) - 1 + q_offset
-        for j in range(nk):
-            k_lo = j * block_k
-            k_hi = min((j + 1) * block_k, k_len) - 1
-            # overlap of [q_lo, q_hi] x [k_lo, k_hi] with the band k <= q < k + window
-            if q_lo > k_hi + window - 1 or q_hi < k_lo:
-                continue  # entirely outside band
-            fully_inside = (q_lo >= k_hi) and (q_hi - k_lo < window)
-            out[i, j] = BLOCK_FULL if fully_inside else BLOCK_PARTIAL
-    return out
+
+    if spec.sparse_layout is not None:
+        static = np.asarray(spec.sparse_layout, np.uint8)
+        if static.shape != (nq, nk):
+            raise ValueError(
+                f"sparse_layout shape {static.shape} != block grid ({nq}, {nk}) "
+                f"for lengths ({q_len}, {k_len}) and blocks ({block_q}, {block_k})")
+    elif spec.window is not None:
+        static = sliding_window_block_layout(q_len, k_len, block_q, block_k,
+                                             spec.window, spec.q_offset)
+    elif spec.causal:
+        static = causal_block_layout(q_len, k_len, block_q, block_k,
+                                     spec.q_offset)
+    else:
+        static = full_block_layout(q_len, k_len, block_q, block_k)
+
+    if spec.kv_valid_len is not None and spec.kv_valid_len < k_len:
+        k_lo, k_hi = _block_bounds(k_len, block_k)
+        tail = np.where(k_lo >= spec.kv_valid_len, BLOCK_SKIP,
+                        np.where(k_hi >= spec.kv_valid_len, BLOCK_PARTIAL,
+                                 BLOCK_FULL)).astype(np.uint8)
+        static = combine_block_layouts(static, tail[None, :]).astype(np.uint8)
+
+    if not spec.has_traced:
+        return BlockLayout(static, block_q, block_k, q_len, k_len)
+
+    if q_len % block_q or k_len % block_k:
+        raise ValueError(
+            "traced mask components (kv_mask / segment ids) require lengths "
+            f"divisible by block sizes, got ({q_len}, {k_len}) vs "
+            f"({block_q}, {block_k})")
+    layout = jnp.asarray(static, jnp.int32)[None]          # (1, nq, nk)
+    if spec.kv_mask is not None:
+        col = kv_block_layout(spec.kv_mask, block_k)       # (b, nk)
+        layout = combine_block_layouts(layout, col[:, None, :])
+    if spec.q_segment_ids is not None:
+        seg = segment_block_layout(spec.q_segment_ids, spec.kv_segment_ids,
+                                   block_q, block_k)       # (b, nq, nk)
+        layout = combine_block_layouts(layout, seg)
+    return BlockLayout(layout, block_q, block_k, q_len, k_len)
 
 
-def layout_density(layout: np.ndarray) -> float:
+# ---------------------------------------------------------------------------
+# Layout introspection / oracle expansion
+# ---------------------------------------------------------------------------
+
+def layout_density(layout) -> float:
     """Fraction s of non-skipped blocks (Prop. 4's sparsity fraction)."""
-    return float((layout != BLOCK_SKIP).mean())
+    arr = layout.layout if isinstance(layout, BlockLayout) else layout
+    return float(jnp.mean(jnp.asarray(arr) != BLOCK_SKIP))
 
 
-def layout_to_element_mask(layout: np.ndarray, block_q: int, block_k: int,
+def layout_skip_rate(layout) -> float:
+    """Fraction of SKIP blocks — work provably avoided at block level."""
+    return 1.0 - layout_density(layout)
+
+
+def layout_to_element_mask(layout, block_q: int, block_k: int,
                            q_len: int, k_len: int,
-                           base_mask: jnp.ndarray | None = None) -> jnp.ndarray:
-    """Expand a block layout to a (q, k) boolean mask for oracle checking.
+                           base_mask: jnp.ndarray | None = None,
+                           data_mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Expand a block layout to a boolean element mask for oracle checking.
 
-    PARTIAL blocks intersect with base_mask (e.g. causal); FULL blocks are
-    all-True; SKIP all-False.
+    FULL blocks are all-True, SKIP all-False; PARTIAL blocks intersect with
+    ``base_mask`` (the fused geometry+data mask) and PARTIAL_DATA blocks
+    with ``data_mask`` (defaults to ``base_mask``). Accepts a static
+    (nq, nk) or traced (b, nq, nk) layout (result gains the batch dim);
+    4-D ``(b, 1, q, k)`` masks (MaskSpec.element_mask's batched shape) are
+    squeezed so the batch dims align instead of cross-broadcasting.
     """
-    grid = jnp.asarray(layout)
+    grid = jnp.asarray(layout.layout if isinstance(layout, BlockLayout)
+                       else layout)
     qb = jnp.arange(q_len) // block_q
     kb = jnp.arange(k_len) // block_k
-    blk = grid[qb[:, None], kb[None, :]]
+    blk = grid[..., qb[:, None], kb[None, :]]
     mask = blk != BLOCK_SKIP
+    if data_mask is None:
+        data_mask = base_mask
+
+    def _align(m):
+        return m[:, 0] if (m is not None and m.ndim == 4) else m
+
+    base_mask, data_mask = _align(base_mask), _align(data_mask)
     if base_mask is not None:
-        mask = mask & jnp.where(blk == BLOCK_FULL, True, base_mask)
+        part = jnp.where(blk == BLOCK_PARTIAL_DATA, data_mask, base_mask)
+        mask = mask & jnp.where(blk == BLOCK_FULL, True, part)
     return mask

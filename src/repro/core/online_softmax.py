@@ -27,7 +27,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-NEG_INF = float(-1e30)  # large-negative instead of -inf: keeps exp/max NaN-free
+from repro.core.masks import NEG_INF  # one masked-score sentinel, everywhere
 
 
 class SoftmaxState(NamedTuple):

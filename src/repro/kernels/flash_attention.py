@@ -1,6 +1,6 @@
 """FlashAttention forward + backward Pallas TPU kernels (paper Alg. 1/2/4).
 
-TPU adaptation of the paper's CUDA kernel (see DESIGN.md §2/§6):
+TPU adaptation of the paper's CUDA kernel (see DESIGN.md §2/§3/§6):
   * grid = (batch, q_heads, num_q_blocks, num_kv_blocks) — the kv axis is the
     innermost (sequential on TPU), and the running softmax state (m, l, acc)
     lives in VMEM scratch that persists across kv steps. This is Algorithm 1
@@ -10,24 +10,31 @@ TPU adaptation of the paper's CUDA kernel (see DESIGN.md §2/§6):
     optimization, recorded separately in EXPERIMENTS.md §Perf).
   * Q/K/V tiles are staged HBM→VMEM by BlockSpecs; S/P tiles never leave
     VMEM — the IO behaviour the paper proves Θ(N²d²M⁻¹) about.
-  * causal / sliding-window blocks that are fully masked are skipped with
-    pl.when (block-level skip — the TPU analogue of not launching the tile).
+  * masks arrive COMPILED: every call carries a block layout lowered from a
+    `core.masks.MaskSpec` (static (nq, nk) for trace-time masks, traced
+    (b, nq, nk) when kv_mask / segment ids participate). The layout is the
+    single source of block-run truth: SKIP tiles never run (pl.when — the
+    TPU analogue of not launching the tile; Alg. 5's skip applied to causal/
+    window geometry, kv padding tails, and cross-document tiles alike),
+    FULL tiles run with NO element-level masking at all (not even the
+    packed-segment compare — the compiler only emits FULL when every term
+    is provably true or sparse-overridden), PARTIAL tiles apply the one
+    fused element mask (`core.masks.element_mask`), and PARTIAL_DATA tiles
+    apply only its validity/isolation terms. No geometric or segment
+    predicate is re-derived per grid step in-kernel.
   * dropout uses a counter-based hash of the GLOBAL element coordinates
     (seed, b, h, q_pos, k_pos) — a pure function, so the backward pass
     regenerates the identical mask with zero HBM traffic. This replaces the
     paper's "save the Philox state ℛ" (Alg. 2 line 1) TPU-idiomatically.
-  * packed segments (varlen): optional q/kv segment-id tiles mask s where
-    q_seg != kv_seg (on top of causal/window/kv_mask), and a tile whose
-    segment ranges provably don't intersect is skipped at block level —
-    the Alg. 5 block-sparse idea applied to packing (DESIGN.md §8).
   * GQA: kv BlockSpec index_map divides the head index by the group size, so
     grouped heads re-read the same kv tile from HBM (matches production TPU
     kernels; the tile is VMEM-resident across the group on real hardware).
   * backward = two kernels, as the paper's Alg. 4 + no-atomics constraint
     demands on TPU: a dq kernel (grid over q blocks, kv innermost) and a
     dkv kernel (grid over kv blocks, q innermost). Both recompute S and P
-    from (q, k, m, l) tiles (the paper's recomputation trick) and regenerate
-    the dropout mask.
+    from (q, k, m, l) tiles (the paper's recomputation trick), regenerate
+    the dropout mask, and consume the SAME compiled layout as the forward
+    (it rides the custom_vjp residuals in ops.py).
 
 Validated in interpret mode against kernels/ref.py oracles (exact math,
 fp32 accumulation) — see tests/test_kernels_flash.py.
@@ -42,7 +49,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-NEG_INF = float(-1e30)
+from repro.core import masks as M
+from repro.core.masks import NEG_INF
+
 LANES = 128  # TPU vreg lane count; m/l scratch is lane-replicated.
 
 
@@ -73,79 +82,66 @@ def _dropout_keep(seed, b, h, q0, k0, bq, bk, num_heads, q_len, k_len, p_drop):
     return r >= threshold
 
 
-def _attend_mask(q0, k0, bq, bk, causal, window):
-    """(bq, bk) boolean attend-mask for a tile at global origin (q0, k0).
-    q0 already includes the query position offset."""
-    q_pos = q0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
-    k_pos = k0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
-    ok = jnp.ones((bq, bk), jnp.bool_)
-    if causal or window is not None:
-        ok &= q_pos >= k_pos
-    if window is not None:
-        ok &= (q_pos - k_pos) < window
-    return ok
+def _layout_block(layout_ref):
+    """Read this tile's compiled layout value (static rank-2 or traced
+    rank-3 layout; BlockSpecs deliver a single-element tile either way)."""
+    if len(layout_ref.shape) == 2:
+        return layout_ref[0, 0]
+    return layout_ref[0, 0, 0]
 
 
-def _block_should_run(qi, ki, bq, bk, q_offset, causal, window):
-    """Static-shape predicate: does tile (qi, ki) contain any unmasked pair?"""
-    run = jnp.bool_(True)
-    q_lo = qi * bq + q_offset
-    q_hi = q_lo + bq - 1
-    k_lo = ki * bk
-    k_hi = k_lo + bk - 1
-    if causal or window is not None:
-        run &= q_hi >= k_lo                      # some query at/after some key
-    if window is not None:
-        run &= (q_lo - k_hi) < window            # some key within the window
-    return run
+def _tile_mask(qi, ki, bq, bk, q_offset, *, causal, window, kv_valid_len,
+               kvm_ref, qseg_ref, kseg_ref, geometry):
+    """The fused element mask (core.masks.element_mask) for tile (qi, ki).
 
-
-def _run_and_mask(layout_ref, qi, ki, bq, bk, q_offset, causal, window,
-                  qseg_ref=None, kseg_ref=None):
-    """Block-run predicate + element-mask applicability.
-
-    Dense path (layout_ref is None): geometry decides both.
-    Block-sparse path (Alg. 5): the prefetched layout decides — 0 skip,
-    1 full (no element mask), 2 partial (apply base causal/window mask).
-    Packed segments (qseg/kseg present): a tile whose q-segment range
-    provably misses the kv-segment range is skipped — the Alg. 5 block-skip
-    idea applied to packing. Range disjointness implies no equal id pair
-    regardless of id ordering, so the skip is sound for any layout; the
-    element-level segment mask (applied separately in the compute body)
-    carries correctness.
-    Returns (run, apply_mask, full_override) where full_override is a traced
-    bool that disables the geometric element mask for FULL blocks.
+    ``geometry=False`` drops the causal/window terms (PARTIAL_DATA blocks:
+    the compiler proved them all-true, or an Alg. 5 sparse layout overrides
+    them); validity/isolation terms always apply. Returns None if no term
+    is active.
     """
-    if layout_ref is None:
-        run = _block_should_run(qi, ki, bq, bk, q_offset, causal, window)
-        apply_mask, full_override = (causal or window is not None), None
-    else:
-        blk = layout_ref[0, 0]
-        run = blk != 0
-        apply_mask, full_override = (causal or window is not None), blk == 1
-    if qseg_ref is not None:
-        qs, ks = qseg_ref[0], kseg_ref[0]
-        run = run & (jnp.min(qs) <= jnp.max(ks)) & (jnp.min(ks) <= jnp.max(qs))
-    return run, apply_mask, full_override
+    q_pos = qi * bq + q_offset + jax.lax.broadcasted_iota(jnp.int32, (bq, 1), 0)
+    k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
+    return M.element_mask(
+        q_pos, k_pos,
+        causal=causal if geometry else False,
+        window=window if geometry else None,
+        kv_valid_len=kv_valid_len,
+        kv_valid=kvm_ref[0][None, :] if kvm_ref is not None else None,
+        q_seg=qseg_ref[0][:, None] if qseg_ref is not None else None,
+        kv_seg=kseg_ref[0][None, :] if kseg_ref is not None else None)
 
 
-def _segment_s_mask(qseg_ref, kseg_ref, s):
-    """Apply the element-level same-segment mask to a score tile. Kept
-    separate from the geometric mask: block-sparse FULL blocks may drop the
-    causal mask but must never drop segment isolation."""
-    if qseg_ref is None:
-        return s
-    ok = qseg_ref[0][:, None] == kseg_ref[0][None, :]
-    return jnp.where(ok, s, NEG_INF)
+def _layout_branches(blk, step, *, causal, window, kv_valid_len,
+                     kvm_ref, qseg_ref):
+    """Instantiate the per-class compute branches for one grid step.
+
+    ``step(mode)`` runs the tile body with mode in {"none", "geo_data",
+    "data"} controlling which element-mask terms apply. Exactly one branch
+    executes per tile; SKIP tiles execute none (the block-level skip).
+    Branches a call can never reach (e.g. PARTIAL_DATA without data terms)
+    are not instantiated.
+    """
+    has_geo = causal or window is not None
+    has_data = (kv_valid_len is not None or kvm_ref is not None
+                or qseg_ref is not None)
+    if not (has_geo or has_data):
+        # maskless call (or a pure sparse pattern): any non-skip tile runs
+        # unmasked — PARTIAL without active terms is element-wise FULL.
+        pl.when(blk != M.BLOCK_SKIP)(lambda: step("none"))
+        return
+    pl.when(blk == M.BLOCK_PARTIAL)(lambda: step("geo_data"))
+    pl.when(blk == M.BLOCK_FULL)(lambda: step("none"))
+    if has_data:
+        pl.when(blk == M.BLOCK_PARTIAL_DATA)(lambda: step("data"))
 
 
 # ---------------------------------------------------------------------------
 # forward kernel
 # ---------------------------------------------------------------------------
 
-def _fwd_kernel(seed_ref, q_ref, k_ref, v_ref, kvm_ref, qseg_ref, kseg_ref,
-                layout_ref, o_ref, m_ref, l_ref, acc_sc, m_sc, l_sc, *,
-                scale, causal, window, q_offset, dropout_p,
+def _fwd_kernel(seed_ref, q_ref, k_ref, v_ref, layout_ref, kvm_ref, qseg_ref,
+                kseg_ref, o_ref, m_ref, l_ref, acc_sc, m_sc, l_sc, *,
+                scale, causal, window, q_offset, kv_valid_len, dropout_p,
                 num_heads, q_len, k_len, variant):
     b, h = pl.program_id(0), pl.program_id(1)
     qi, ki = pl.program_id(2), pl.program_id(3)
@@ -159,12 +155,7 @@ def _fwd_kernel(seed_ref, q_ref, k_ref, v_ref, kvm_ref, qseg_ref, kseg_ref,
         l_sc[...] = jnp.zeros_like(l_sc)
         acc_sc[...] = jnp.zeros_like(acc_sc)
 
-    run, apply_mask, full_override = _run_and_mask(
-        layout_ref, qi, ki, bq, bk, q_offset, causal, window,
-        qseg_ref, kseg_ref)
-
-    @pl.when(run)
-    def _compute():
+    def _step(mode):
         q = q_ref[0, 0].astype(jnp.float32)
         k = k_ref[0, 0].astype(jnp.float32)
         v = v_ref[0, 0].astype(jnp.float32)
@@ -173,14 +164,13 @@ def _fwd_kernel(seed_ref, q_ref, k_ref, v_ref, kvm_ref, qseg_ref, kseg_ref,
 
         q0 = qi * bq + q_offset
         k0 = ki * bk
-        if apply_mask:
-            ok = _attend_mask(q0, k0, bq, bk, causal, window)
-            if full_override is not None:
-                ok = ok | full_override
-            s = jnp.where(ok, s, NEG_INF)
-        if kvm_ref is not None:
-            s = jnp.where(kvm_ref[0][None, :], s, NEG_INF)
-        s = _segment_s_mask(qseg_ref, kseg_ref, s)
+        if mode != "none":
+            ok = _tile_mask(qi, ki, bq, bk, q_offset, causal=causal,
+                            window=window, kv_valid_len=kv_valid_len,
+                            kvm_ref=kvm_ref, qseg_ref=qseg_ref,
+                            kseg_ref=kseg_ref, geometry=(mode == "geo_data"))
+            if ok is not None:
+                s = jnp.where(ok, s, NEG_INF)
 
         m_prev = m_sc[:, 0]
         l_prev = l_sc[:, 0]
@@ -210,6 +200,10 @@ def _fwd_kernel(seed_ref, q_ref, k_ref, v_ref, kvm_ref, qseg_ref, kseg_ref,
         m_sc[...] = jnp.broadcast_to(m_new[:, None], m_sc.shape)
         l_sc[...] = jnp.broadcast_to(l_new[:, None], l_sc.shape)
 
+    _layout_branches(_layout_block(layout_ref), _step, causal=causal,
+                     window=window, kv_valid_len=kv_valid_len,
+                     kvm_ref=kvm_ref, qseg_ref=qseg_ref)
+
     @pl.when(ki == nk - 1)
     def _finalize():
         l = l_sc[:, 0]
@@ -227,25 +221,28 @@ def _fwd_kernel(seed_ref, q_ref, k_ref, v_ref, kvm_ref, qseg_ref, kseg_ref,
 def flash_attention_forward(
     q: jax.Array, k: jax.Array, v: jax.Array,
     kv_mask: jax.Array | None,
+    block_layout: jax.Array,
     *,
     scale: float, causal: bool, window: int | None, q_offset: int,
+    kv_valid_len: int | None = None,
     dropout_p: float, dropout_seed=0,
     block_q: int, block_k: int, variant: str = "fa2",
     dropout_dims: tuple[int, int] | None = None,
-    block_layout: jax.Array | None = None,
     q_segment_ids: jax.Array | None = None,
     kv_segment_ids: jax.Array | None = None,
     interpret: bool = True,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Returns (o, m, l). Shapes: q (b,hq,sq,d), k/v (b,hkv,sk,d),
     kv_mask (b, sk) or None. sq % block_q == 0 and sk % block_k == 0
-    (ops.py pads). dropout_seed may be a traced scalar (no retrace per
-    step). dropout_dims = (orig_q_len, orig_k_len) keeps the counter-based
-    dropout hash independent of padding. block_layout (nq, nk) uint8
-    activates block-sparse FlashAttention (Alg. 5). q/kv_segment_ids
-    ((b, sq) / (b, sk) int32, both or neither) isolate packed documents:
-    s is masked where q_seg != kv_seg, and tiles with provably disjoint
-    segment ranges are skipped at block level."""
+    (ops.py pads). ``block_layout`` is the COMPILED layout from
+    ``core.masks.compile_block_layout`` — (nq, nk) int32 static or
+    (b, nq, nk) traced — and is the single source of block-run truth.
+    ``kv_valid_len`` statically marks the kv padding tail (keys >= it are
+    invalid); ``q/kv_segment_ids`` ((b, sq) / (b, sk) int32, both or
+    neither) feed the PARTIAL-block element compare. dropout_seed may be a
+    traced scalar (no retrace per step); dropout_dims = (orig_q_len,
+    orig_k_len) keeps the counter-based dropout hash independent of
+    padding."""
     b, hq, sq, d = q.shape
     _, hkv, sk, _ = k.shape
     n_rep = hq // hkv
@@ -255,7 +252,7 @@ def flash_attention_forward(
 
     kernel = functools.partial(
         _fwd_kernel, scale=scale, causal=causal, window=window,
-        q_offset=q_offset, dropout_p=dropout_p,
+        q_offset=q_offset, kv_valid_len=kv_valid_len, dropout_p=dropout_p,
         num_heads=hq, q_len=dq_len, k_len=dk_len, variant=variant)
 
     in_specs = [
@@ -263,9 +260,10 @@ def flash_attention_forward(
         pl.BlockSpec((1, 1, block_q, d), lambda b, h, qi, ki: (b, h, qi, 0)),
         pl.BlockSpec((1, 1, block_k, d), lambda b, h, qi, ki: (b, h // n_rep, ki, 0)),
         pl.BlockSpec((1, 1, block_k, d), lambda b, h, qi, ki: (b, h // n_rep, ki, 0)),
+        _layout_spec(block_layout),
     ]
-    args = [seed_arr, q, k, v]
-    has_kvm, has_layout = kv_mask is not None, block_layout is not None
+    args = [seed_arr, q, k, v, block_layout]
+    has_kvm = kv_mask is not None
     has_seg = q_segment_ids is not None
     if has_kvm:
         in_specs.append(pl.BlockSpec((1, block_k), lambda b, h, qi, ki: (b, ki)))
@@ -275,20 +273,12 @@ def flash_attention_forward(
         args.append(q_segment_ids)
         in_specs.append(pl.BlockSpec((1, block_k), lambda b, h, qi, ki: (b, ki)))
         args.append(kv_segment_ids)
-    if has_layout:
-        in_specs.append(pl.BlockSpec((1, 1), lambda b, h, qi, ki: (qi, ki)))
-        args.append(block_layout)
 
-    def wrapped(seed_ref, q_ref, k_ref, v_ref, *rest):
-        n_opt = int(has_kvm) + 2 * int(has_seg) + int(has_layout)
-        opts = rest[:n_opt]
-        rest = rest[n_opt:]
-        kvm_ref = opts[0] if has_kvm else None
-        qseg_ref = opts[int(has_kvm)] if has_seg else None
-        kseg_ref = opts[int(has_kvm) + 1] if has_seg else None
-        lay_ref = opts[-1] if has_layout else None
-        return kernel(seed_ref, q_ref, k_ref, v_ref, kvm_ref, qseg_ref,
-                      kseg_ref, lay_ref, *rest)
+    def wrapped(seed_ref, q_ref, k_ref, v_ref, layout_ref, *rest):
+        kvm_ref, qseg_ref, kseg_ref, rest = _split_opts(
+            rest, has_kvm, has_seg)
+        return kernel(seed_ref, q_ref, k_ref, v_ref, layout_ref, kvm_ref,
+                      qseg_ref, kseg_ref, *rest)
 
     out_specs = [
         pl.BlockSpec((1, 1, block_q, d), lambda b, h, qi, ki: (b, h, qi, 0)),
@@ -317,33 +307,48 @@ def flash_attention_forward(
     return o, m, l
 
 
+def _layout_spec(block_layout, kv_major: bool = False):
+    """BlockSpec delivering one layout value per grid step. ``kv_major``
+    matches the dkv kernel's (b, h, ki, qi) grid order."""
+    if block_layout.ndim == 2:
+        if kv_major:
+            return pl.BlockSpec((1, 1), lambda b, h, ki, qi: (qi, ki))
+        return pl.BlockSpec((1, 1), lambda b, h, qi, ki: (qi, ki))
+    if kv_major:
+        return pl.BlockSpec((1, 1, 1), lambda b, h, ki, qi: (b, qi, ki))
+    return pl.BlockSpec((1, 1, 1), lambda b, h, qi, ki: (b, qi, ki))
+
+
+def _split_opts(rest, has_kvm, has_seg):
+    """Route the optional (kvm, qseg, kseg) refs from a flat ref tuple."""
+    n_opt = int(has_kvm) + 2 * int(has_seg)
+    opts, rest = rest[:n_opt], rest[n_opt:]
+    kvm_ref = opts[0] if has_kvm else None
+    qseg_ref = opts[int(has_kvm)] if has_seg else None
+    kseg_ref = opts[int(has_kvm) + 1] if has_seg else None
+    return kvm_ref, qseg_ref, kseg_ref, rest
+
+
 # ---------------------------------------------------------------------------
 # backward: dq kernel (grid over q blocks, kv innermost)
 # ---------------------------------------------------------------------------
 
-def _recompute_p(q, k, m_row, l_row, scale, q0, k0, bq, bk,
-                 causal, window, kvm_row, full_override=None,
-                 qseg_ref=None, kseg_ref=None):
-    """Recompute P tile = diag(l)^-1 exp(S - m) (Alg. 4 line 13)."""
+def _recompute_p(q, k, m_row, l_row, scale, ok):
+    """Recompute P tile = diag(l)^-1 exp(S - m) (Alg. 4 line 13). ``ok`` is
+    the tile's fused element mask (None on FULL blocks — no masking)."""
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * scale
-    if causal or window is not None:
-        ok = _attend_mask(q0, k0, bq, bk, causal, window)
-        if full_override is not None:
-            ok = ok | full_override
+    if ok is not None:
         s = jnp.where(ok, s, NEG_INF)
-    if kvm_row is not None:
-        s = jnp.where(kvm_row[None, :], s, NEG_INF)
-    s = _segment_s_mask(qseg_ref, kseg_ref, s)
     m_safe = jnp.where(l_row == 0.0, 0.0, m_row)
     l_safe = jnp.where(l_row == 0.0, 1.0, l_row)
     p = jnp.where(s <= NEG_INF / 2, 0.0, jnp.exp(s - m_safe[:, None])) / l_safe[:, None]
-    return s, p
+    return p
 
 
 def _dq_kernel(seed_ref, q_ref, k_ref, v_ref, do_ref, m_ref, l_ref, dd_ref,
-               kvm_ref, qseg_ref, kseg_ref, layout_ref, dq_ref, dq_sc, *,
-               scale, causal, window, q_offset, dropout_p,
+               layout_ref, kvm_ref, qseg_ref, kseg_ref, dq_ref, dq_sc, *,
+               scale, causal, window, q_offset, kv_valid_len, dropout_p,
                num_heads, q_len, k_len):
     b, h = pl.program_id(0), pl.program_id(1)
     qi, ki = pl.program_id(2), pl.program_id(3)
@@ -355,32 +360,32 @@ def _dq_kernel(seed_ref, q_ref, k_ref, v_ref, do_ref, m_ref, l_ref, dd_ref,
     def _init():
         dq_sc[...] = jnp.zeros_like(dq_sc)
 
-    run, _, full_override = _run_and_mask(
-        layout_ref, qi, ki, bq, bk, q_offset, causal, window,
-        qseg_ref, kseg_ref)
-
-    @pl.when(run)
-    def _compute():
+    def _step(mode):
         q = q_ref[0, 0].astype(jnp.float32)
         k = k_ref[0, 0].astype(jnp.float32)
         v = v_ref[0, 0].astype(jnp.float32)
         do = do_ref[0, 0].astype(jnp.float32)
         m_row, l_row, dd = m_ref[0, 0], l_ref[0, 0], dd_ref[0, 0]
-        q0 = qi * bq + q_offset
-        k0 = ki * bk
-        kvm_row = kvm_ref[0] if kvm_ref is not None else None
-        _, p = _recompute_p(q, k, m_row, l_row, scale, q0, k0, bq, bk,
-                            causal, window, kvm_row, full_override,
-                            qseg_ref, kseg_ref)
+        ok = None
+        if mode != "none":
+            ok = _tile_mask(qi, ki, bq, bk, q_offset, causal=causal,
+                            window=window, kv_valid_len=kv_valid_len,
+                            kvm_ref=kvm_ref, qseg_ref=qseg_ref,
+                            kseg_ref=kseg_ref, geometry=(mode == "geo_data"))
+        p = _recompute_p(q, k, m_row, l_row, scale, ok)
         dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
                                  preferred_element_type=jnp.float32)
         if dropout_p > 0.0:
-            keep = _dropout_keep(seed_ref[0], b, h, q0 - q_offset, k0, bq, bk,
+            keep = _dropout_keep(seed_ref[0], b, h, qi * bq, ki * bk, bq, bk,
                                  num_heads, q_len, k_len, dropout_p)
             dp = jnp.where(keep, dp / (1.0 - dropout_p), 0.0)
         ds = p * (dp - dd[:, None])
         dq_sc[...] += scale * jax.lax.dot_general(
             ds, k, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    _layout_branches(_layout_block(layout_ref), _step, causal=causal,
+                     window=window, kv_valid_len=kv_valid_len,
+                     kvm_ref=kvm_ref, qseg_ref=qseg_ref)
 
     @pl.when(ki == nk - 1)
     def _finalize():
@@ -392,9 +397,9 @@ def _dq_kernel(seed_ref, q_ref, k_ref, v_ref, do_ref, m_ref, l_ref, dd_ref,
 # ---------------------------------------------------------------------------
 
 def _dkv_kernel(seed_ref, q_ref, k_ref, v_ref, do_ref, m_ref, l_ref, dd_ref,
-                kvm_ref, qseg_ref, kseg_ref, layout_ref, dk_ref, dv_ref,
+                layout_ref, kvm_ref, qseg_ref, kseg_ref, dk_ref, dv_ref,
                 dk_sc, dv_sc, *,
-                scale, causal, window, q_offset, dropout_p,
+                scale, causal, window, q_offset, kv_valid_len, dropout_p,
                 num_heads, q_len, k_len):
     b, h = pl.program_id(0), pl.program_id(1)
     ki, qi = pl.program_id(2), pl.program_id(3)
@@ -407,25 +412,21 @@ def _dkv_kernel(seed_ref, q_ref, k_ref, v_ref, do_ref, m_ref, l_ref, dd_ref,
         dk_sc[...] = jnp.zeros_like(dk_sc)
         dv_sc[...] = jnp.zeros_like(dv_sc)
 
-    run, _, full_override = _run_and_mask(
-        layout_ref, qi, ki, bq, bk, q_offset, causal, window,
-        qseg_ref, kseg_ref)
-
-    @pl.when(run)
-    def _compute():
+    def _step(mode):
         q = q_ref[0, 0].astype(jnp.float32)
         k = k_ref[0, 0].astype(jnp.float32)
         v = v_ref[0, 0].astype(jnp.float32)
         do = do_ref[0, 0].astype(jnp.float32)
         m_row, l_row, dd = m_ref[0, 0], l_ref[0, 0], dd_ref[0, 0]
-        q0 = qi * bq + q_offset
-        k0 = ki * bk
-        kvm_row = kvm_ref[0] if kvm_ref is not None else None
-        _, p = _recompute_p(q, k, m_row, l_row, scale, q0, k0, bq, bk,
-                            causal, window, kvm_row, full_override,
-                            qseg_ref, kseg_ref)
+        ok = None
+        if mode != "none":
+            ok = _tile_mask(qi, ki, bq, bk, q_offset, causal=causal,
+                            window=window, kv_valid_len=kv_valid_len,
+                            kvm_ref=kvm_ref, qseg_ref=qseg_ref,
+                            kseg_ref=kseg_ref, geometry=(mode == "geo_data"))
+        p = _recompute_p(q, k, m_row, l_row, scale, ok)
         if dropout_p > 0.0:
-            keep = _dropout_keep(seed_ref[0], b, h, q0 - q_offset, k0, bq, bk,
+            keep = _dropout_keep(seed_ref[0], b, h, qi * bq, ki * bk, bq, bk,
                                  num_heads, q_len, k_len, dropout_p)
             z = jnp.where(keep, 1.0 / (1.0 - dropout_p), 0.0)
             p_dropped = p * z
@@ -444,6 +445,10 @@ def _dkv_kernel(seed_ref, q_ref, k_ref, v_ref, do_ref, m_ref, l_ref, dd_ref,
         dk_sc[...] += scale * jax.lax.dot_general(
             ds, q, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
 
+    _layout_branches(_layout_block(layout_ref), _step, causal=causal,
+                     window=window, kv_valid_len=kv_valid_len,
+                     kvm_ref=kvm_ref, qseg_ref=qseg_ref)
+
     @pl.when(qi == nq - 1)
     def _finalize():
         dk_ref[0, 0] = dk_sc[...].astype(dk_ref.dtype)
@@ -451,22 +456,23 @@ def _dkv_kernel(seed_ref, q_ref, k_ref, v_ref, do_ref, m_ref, l_ref, dd_ref,
 
 
 def flash_attention_backward(
-    q, k, v, o, do, m, l, kv_mask,
+    q, k, v, o, do, m, l, kv_mask, block_layout,
     *,
-    scale, causal, window, q_offset, dropout_p, dropout_seed,
+    scale, causal, window, q_offset, kv_valid_len=None,
+    dropout_p, dropout_seed,
     block_q, block_k, dropout_dims: tuple[int, int] | None = None,
-    block_layout: jax.Array | None = None,
     q_segment_ids: jax.Array | None = None,
     kv_segment_ids: jax.Array | None = None,
     interpret: bool = True,
 ):
-    """Returns (dq, dk, dv) with dk/dv already group-summed for GQA."""
+    """Returns (dq, dk, dv) with dk/dv already group-summed for GQA.
+    ``block_layout`` is the same compiled layout the forward ran with."""
     b, hq, sq, d = q.shape
     _, hkv, sk, _ = k.shape
     n_rep = hq // hkv
     nq, nk = sq // block_q, sk // block_k
     dq_len, dk_len = dropout_dims if dropout_dims is not None else (sq, sk)
-    has_kvm, has_layout = kv_mask is not None, block_layout is not None
+    has_kvm = kv_mask is not None
     has_seg = q_segment_ids is not None
     seed_arr = jnp.asarray(dropout_seed, jnp.uint32).reshape(1)
 
@@ -475,24 +481,18 @@ def flash_attention_backward(
     dd = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32), axis=-1)
 
     common = dict(scale=scale, causal=causal, window=window, q_offset=q_offset,
-                  dropout_p=dropout_p,
+                  kv_valid_len=kv_valid_len, dropout_p=dropout_p,
                   num_heads=hq, q_len=dq_len, k_len=dk_len)
 
     def _route(kernel, n_fixed):
         def wrapped(*refs):
             fixed = refs[:n_fixed]
-            rest = refs[n_fixed:]
-            n_opt = int(has_kvm) + 2 * int(has_seg) + int(has_layout)
-            opts = rest[:n_opt]
-            rest = rest[n_opt:]
-            kvm_ref = opts[0] if has_kvm else None
-            qseg_ref = opts[int(has_kvm)] if has_seg else None
-            kseg_ref = opts[int(has_kvm) + 1] if has_seg else None
-            lay_ref = opts[-1] if has_layout else None
-            return kernel(*fixed, kvm_ref, qseg_ref, kseg_ref, lay_ref, *rest)
+            kvm_ref, qseg_ref, kseg_ref, rest = _split_opts(
+                refs[n_fixed:], has_kvm, has_seg)
+            return kernel(*fixed, kvm_ref, qseg_ref, kseg_ref, *rest)
         return wrapped
 
-    def _append_opts(in_specs, args, kvm_spec, qseg_spec, kseg_spec, lay_spec):
+    def _append_opts(in_specs, args, kvm_spec, qseg_spec, kseg_spec):
         if has_kvm:
             in_specs.append(kvm_spec)
             args.append(kv_mask)
@@ -501,9 +501,6 @@ def flash_attention_backward(
             args.append(q_segment_ids)
             in_specs.append(kseg_spec)
             args.append(kv_segment_ids)
-        if has_layout:
-            in_specs.append(lay_spec)
-            args.append(block_layout)
 
     # ---- dq kernel ----
     dq_kernel = functools.partial(_dq_kernel, **common)
@@ -516,15 +513,15 @@ def flash_attention_backward(
         pl.BlockSpec((1, 1, block_q), lambda b, h, qi, ki: (b, h, qi)),
         pl.BlockSpec((1, 1, block_q), lambda b, h, qi, ki: (b, h, qi)),
         pl.BlockSpec((1, 1, block_q), lambda b, h, qi, ki: (b, h, qi)),
+        _layout_spec(block_layout),
     ]
-    args = [seed_arr, q, k, v, do, m, l, dd]
+    args = [seed_arr, q, k, v, do, m, l, dd, block_layout]
     _append_opts(
         in_specs, args,
         pl.BlockSpec((1, block_k), lambda b, h, qi, ki: (b, ki)),
         pl.BlockSpec((1, block_q), lambda b, h, qi, ki: (b, qi)),
-        pl.BlockSpec((1, block_k), lambda b, h, qi, ki: (b, ki)),
-        pl.BlockSpec((1, 1), lambda b, h, qi, ki: (qi, ki)))
-    dq_wrapped = _route(dq_kernel, 8)
+        pl.BlockSpec((1, block_k), lambda b, h, qi, ki: (b, ki)))
+    dq_wrapped = _route(dq_kernel, 9)
 
     dq = pl.pallas_call(
         dq_wrapped,
@@ -547,15 +544,15 @@ def flash_attention_backward(
         pl.BlockSpec((1, 1, block_q), lambda b, h, ki, qi: (b, h, qi)),
         pl.BlockSpec((1, 1, block_q), lambda b, h, ki, qi: (b, h, qi)),
         pl.BlockSpec((1, 1, block_q), lambda b, h, ki, qi: (b, h, qi)),
+        _layout_spec(block_layout, kv_major=True),
     ]
-    args = [seed_arr, q, k, v, do, m, l, dd]
+    args = [seed_arr, q, k, v, do, m, l, dd, block_layout]
     _append_opts(
         in_specs, args,
         pl.BlockSpec((1, block_k), lambda b, h, ki, qi: (b, ki)),
         pl.BlockSpec((1, block_q), lambda b, h, ki, qi: (b, qi)),
-        pl.BlockSpec((1, block_k), lambda b, h, ki, qi: (b, ki)),
-        pl.BlockSpec((1, 1), lambda b, h, ki, qi: (qi, ki)))
-    dkv_wrapped = _route(dkv_kernel, 8)
+        pl.BlockSpec((1, block_k), lambda b, h, ki, qi: (b, ki)))
+    dkv_wrapped = _route(dkv_kernel, 9)
 
     dk_p, dv_p = pl.pallas_call(
         dkv_wrapped,
@@ -580,5 +577,6 @@ def flash_attention_backward(
         dk = dk_p.reshape(b, hkv, n_rep, sk, d).sum(axis=2)
         dv = dv_p.reshape(b, hkv, n_rep, sk, d).sum(axis=2)
     else:
-        dk, dv = dk_p, dv_p
+        dk = dk_p
+        dv = dv_p
     return dq, dk.astype(k.dtype), dv.astype(v.dtype)

@@ -9,10 +9,17 @@ merge operator (``repro.core.online_softmax.merge_states``) — the same
 algebra the paper uses to decompose softmax across blocks, here exploited
 for parallelism instead of memory locality.
 
+Block skipping uses the same mask IR as the training kernels (DESIGN.md §3):
+the per-sequence validity band (``kv_len`` + optional sliding window +
+optional ``kv_mask``) is lowered ONCE per call at the XLA level —
+``masks.decode_kv_valid`` expresses decode as the fused mask with
+``q_pos = kv_len - 1``, and ``masks.kv_block_layout`` classifies each kv
+block SKIP / FULL / PARTIAL. SKIP blocks (past the valid length, before the
+window start, or fully masked-out) never run; FULL blocks drop the
+element-level compares entirely; PARTIAL blocks apply the fused mask.
+
 On a real TPU the split axis is marked parallel (megacore / multiple cores);
-the combine is a tiny XLA reduction. Per-sequence valid lengths are passed
-as a ``kv_len (batch,)`` array — the kernel masks keys at/after the length
-(the serving engine's KV cache is a fixed-capacity ring of pages).
+the combine is a tiny XLA reduction.
 """
 
 from __future__ import annotations
@@ -24,15 +31,16 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.flash_attention import LANES, NEG_INF
+from repro.core import masks as M
+from repro.core.masks import NEG_INF
+from repro.kernels.flash_attention import LANES
 
 
-def _decode_kernel(kvl_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
-                   acc_sc, m_sc, l_sc, *, scale, block_k, window):
-    b, h = pl.program_id(0), pl.program_id(1)
+def _decode_kernel(kvl_ref, q_ref, k_ref, v_ref, lay_ref, kvm_ref,
+                   o_ref, m_ref, l_ref, acc_sc, m_sc, l_sc, *,
+                   scale, block_k, window):
     si, ki = pl.program_id(2), pl.program_id(3)   # split idx, block-in-split
     nk_in = pl.num_programs(3)
-    d = q_ref.shape[3]
 
     @pl.when(ki == 0)
     def _init():
@@ -42,28 +50,24 @@ def _decode_kernel(kvl_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
 
     kv_len = kvl_ref[0]
     k0 = (si * nk_in + ki) * block_k
+    blk = lay_ref[0, 0]
 
-    # block-level skip: blocks entirely past the valid length, or (sliding
-    # window) entirely before the window start, contribute nothing.
-    run = k0 < kv_len
-    if window is not None:
-        run = run & (k0 + block_k > kv_len - window)
-
-    @pl.when(run)
-    def _compute():
+    def _step(apply_mask):
         q = q_ref[0, 0].astype(jnp.float32)              # (1, d)
         k = k_ref[0, 0].astype(jnp.float32)              # (bk, d)
         v = v_ref[0, 0].astype(jnp.float32)
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32) * scale  # (1, bk)
 
-        k_pos = k0 + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-        ok = k_pos < kv_len
-        if window is not None:
-            # same semantics as the XLA decode path: keep the last `window`
-            # cache positions, i.e. k_pos in [kv_len - window, kv_len)
-            ok &= k_pos >= kv_len - window
-        s = jnp.where(ok, s, NEG_INF)
+        if apply_mask:
+            # decode == the fused mask at q_pos = kv_len - 1: causality is
+            # k_pos < kv_len, the window keeps the last `window` valid
+            # cache positions (same semantics as the XLA decode path).
+            k_pos = k0 + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            ok = M.element_mask(
+                kv_len - 1, k_pos, causal=True, window=window,
+                kv_valid=kvm_ref[0][None, :] if kvm_ref is not None else None)
+            s = jnp.where(ok, s, NEG_INF)
 
         m_prev, l_prev = m_sc[:, 0], l_sc[:, 0]
         m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
@@ -74,6 +78,9 @@ def _decode_kernel(kvl_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
             p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
         m_sc[...] = jnp.broadcast_to(m_new[:, None], m_sc.shape)
         l_sc[...] = jnp.broadcast_to(l_new[:, None], l_sc.shape)
+
+    pl.when(blk == M.BLOCK_PARTIAL)(lambda: _step(True))
+    pl.when(blk == M.BLOCK_FULL)(lambda: _step(False))
 
     @pl.when(ki == nk_in - 1)
     def _emit_partial():
@@ -92,12 +99,16 @@ def flash_decode(
     block_k: int = 256,
     num_splits: int = 8,
     window: int | None = None,
+    kv_mask: jax.Array | None = None,   # (b, sk) True = valid cache slot
     interpret: bool | None = None,
 ) -> jax.Array:
     """One-token attention against a fixed-capacity KV cache. Returns
     (b, hq, 1, d). GQA handled via kv index_map. ``window`` keeps only the
     last ``window`` valid cache positions (matches the XLA decode path's
-    sliding-window semantics); out-of-window blocks are skipped."""
+    sliding-window semantics); ``kv_mask`` masks out individual cache slots.
+    Blocks past the valid length, before the window start, or fully
+    masked-out are classified SKIP by the compiled per-batch layout and
+    never run."""
     b, hq, sq, d = q.shape
     _, hkv, sk, _ = k.shape
     assert sq == 1, "flash_decode handles single-token decode; use flash_attention otherwise"
@@ -118,20 +129,40 @@ def flash_decode(
     skp = k.shape[2]
     nk_in = skp // (num_splits * block_k)
 
+    kvm = None
+    if kv_mask is not None:
+        kvm = jnp.pad(kv_mask, ((0, 0), (0, pad)))
+    kv_len = kv_len.astype(jnp.int32)
+    # one XLA-level layout pass per call: (b, num_splits * nk_in) classes
+    kv_valid = M.decode_kv_valid(kv_len, skp, window=window, kv_mask=kvm)
+    layout = M.kv_block_layout(kv_valid, block_k).astype(jnp.int32)
+
     kernel = functools.partial(_decode_kernel, scale=scale, block_k=block_k,
                                window=window)
 
+    in_specs = [
+        pl.BlockSpec((1,), lambda b, h, si, ki: (b,)),
+        pl.BlockSpec((1, 1, 1, d), lambda b, h, si, ki: (b, h, 0, 0)),
+        pl.BlockSpec((1, 1, block_k, d),
+                     lambda b, h, si, ki: (b, h // n_rep, si * nk_in + ki, 0)),
+        pl.BlockSpec((1, 1, block_k, d),
+                     lambda b, h, si, ki: (b, h // n_rep, si * nk_in + ki, 0)),
+        pl.BlockSpec((1, 1), lambda b, h, si, ki: (b, si * nk_in + ki)),
+    ]
+    args = [kv_len, q, k, v, layout]
+    if kvm is not None:
+        in_specs.append(
+            pl.BlockSpec((1, block_k), lambda b, h, si, ki: (b, si * nk_in + ki)))
+        args.append(kvm)
+
+    def wrapped(kvl_ref, q_ref, k_ref, v_ref, lay_ref, *rest):
+        kvm_ref, rest = (rest[0], rest[1:]) if kvm is not None else (None, rest)
+        return kernel(kvl_ref, q_ref, k_ref, v_ref, lay_ref, kvm_ref, *rest)
+
     o_p, m_p, l_p = pl.pallas_call(
-        kernel,
+        wrapped,
         grid=(b, hq, num_splits, nk_in),
-        in_specs=[
-            pl.BlockSpec((1,), lambda b, h, si, ki: (b,)),
-            pl.BlockSpec((1, 1, 1, d), lambda b, h, si, ki: (b, h, 0, 0)),
-            pl.BlockSpec((1, 1, block_k, d),
-                         lambda b, h, si, ki: (b, h // n_rep, si * nk_in + ki, 0)),
-            pl.BlockSpec((1, 1, block_k, d),
-                         lambda b, h, si, ki: (b, h // n_rep, si * nk_in + ki, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((1, 1, 1, d), lambda b, h, si, ki: (b, h, si, 0)),
             pl.BlockSpec((1, 1, 1), lambda b, h, si, ki: (b, h, si)),
@@ -148,7 +179,7 @@ def flash_decode(
             pltpu.VMEM((1, LANES), jnp.float32),
         ],
         interpret=interpret,
-    )(kv_len.astype(jnp.int32), q, k, v)
+    )(*args)
 
     # combine partials with the online-softmax merge (vectorized over splits)
     m = jnp.max(m_p, axis=-1)                                     # (b, hq)

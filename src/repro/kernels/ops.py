@@ -5,6 +5,14 @@ differentiable op via ``jax.custom_vjp`` (residuals: q, k, v, o, m, l — the
 paper's O(N) extra memory), handles padding to block multiples, and exposes
 the paper-faithful / fa2 accumulator variants.
 
+Masks are COMPILED ONCE here: the call's arguments (causal/window/q_offset,
+kv padding, kv_mask, packed segment ids, optional Alg. 5 sparse pattern)
+become a ``core.masks.MaskSpec``, which ``compile_block_layout`` lowers to
+the block layout the fwd/dq/dkv kernels consume. The layout rides the
+custom_vjp residuals, so the backward pass reuses the forward's compilation
+(including the once-per-batch segment min/max reduction) instead of
+re-deriving skip predicates per grid step.
+
 On this CPU container the kernels run with ``interpret=True`` (Pallas
 executes the kernel body op-by-op) — correctness-exact, wall-clock
 meaningless. On a real TPU set ``interpret=False`` (the default resolves via
@@ -19,7 +27,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.masks import SEG_PAD_KV, SEG_PAD_Q, resolve_segment_ids
+from repro.core.masks import (MaskSpec, SEG_PAD_KV, SEG_PAD_Q,
+                              compile_block_layout, resolve_segment_ids)
 from repro.kernels import flash_attention as fa
 from repro.kernels import ref as ref_mod
 
@@ -40,44 +49,47 @@ def _pad_to(x: jax.Array, axis: int, mult: int) -> tuple[jax.Array, int]:
 
 @functools.partial(
     jax.custom_vjp,
-    nondiff_argnums=(8, 9, 10, 11, 12, 13, 14, 15, 16, 17),
+    nondiff_argnums=(8, 9, 10, 11, 12, 13, 14, 15, 16, 17, 18),
 )
 def _flash_core(q, k, v, kv_mask, q_seg, kv_seg, block_layout, dropout_seed,
-                scale, causal, window, q_offset, dropout_p, block_q, block_k,
-                variant, dropout_dims, interpret):
+                scale, causal, window, q_offset, kv_valid_len, dropout_p,
+                block_q, block_k, variant, dropout_dims, interpret):
     o, _, _ = fa.flash_attention_forward(
-        q, k, v, kv_mask, scale=scale, causal=causal, window=window,
-        q_offset=q_offset, dropout_p=dropout_p, dropout_seed=dropout_seed,
+        q, k, v, kv_mask, block_layout, scale=scale, causal=causal,
+        window=window, q_offset=q_offset, kv_valid_len=kv_valid_len,
+        dropout_p=dropout_p, dropout_seed=dropout_seed,
         block_q=block_q, block_k=block_k, variant=variant,
-        dropout_dims=dropout_dims, block_layout=block_layout,
+        dropout_dims=dropout_dims,
         q_segment_ids=q_seg, kv_segment_ids=kv_seg,
         interpret=interpret)
     return o
 
 
 def _flash_core_fwd(q, k, v, kv_mask, q_seg, kv_seg, block_layout,
-                    dropout_seed, scale, causal, window, q_offset, dropout_p,
-                    block_q, block_k, variant, dropout_dims, interpret):
+                    dropout_seed, scale, causal, window, q_offset,
+                    kv_valid_len, dropout_p, block_q, block_k, variant,
+                    dropout_dims, interpret):
     o, m, l = fa.flash_attention_forward(
-        q, k, v, kv_mask, scale=scale, causal=causal, window=window,
-        q_offset=q_offset, dropout_p=dropout_p, dropout_seed=dropout_seed,
+        q, k, v, kv_mask, block_layout, scale=scale, causal=causal,
+        window=window, q_offset=q_offset, kv_valid_len=kv_valid_len,
+        dropout_p=dropout_p, dropout_seed=dropout_seed,
         block_q=block_q, block_k=block_k, variant=variant,
-        dropout_dims=dropout_dims, block_layout=block_layout,
+        dropout_dims=dropout_dims,
         q_segment_ids=q_seg, kv_segment_ids=kv_seg,
         interpret=interpret)
     return o, (q, k, v, kv_mask, q_seg, kv_seg, block_layout, dropout_seed,
                o, m, l)
 
 
-def _flash_core_bwd(scale, causal, window, q_offset, dropout_p,
+def _flash_core_bwd(scale, causal, window, q_offset, kv_valid_len, dropout_p,
                     block_q, block_k, variant, dropout_dims, interpret, res, do):
     q, k, v, kv_mask, q_seg, kv_seg, block_layout, dropout_seed, o, m, l = res
     dq, dk, dv = fa.flash_attention_backward(
-        q, k, v, o, do, m, l, kv_mask,
+        q, k, v, o, do, m, l, kv_mask, block_layout,
         scale=scale, causal=causal, window=window, q_offset=q_offset,
+        kv_valid_len=kv_valid_len,
         dropout_p=dropout_p, dropout_seed=dropout_seed,
         block_q=block_q, block_k=block_k, dropout_dims=dropout_dims,
-        block_layout=block_layout,
         q_segment_ids=q_seg, kv_segment_ids=kv_seg, interpret=interpret)
 
     def _zero_tangent(x):
@@ -106,19 +118,22 @@ def flash_attention(
     block_q: int = 128,
     block_k: int = 128,
     variant: str = "fa2",              # "paper" (Alg. 1 faithful) | "fa2"
-    block_layout=None,                 # (nq, nk) uint8 -> block-sparse (Alg. 5)
+    block_layout=None,                 # (nq, nk) uint8 sparse pattern (Alg. 5)
     segment_ids: jax.Array | None = None,     # (b, s) packed ids (self-attn)
     q_segment_ids: jax.Array | None = None,   # (b, sq) explicit q-side ids
     kv_segment_ids: jax.Array | None = None,  # (b, sk) explicit kv-side ids
     interpret: bool | None = None,
 ) -> jax.Array:
     """Differentiable FlashAttention (Pallas). Pads seq dims to block
-    multiples internally; GQA inferred from head counts. ``block_layout``
-    switches to block-sparse FlashAttention (paper Alg. 5): 0 skip, 1 full,
-    2 partial (partial blocks additionally apply the causal/window mask).
-    ``segment_ids`` isolates packed (varlen) documents: tokens attend only
-    within their own segment. Padded tails get sentinel segments (q/kv pads
-    differ), so padded rows come out fully masked."""
+    multiples internally; GQA inferred from head counts. Every call's mask
+    arguments are lowered through ``core.masks.compile_block_layout`` to the
+    block layout the kernels consume — causal/window geometry, kv padding
+    tails, packed-segment structure, and the optional ``block_layout``
+    sparse pattern (paper Alg. 5, authoritative over geometry) all become
+    SKIP / FULL / PARTIAL classes in one place. ``segment_ids`` isolates
+    packed (varlen) documents: tokens attend only within their own segment.
+    Padded tails get sentinel segments (q/kv pads differ), so padded rows
+    come out fully masked."""
     b, hq, sq, d = q.shape
     _, hkv, sk, _ = k.shape
     if hq % hkv != 0:
@@ -137,33 +152,27 @@ def flash_attention(
     qp, qpad = _pad_to(q, 2, block_q)
     kp, kpad = _pad_to(k, 2, block_k)
     vp, _ = _pad_to(v, 2, block_k)
-    if kpad or kv_mask is not None:
-        base = jnp.arange(kp.shape[2]) < sk
-        kvm = jnp.broadcast_to(base[None, :], (b, kp.shape[2]))
-        if kv_mask is not None:
-            kvm = kvm & jnp.pad(kv_mask, ((0, 0), (0, kpad)))
-    else:
-        kvm = None
+    kvm = None
+    if kv_mask is not None:
+        kvm = jnp.pad(kv_mask, ((0, 0), (0, kpad)))
     if q_seg is not None:
         q_seg = jnp.pad(jnp.asarray(q_seg, jnp.int32), ((0, 0), (0, qpad)),
                         constant_values=SEG_PAD_Q)
         kv_seg = jnp.pad(jnp.asarray(kv_seg, jnp.int32), ((0, 0), (0, kpad)),
                          constant_values=SEG_PAD_KV)
 
-    layout = None
-    if block_layout is not None:
-        layout = jnp.asarray(block_layout, jnp.int32)
-        nq, nk = qp.shape[2] // block_q, kp.shape[2] // block_k
-        if layout.shape != (nq, nk):
-            raise ValueError(
-                f"block_layout shape {layout.shape} != grid ({nq}, {nk}) for "
-                f"padded seq ({qp.shape[2]}, {kp.shape[2]}) and blocks "
-                f"({block_q}, {block_k})")
+    spec = MaskSpec(
+        causal=causal, window=window, q_offset=q_offset,
+        kv_valid_len=sk if kpad else None,
+        kv_mask=kvm, q_segment_ids=q_seg, kv_segment_ids=kv_seg,
+        sparse_layout=block_layout)
+    layout = compile_block_layout(spec, qp.shape[2], kp.shape[2],
+                                  block_q, block_k).as_array()
 
     seed = jnp.asarray(dropout_seed, jnp.uint32)
     o = _flash_core(qp, kp, vp, kvm, q_seg, kv_seg, layout, seed, scale,
-                    causal, window, q_offset, dropout_p, block_q, block_k,
-                    variant, (sq, sk), interpret)
+                    causal, window, q_offset, spec.kv_valid_len, dropout_p,
+                    block_q, block_k, variant, (sq, sk), interpret)
     return o[:, :, :sq]
 
 

@@ -13,7 +13,10 @@
 All oracles accept GQA (num_q_heads a multiple of num_kv_heads), causal /
 sliding-window masks, an additive bias, a kv padding mask, dropout with a
 counter-based deterministic mask (identical to the kernels'), and a softmax
-scale. Shapes follow (batch, heads, seq, head_dim).
+scale. Shapes follow (batch, heads, seq, head_dim). Every mask term is
+evaluated through ``core.masks.element_mask`` — the same fused predicate
+the Pallas kernels apply to PARTIAL blocks — so kernel/oracle agreement is
+by construction (DESIGN.md §3).
 """
 
 from __future__ import annotations
@@ -21,7 +24,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.masks import resolve_segment_ids, segment_mask
+from repro.core import masks as M
+from repro.core.masks import resolve_segment_ids
 from repro.core.online_softmax import NEG_INF, SoftmaxState, block_state, finalize, merge_states
 
 
@@ -110,18 +114,16 @@ def standard_attention(
         s = s + bias.astype(jnp.float32)
 
     neg = jnp.float32(NEG_INF)
-    q_pos = jnp.arange(sq)[:, None] + q_offset
-    k_pos = jnp.arange(sk)[None, :]
-    if causal:
-        s = jnp.where(q_pos >= k_pos, s, neg)
-    if window is not None:
-        s = jnp.where((q_pos >= k_pos) & (q_pos - k_pos < window), s, neg)
+    ok = M.element_mask(
+        jnp.arange(sq)[:, None] + q_offset, jnp.arange(sk)[None, :],
+        causal=causal, window=window,
+        kv_valid=kv_mask[:, None, None, :] if kv_mask is not None else None,
+        q_seg=q_seg[:, None, :, None] if q_seg is not None else None,
+        kv_seg=kv_seg[:, None, None, :] if kv_seg is not None else None)
     if mask is not None:
-        s = jnp.where(mask, s, neg)
-    if q_seg is not None:
-        s = jnp.where(segment_mask(q_seg, kv_seg), s, neg)
-    if kv_mask is not None:
-        s = jnp.where(kv_mask[:, None, None, :], s, neg)
+        ok = mask if ok is None else ok & mask
+    if ok is not None:
+        s = jnp.where(ok, s, neg)
 
     m = jnp.max(s, axis=-1, keepdims=True)
     m = jnp.maximum(m, neg)  # fully-masked rows
@@ -218,9 +220,10 @@ def chunked_attention(
     # Guard-free fast path (§Perf cell C): for causal self-attention with no
     # padding mask, every q row has at least one valid key in chunk 0 (its
     # own position), so the fully-masked-row NaN guards are unreachable.
-    # Masking with a soft -3e4 (exp underflows to exactly 0 in fp32) lets us
-    # drop two score-sized selects per chunk. Self-packed segments keep the
-    # diagonal valid, so they ride the same path.
+    # Masking with the soft sentinel (masks.NEG_INF_SOFT; exp underflows to
+    # exactly 0 in fp32) lets us drop two score-sized selects per chunk.
+    # Self-packed segments keep the diagonal valid, so they ride the same
+    # path.
     fast = (causal and mc is None and window is None and q_offset >= 0
             and (q_seg is None or self_seg))
 
@@ -232,16 +235,14 @@ def chunked_attention(
         vb = repeat_kv(vb, n_rep)
         s = jnp.einsum("bhqd,bhkd->bhqk", qf, kb.astype(jnp.float32)) * scale
         k_pos = ci * chunk_size + jnp.arange(chunk_size)
-        neg = jnp.float32(-3e4 if fast else NEG_INF)
-        if causal:
-            s = jnp.where(q_pos[:, None] >= k_pos[None, :], s, neg)
-        if window is not None:
-            ok = (q_pos[:, None] >= k_pos[None, :]) & (q_pos[:, None] - k_pos[None, :] < window)
+        neg = jnp.float32(M.NEG_INF_SOFT if fast else NEG_INF)
+        ok = M.element_mask(
+            q_pos[:, None], k_pos[None, :], causal=causal, window=window,
+            kv_valid=mb[:, None, None, :] if mb is not None else None,
+            q_seg=q_seg[:, None, :, None] if sb is not None else None,
+            kv_seg=sb[:, None, None, :] if sb is not None else None)
+        if ok is not None:
             s = jnp.where(ok, s, neg)
-        if mb is not None:
-            s = jnp.where(mb[:, None, None, :], s, neg)
-        if sb is not None:
-            s = jnp.where(segment_mask(q_seg, sb), s, neg)
         if fast:
             m = jnp.maximum(state.m, jnp.max(s, axis=-1))
             p = jnp.exp(s - m[..., None])
@@ -328,13 +329,15 @@ def window_banded_attention(
 
     sc = jnp.einsum("bhcqd,bhckd->bhcqk", qc.astype(jnp.float32),
                     kb.astype(jnp.float32)) * scale      # (b,hq,nc,W,2W)
-    r = jnp.arange(W)[:, None]
-    c = jnp.arange(2 * W)[None, :]
-    band_ok = (c <= r + W) & (c > r)                     # 0 < qpos-kpos <= W-?.
-    # positions: q_pos = iW + r ; k_pos = iW - W + c ; attend iff
-    # 0 <= q_pos - k_pos < W  <=>  r < c <= r + W  (and k_pos >= 0)
-    k_pos_valid = (jnp.arange(nc)[:, None, None] * W - W + c[None]) >= 0
-    ok = band_ok[None] & k_pos_valid                     # (nc, W, 2W)
+    # banded coordinates: q_pos = iW + r ; k_pos = iW - W + c. The fused
+    # mask (causal ∧ window ∧ k_pos >= 0) reduces to r < c <= r + W on the
+    # band layout — the same predicate as every other impl, evaluated on
+    # gathered coordinates.
+    i = jnp.arange(nc)[:, None, None]
+    q_pos = i * W + jnp.arange(W)[None, :, None]         # (nc, W, 1)
+    k_pos = i * W - W + jnp.arange(2 * W)[None, None, :] # (nc, 1, 2W)
+    ok = M.element_mask(q_pos, k_pos, causal=True, window=W,
+                        kv_valid=k_pos >= 0)             # (nc, W, 2W)
     sc = jnp.where(ok[None, None], sc, NEG_INF)
 
     m = jnp.max(sc, axis=-1, keepdims=True)

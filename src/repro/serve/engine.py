@@ -31,6 +31,7 @@ Mechanics:
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import itertools
 from typing import Any
@@ -39,8 +40,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import masks
 from repro.core.masks import SEG_PAD_Q
 from repro.models.model_zoo import Model
+
+# Block size assumed for the packed-prefill layout-density report: the
+# dispatch default (AttentionSpec.block_q). Observability only — the model
+# compiles its own layout from the same MaskSpec inside kernels/ops.py.
+_REPORT_BLOCK = 128
 
 
 @dataclasses.dataclass
@@ -67,9 +74,15 @@ class ServingEngine:
         self.prefill_bucket = prefill_bucket
         self.prefill_calls = 0
         self.decode_calls = 0
+        # packed-prefill block-skip observability (mask IR, DESIGN.md §3):
+        # how many attention blocks the compiled layout proves skippable
+        # (cross-document + padded-tail), cumulated over packed prefills.
+        self.blocks_skipped = 0
+        self.blocks_total = 0
+        self.last_prefill_layout_density = 1.0
         self.state = model.init_decode_state(num_slots, capacity)
         self.slot_req: list[Request | None] = [None] * num_slots
-        self.queue: list[Request] = []
+        self.queue: collections.deque[Request] = collections.deque()
         self.finished: list[Request] = []
         self.next_token = np.zeros((num_slots,), np.int32)
         self._rid = itertools.count()
@@ -149,6 +162,7 @@ class ServingEngine:
             self.params, {"tokens": jnp.asarray(toks),
                           "segment_ids": jnp.asarray(segs)})
         self.prefill_calls += 1
+        self._record_layout_stats(segs)
         lasts = np.asarray(
             jnp.argmax(logits[0, jnp.asarray(offsets[1:] - 1)], axis=-1),
             np.int32)
@@ -157,12 +171,33 @@ class ServingEngine:
                 self.state, caches, slot, int(offsets[i]), lengths[i])
             self._start_or_finish(slot, req, int(lasts[i]))
 
+    def _record_layout_stats(self, segs: np.ndarray) -> None:
+        """Compile the packed call's causal+segment layout and count the
+        blocks it proves skippable (cross-document and padded-tail tiles the
+        dense geometry alone would run)."""
+        s = segs.shape[1]
+        bq = min(_REPORT_BLOCK, self.prefill_bucket, s)
+        if s % bq:
+            return  # bucket not block-aligned; skip the report, not the call
+        ids = jnp.asarray(segs)
+        layout = masks.compile_block_layout(
+            masks.MaskSpec(causal=True, q_segment_ids=ids,
+                           kv_segment_ids=ids), s, s, bq, bq)
+        # one device->host transfer, then numpy: counters must not add
+        # extra sync points to the serving loop.
+        arr = np.asarray(layout.layout)
+        skipped = int((arr == masks.BLOCK_SKIP).sum())
+        total = arr.size
+        self.blocks_skipped += skipped
+        self.blocks_total += total
+        self.last_prefill_layout_density = 1.0 - skipped / total
+
     def _admit(self) -> None:
         free = [s for s in range(self.B) if self.slot_req[s] is None]
         n = min(len(free), len(self.queue))
         if n == 0:
             return
-        reqs = [self.queue.pop(0) for _ in range(n)]
+        reqs = [self.queue.popleft() for _ in range(n)]
         if self.packed_prefill and n > 1:
             self._admit_packed(free[:n], reqs)
         else:

@@ -138,6 +138,23 @@ def test_decode_sliding_window_matches_xla_path(window, splits, block_k):
     np.testing.assert_allclose(o_disp, o_xla, **TOL)
 
 
+def test_decode_kv_mask_matches_standard():
+    """Per-slot cache masks (mask IR: kv_mask folds into the decode block
+    layout) agree with the oracle and with the XLA decode path."""
+    from repro.core.attention import AttentionSpec, decode_attention
+    b, hq, hkv, cap, d = 2, 4, 2, 256, 32
+    q, k, v = _qkv(8, b, hq, hkv, 1, cap, d)
+    kv_len = jnp.array([200, 256], jnp.int32)
+    kvm = jax.random.bernoulli(jax.random.PRNGKey(3), 0.8, (b, cap))
+    o = flash_decode(q, k, v, kv_len, num_splits=4, block_k=64, kv_mask=kvm)
+    full = kvm & (jnp.arange(cap)[None, :] < kv_len[:, None])
+    o_ref = standard_attention(q, k, v, kv_mask=full)
+    np.testing.assert_allclose(o, o_ref, **TOL)
+    spec = AttentionSpec(use_decode_kernel=False)
+    o_xla = decode_attention(q, k, v, kv_len, spec, kv_mask=kvm)
+    np.testing.assert_allclose(o, o_xla, **TOL)
+
+
 def test_decode_window_masks_old_positions():
     """With a tiny window the answer must differ from full attention and
     equal attention over only the window slice."""

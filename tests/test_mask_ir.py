@@ -1,0 +1,221 @@
+"""Mask IR tests: MaskSpec -> compile_block_layout soundness.
+
+The contract under test: expanding a compiled block layout back to element
+granularity reproduces the spec's fused element mask exactly —
+``layout_to_element_mask(compile(spec)) == element_mask(spec)``. That
+implies SKIP blocks contain no attendable element (skipping is safe) and
+FULL blocks contain no masked element (dropping the in-kernel element mask,
+including the segment compare, is safe). Covered by deterministic
+parametrized sweeps (offline containers) plus hypothesis property tests
+when available, and regression tests for the new provable skips: padded kv
+tails and segment-disjoint (cross-document) blocks.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import masks as M
+
+
+def _spec_mask(spec: M.MaskSpec, q_len: int, k_len: int, batch: int):
+    emask = spec.element_mask(q_len, k_len)
+    if emask is None:
+        emask = jnp.ones((q_len, k_len), bool)
+    emask = jnp.asarray(emask)
+    if emask.ndim == 4:
+        emask = emask[:, 0]
+    return np.asarray(jnp.broadcast_to(emask, (batch, q_len, k_len)))
+
+
+def _assert_layout_matches(spec, q_len, k_len, bq, bk, batch=1):
+    layout = M.compile_block_layout(spec, q_len, k_len, bq, bk)
+    want = _spec_mask(spec, q_len, k_len, batch)
+    got = M.layout_to_element_mask(layout, bq, bk, q_len, k_len,
+                                   base_mask=jnp.asarray(want))
+    got = np.asarray(jnp.broadcast_to(got, want.shape))
+    np.testing.assert_array_equal(got, want)
+    return layout
+
+
+def _random_segments(rng, b, s):
+    rows = []
+    for _ in range(b):
+        n_docs = int(rng.integers(1, 4))
+        cuts = np.sort(rng.choice(np.arange(1, s), size=n_docs - 1,
+                                  replace=False)) if n_docs > 1 else []
+        lens = np.diff(np.concatenate([[0], cuts, [s]])).astype(int)
+        rows.append(np.concatenate([np.full(n, i, np.int32)
+                                    for i, n in enumerate(lens)]))
+    return np.stack(rows)
+
+
+# ---------------------------------------------------------------------------
+# compile(spec) soundness: deterministic sweep (runs offline)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("causal,window,q_offset", [
+    (False, None, 0), (True, None, 0), (True, 16, 0),
+    (True, None, 64), (True, 48, 64), (False, None, 32),
+])
+@pytest.mark.parametrize("with_kvm,with_seg", [
+    (False, False), (True, False), (False, True), (True, True),
+])
+def test_compiled_layout_matches_element_mask(causal, window, q_offset,
+                                              with_kvm, with_seg):
+    rng = np.random.default_rng(hash((causal, window or 0, q_offset,
+                                      with_kvm, with_seg)) % 2**32)
+    b, sq, sk, bq, bk = 2, 64, 128, 16, 32
+    kv_mask = jnp.asarray(rng.random((b, sk)) < 0.7) if with_kvm else None
+    seg = None
+    if with_seg:
+        seg = jnp.asarray(_random_segments(rng, b, sk))
+    spec = M.MaskSpec(causal=causal, window=window, q_offset=q_offset,
+                      kv_mask=kv_mask,
+                      q_segment_ids=seg[:, -sq:] if seg is not None else None,
+                      kv_segment_ids=seg)
+    _assert_layout_matches(spec, sq, sk, bq, bk, batch=b)
+
+
+def test_compiled_layout_static_when_trace_time():
+    """causal/window/padding-tail masks lower to a static numpy layout —
+    no traced operand, no per-batch widening."""
+    for spec in [M.MaskSpec(causal=True),
+                 M.MaskSpec(causal=True, window=32),
+                 M.MaskSpec(kv_valid_len=100)]:
+        layout = M.compile_block_layout(spec, 128, 128, 32, 32)
+        assert layout.is_static, spec
+    traced = M.compile_block_layout(
+        M.MaskSpec(kv_mask=jnp.ones((2, 128), bool)), 128, 128, 32, 32)
+    assert not traced.is_static
+
+
+def test_kv_padding_tail_blocks_compile_to_skip():
+    """Regression (the tentpole's won work): kv padding-tail blocks are
+    provable SKIPs — the dense path used to run them with an element mask."""
+    spec = M.MaskSpec(causal=False, kv_valid_len=160)   # 160 of 256 valid
+    layout = M.compile_block_layout(spec, 256, 256, 64, 64)
+    assert layout.is_static
+    lay = np.asarray(layout.layout)
+    np.testing.assert_array_equal(lay[:, 3], M.BLOCK_SKIP)   # 192..255
+    # the block straddling 160 applies only the validity term (no geometry)
+    np.testing.assert_array_equal(lay[:, 2], M.BLOCK_PARTIAL_DATA)
+    np.testing.assert_array_equal(lay[:, :2], M.BLOCK_FULL)
+    assert M.layout_skip_rate(layout) == pytest.approx(0.25)
+
+
+def test_segment_disjoint_blocks_compile_to_skip_and_uniform_to_full():
+    """Cross-document tiles SKIP; same-document uniform tiles FULL (no
+    element-level segment compare needed at all)."""
+    seg = jnp.asarray(np.repeat([[0, 1, 2, 3]], 64, axis=1))   # 4 docs x 64
+    spec = M.MaskSpec(q_segment_ids=seg, kv_segment_ids=seg)
+    layout = M.compile_block_layout(spec, 256, 256, 64, 64)
+    lay = np.asarray(layout.layout)[0]
+    np.testing.assert_array_equal(np.diag(lay), M.BLOCK_FULL)
+    off = lay[~np.eye(4, dtype=bool)]
+    np.testing.assert_array_equal(off, M.BLOCK_SKIP)
+
+
+def test_packed_padded_tail_demo_layout():
+    """Acceptance demo: a packed batch with a padded tail marks BOTH the
+    cross-segment tiles and the padding-tail kv tiles SKIP, where causal
+    geometry alone would run them."""
+    s, bq = 256, 64
+    ids = np.concatenate([np.zeros(100, np.int32), np.ones(92, np.int32),
+                          np.full(64, M.SEG_PAD_KV, np.int32)])[None]
+    seg = jnp.asarray(ids)
+    q_ids = jnp.asarray(np.where(ids == M.SEG_PAD_KV, M.SEG_PAD_Q, ids))
+    packed = M.compile_block_layout(
+        M.MaskSpec(causal=True, q_segment_ids=q_ids, kv_segment_ids=seg),
+        s, s, bq, bq)
+    dense = M.compile_block_layout(M.MaskSpec(causal=True), s, s, bq, bq)
+    assert M.layout_skip_rate(packed) > M.layout_skip_rate(dense)
+    lay = np.asarray(packed.layout)[0]
+    # padded-tail kv column (keys 192..255) is all-SKIP…
+    np.testing.assert_array_equal(lay[:, 3], M.BLOCK_SKIP)
+    # …and the cross-document tile (q in doc 1, k entirely in doc 0) too,
+    # although causal geometry alone marks it FULL.
+    assert lay[2, 0] == M.BLOCK_SKIP
+    assert np.asarray(dense.layout)[2, 0] == M.BLOCK_FULL
+
+
+def test_sparse_layout_is_authoritative_over_geometry():
+    """Alg. 5 semantics: a sparse pattern's FULL blocks attend fully even
+    where causal geometry says PARTIAL; data masks still demote (to
+    PARTIAL_DATA, never silently dropped)."""
+    pattern = M.butterfly_block_layout(256, 256, 64, 64)
+    spec = M.MaskSpec(causal=True, sparse_layout=pattern)
+    layout = M.compile_block_layout(spec, 256, 256, 64, 64)
+    np.testing.assert_array_equal(np.asarray(layout.layout), pattern)
+    # adding a kv_mask demotes FULL -> PARTIAL_DATA (geometry stays
+    # overridden; validity is never dropped)
+    kvm = jnp.asarray(np.arange(256)[None, :] < 200)
+    spec2 = M.MaskSpec(causal=True, sparse_layout=pattern, kv_mask=kvm)
+    lay2 = np.asarray(M.compile_block_layout(spec2, 256, 256, 64, 64).layout)[0]
+    assert lay2[0, 0] == M.BLOCK_FULL          # kv col 0 fully valid
+    np.testing.assert_array_equal(             # kv col 3 straddles 200
+        lay2[:, 3][pattern[:, 3] != M.BLOCK_SKIP], M.BLOCK_PARTIAL_DATA)
+
+
+def test_combine_block_layouts_table():
+    a = np.array([M.BLOCK_SKIP, M.BLOCK_FULL, M.BLOCK_FULL, M.BLOCK_FULL,
+                  M.BLOCK_PARTIAL, M.BLOCK_PARTIAL, M.BLOCK_PARTIAL_DATA])
+    d = np.array([M.BLOCK_FULL, M.BLOCK_SKIP, M.BLOCK_FULL, M.BLOCK_PARTIAL,
+                  M.BLOCK_PARTIAL, M.BLOCK_FULL, M.BLOCK_PARTIAL])
+    want = np.array([M.BLOCK_SKIP, M.BLOCK_SKIP, M.BLOCK_FULL,
+                     M.BLOCK_PARTIAL_DATA, M.BLOCK_PARTIAL, M.BLOCK_PARTIAL,
+                     M.BLOCK_PARTIAL_DATA])
+    np.testing.assert_array_equal(M.combine_block_layouts(a, d), want)
+
+
+def test_decode_kv_valid_band():
+    kv_len = jnp.asarray([5, 0, 8])
+    got = np.asarray(M.decode_kv_valid(kv_len, 8, window=3))
+    want = np.zeros((3, 8), bool)
+    want[0, 2:5] = True          # last 3 of 5
+    want[2, 5:8] = True          # last 3 of 8
+    np.testing.assert_array_equal(got, want)
+    full = np.asarray(M.decode_kv_valid(kv_len, 8))
+    np.testing.assert_array_equal(full, np.arange(8)[None, :] < np.asarray(kv_len)[:, None])
+
+
+def test_vectorized_builders_agree_with_definition():
+    """The numpy-broadcast builders classify exactly like the per-element
+    masks they summarize (FULL blocks all-True, SKIP all-False)."""
+    for q_len, k_len, bq, bk, off in [(96, 160, 32, 32, 64), (128, 128, 16, 64, 0)]:
+        for name, lay, em in [
+            ("causal", M.causal_block_layout(q_len, k_len, bq, bk, off),
+             M.causal_mask(q_len, k_len, off)),
+            ("window", M.sliding_window_block_layout(q_len, k_len, bq, bk, 40, off),
+             M.sliding_window_mask(q_len, k_len, 40, off)),
+        ]:
+            got = M.layout_to_element_mask(lay, bq, bk, q_len, k_len,
+                                           base_mask=em)
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(em),
+                                          err_msg=name)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property tests (skip when the package is absent)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000), st.booleans(),
+       st.sampled_from([None, 8, 32, 100]),
+       st.sampled_from([0, 16, 64]),
+       st.booleans(), st.booleans(),
+       st.sampled_from([(64, 64, 16, 16), (64, 128, 32, 32), (96, 96, 32, 16)]))
+def test_hypothesis_compile_matches_element_mask(seed, causal, window,
+                                                 q_offset, with_kvm,
+                                                 with_seg, dims):
+    sq, sk, bq, bk = dims
+    rng = np.random.default_rng(seed)
+    b = 2
+    kv_mask = jnp.asarray(rng.random((b, sk)) < 0.6) if with_kvm else None
+    seg = jnp.asarray(_random_segments(rng, b, sk)) if with_seg else None
+    spec = M.MaskSpec(causal=causal, window=window, q_offset=q_offset,
+                      kv_mask=kv_mask,
+                      q_segment_ids=seg[:, -sq:] if seg is not None else None,
+                      kv_segment_ids=seg)
+    _assert_layout_matches(spec, sq, sk, bq, bk, batch=b)
