@@ -26,11 +26,13 @@ MODULES = [
     "benchmarks.bench_table7_kernel",   # Table 7
     "benchmarks.bench_attention_sweep", # Tables 9-21 (+ layout skip rates)
     "benchmarks.bench_io_model",        # Theorem 2 / Props. 3-4
+    "benchmarks.bench_serve_throughput",  # paged vs dense KV cache serving
 ]
 
 SMOKE_MODULES = [
     "benchmarks.bench_attention_sweep",
     "benchmarks.bench_io_model",
+    "benchmarks.bench_serve_throughput",
 ]
 
 
@@ -41,11 +43,16 @@ def main() -> None:
                     help="cheap CI subset with reduced sweep sizes")
     args = ap.parse_args()
     modules = SMOKE_MODULES if args.smoke else MODULES
+    if args.only:
+        modules = [m for m in modules if args.only in m]
+        if not modules:
+            pool = "SMOKE_MODULES" if args.smoke else "MODULES"
+            print(f"--only {args.only!r} matches nothing in {pool}",
+                  file=sys.stderr)
+            raise SystemExit(1)
     print("name,us_per_call,derived")
     failed = []
     for mod_name in modules:
-        if args.only and args.only not in mod_name:
-            continue
         try:
             mod = importlib.import_module(mod_name)
             kwargs = {}

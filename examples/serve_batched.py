@@ -1,11 +1,17 @@
-"""Batched serving with continuous batching over a slotted KV cache.
+"""Batched serving with continuous batching over a PAGED KV cache.
 
-    PYTHONPATH=src python examples/serve_batched.py
+    PYTHONPATH=src python examples/serve_batched.py [--dense]
+        [--page-size 16] [--pages 16]
 
-Submits a burst of mixed-length requests against fewer slots than requests;
-the engine prefies/inserts/evicts continuously and the outputs are verified
-token-exact against per-request full-context greedy decoding."""
+Submits a burst of mixed-length requests against a page pool holding (at
+the default flags) the HBM budget of only 4 dense slots; the engine admits
+by free-page budget
+(more concurrent requests than slots), appends/reclaims pages as requests
+grow and finish, and prints per-step batch occupancy + pool utilization.
+Outputs are verified token-exact against per-request full-context greedy
+decoding."""
 
+import argparse
 import time
 
 import jax
@@ -18,6 +24,12 @@ from repro.serve import ServingEngine
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dense", action="store_true")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--pages", type=int, default=16)
+    args = ap.parse_args()
+
     cfg = reduced_config("granite-3-2b", num_layers=4, d_model=128,
                          num_heads=4, num_kv_heads=2, head_dim=32,
                          d_ff=256, vocab_size=512)
@@ -25,20 +37,40 @@ def main():
     params = model.init(jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
 
-    n_requests, slots = 10, 4
+    n_requests = 10
     prompts = [list(rng.integers(1, cfg.vocab_size,
                                  size=rng.integers(3, 12))) for _ in range(n_requests)]
     new_tokens = [int(rng.integers(4, 12)) for _ in range(n_requests)]
 
-    eng = ServingEngine(model, params, num_slots=slots, capacity=64)
+    dense_slots, capacity = 4, 64
+    if args.dense:
+        eng = ServingEngine(model, params, num_slots=dense_slots,
+                            capacity=capacity, paged=False)
+        print(f"dense: {dense_slots} slots x {capacity} capacity")
+    else:
+        # short requests only hold the pages they actually fill, so the
+        # decode batch can be wider than the dense slot count that the
+        # same cache cells would buy.
+        cells = args.pages * args.page_size
+        lanes = max(dense_slots, 2 * cells // capacity)
+        eng = ServingEngine(model, params, num_slots=lanes,
+                            capacity=capacity, paged=True,
+                            page_size=args.page_size, num_pages=args.pages)
+        print(f"paged: {args.pages} pages x {args.page_size} rows "
+              f"({cells} cells = {cells / (dense_slots * capacity):.2g}x "
+              f"the dense {dense_slots}x{capacity} budget), {lanes} decode "
+              f"lanes ({eng.cache_bytes()/1e6:.2f} MB pool)")
+
     t0 = time.perf_counter()
     for p, n in zip(prompts, new_tokens):
         eng.submit(p, max_new_tokens=n)
-    done = eng.run()
+    done = eng.run(on_step=ServingEngine.step_stats_printer())
     dt = time.perf_counter() - t0
     total_tokens = sum(len(r.output) for r in done)
-    print(f"{len(done)} requests over {slots} slots: {total_tokens} tokens "
-          f"in {dt:.2f}s ({total_tokens/dt:.1f} tok/s on CPU)")
+    extra = (f", peak {eng.peak_active} concurrent, "
+             f"{eng.preemptions} preemptions" if eng.paged else "")
+    print(f"{len(done)} requests: {total_tokens} tokens in {dt:.2f}s "
+          f"({total_tokens/dt:.1f} tok/s on CPU{extra})")
 
     # verify token-exactness vs per-request greedy
     def greedy(prompt, n):

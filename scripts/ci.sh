@@ -2,7 +2,9 @@
 # Tier-1 CI entry point (see ROADMAP.md): runs the full test suite on the
 # CPU backend with the repo's src/ layout on PYTHONPATH, then a benchmark
 # smoke pass so layout-compiler / harness regressions fail here instead of
-# rotting silently.
+# rotting silently. The smoke set includes bench_serve_throughput, which
+# asserts the paged KV-cache engine beats the dense slot ceiling at equal
+# HBM with token-identical outputs (DESIGN.md §6.5).
 set -euo pipefail
 
 cd "$(dirname "$0")/.."

@@ -76,6 +76,9 @@ class ModelConfig:
     masked_cache_write: bool = False     # decode KV write via iota-mask select
                                          # (shardable; no gather on the
                                          # sequence-sharded cache dim)
+    use_decode_kernel: bool = False      # split-KV Pallas decode kernel
+                                         # (contiguous AND paged caches);
+                                         # False = XLA softmax parity path
 
     def __post_init__(self):
         if self.head_dim == 0:

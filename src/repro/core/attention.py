@@ -39,7 +39,7 @@ import jax.numpy as jnp
 from repro.core import masks
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
-from repro.kernels.flash_decode import flash_decode
+from repro.kernels.flash_decode import flash_decode, flash_decode_paged
 
 AttnImpl = Literal["pallas", "chunked", "reference", "block_sparse"]
 
@@ -150,7 +150,49 @@ def decode_attention(
                                 kv_mask=kv_mask)
     s = jnp.where(kvm[:, None, None, None, :], s, masks.NEG_INF)
     m = jnp.max(s, axis=-1, keepdims=True)
-    p = jnp.exp(s - m)
-    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    p = jnp.where(s <= masks.NEG_INF / 2, 0.0, jnp.exp(s - m))
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    # fully-masked rows (kv_len == 0 / garbage batch rows) emit zeros, the
+    # same convention as the split-KV kernel's empty-partial merge.
+    p = p / jnp.where(l == 0.0, 1.0, l)
     o = jnp.einsum("bkrqs,bksd->bkrqd", p, v_cache.astype(jnp.float32))
     return o.reshape(b, hq, sq, d).astype(q.dtype)
+
+
+def paged_decode_attention(
+    q: jax.Array,            # (b, hq, 1, d)
+    k_pool: jax.Array,       # (hkv, num_pages, page_size, d) — shared pool
+    v_pool: jax.Array,
+    page_table: jax.Array,   # (b, pages_per_seq) int32; negative = unallocated
+    kv_len: jax.Array,       # (b,) int32
+    spec: AttentionSpec,
+    *,
+    scale: float | None = None,
+) -> jax.Array:
+    """Single-token decode against a paged KV cache.
+
+    With ``spec.use_decode_kernel`` the split-KV Pallas kernel walks the
+    page table directly (one page DMA per kv block, SKIP pages never
+    fetched). The XLA parity path gathers the sequence's pages into the
+    logical (b, hkv, T*page_size, d) view and reuses ``decode_attention``
+    verbatim — unallocated table entries become masked slots (gather is
+    clamped to page 0, then killed by the kv_mask), so both paths derive
+    validity from the same ``masks.decode_kv_valid`` band.
+    """
+    if spec.use_decode_kernel:
+        return flash_decode_paged(q, k_pool, v_pool, page_table, kv_len,
+                                  scale=scale,
+                                  num_splits=spec.num_decode_splits,
+                                  window=spec.window)
+    hkv, num_pages, page_size, d = k_pool.shape
+    b, T = page_table.shape
+    safe = jnp.clip(page_table, 0, num_pages - 1)
+    def gather(pool):
+        pages = pool[:, safe]                    # (hkv, b, T, page_size, d)
+        return pages.transpose(1, 0, 2, 3, 4).reshape(
+            b, hkv, T * page_size, d)
+    alloc = jnp.repeat(page_table >= 0, page_size, axis=1)   # (b, T*ps)
+    return decode_attention(
+        q, gather(k_pool), gather(v_pool), kv_len,
+        dataclasses.replace(spec, use_decode_kernel=False),
+        kv_mask=alloc, scale=scale)

@@ -352,6 +352,30 @@ def kv_block_layout(kv_valid: jnp.ndarray, block_k: int) -> jnp.ndarray:
                      jnp.where(anyv, BLOCK_PARTIAL, BLOCK_SKIP))
 
 
+def paged_block_layout(kv_len: jnp.ndarray, page_table: jnp.ndarray,
+                       page_size: int, *,
+                       window: int | None = None,
+                       kv_mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """(b,) lengths + (b, T) page tables -> (b, T) block classes in LOGICAL
+    page space (the serving page-table lowering, DESIGN.md §6).
+
+    A paged KV cache makes the kv block the unit of ALLOCATION: logical page
+    t of a sequence holds cache positions [t*page_size, (t+1)*page_size) and
+    ``page_table[b, t]`` names the physical pool page backing it (negative =
+    unallocated). Because the page IS the mask IR's kv block, the decode
+    validity band (``decode_kv_valid``: kv_len + window + optional slot
+    mask) classifies pages exactly as it classifies contiguous blocks —
+    SKIP pages are never touched, FULL pages drop the element compares —
+    and unallocated table entries are forced SKIP so a kernel provably
+    never dereferences them.
+    """
+    b, T = page_table.shape
+    valid = decode_kv_valid(kv_len, T * page_size, window=window,
+                            kv_mask=kv_mask)
+    lay = kv_block_layout(valid, page_size)
+    return jnp.where(page_table < 0, BLOCK_SKIP, lay)
+
+
 def segment_block_layout(q_segment_ids: jnp.ndarray,
                          kv_segment_ids: jnp.ndarray,
                          block_q: int, block_k: int) -> jnp.ndarray:

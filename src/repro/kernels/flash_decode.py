@@ -20,6 +20,15 @@ element-level compares entirely; PARTIAL blocks apply the fused mask.
 
 On a real TPU the split axis is marked parallel (megacore / multiple cores);
 the combine is a tiny XLA reduction.
+
+Two cache geometries share the same kernel body:
+  * ``flash_decode``       — contiguous per-sequence cache (b, hkv, sk, d);
+  * ``flash_decode_paged`` — a shared page pool (hkv, pages, page_size, d)
+    plus per-sequence page tables. The page is the mask IR's kv block, and
+    the physical page index is resolved inside the BlockSpec index_map from
+    a scalar-prefetched page table (one page DMA per grid step).
+Both validate their geometry up front (capacity % block multiples) instead
+of silently padding.
 """
 
 from __future__ import annotations
@@ -118,23 +127,13 @@ def flash_decode(
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
 
-    block_k = min(block_k, sk)
-    # pad cache capacity to a multiple of (num_splits * block_k)
-    tile = num_splits * block_k
-    pad = (-sk) % tile
-    if pad:
-        widths = ((0, 0), (0, 0), (0, pad), (0, 0))
-        k = jnp.pad(k, widths)
-        v = jnp.pad(v, widths)
-    skp = k.shape[2]
-    nk_in = skp // (num_splits * block_k)
+    block_k, num_splits = validate_decode_geometry(sk, block_k, num_splits)
+    nk_in = (sk // block_k) // num_splits
 
-    kvm = None
-    if kv_mask is not None:
-        kvm = jnp.pad(kv_mask, ((0, 0), (0, pad)))
+    kvm = kv_mask
     kv_len = kv_len.astype(jnp.int32)
     # one XLA-level layout pass per call: (b, num_splits * nk_in) classes
-    kv_valid = M.decode_kv_valid(kv_len, skp, window=window, kv_mask=kvm)
+    kv_valid = M.decode_kv_valid(kv_len, sk, window=window, kv_mask=kvm)
     layout = M.kv_block_layout(kv_valid, block_k).astype(jnp.int32)
 
     kernel = functools.partial(_decode_kernel, scale=scale, block_k=block_k,
@@ -181,11 +180,146 @@ def flash_decode(
         interpret=interpret,
     )(*args)
 
-    # combine partials with the online-softmax merge (vectorized over splits)
+    return _merge_split_partials(o_p, m_p, l_p, q.dtype)
+
+
+def validate_decode_geometry(capacity: int, block_k: int,
+                             num_splits: int) -> tuple[int, int]:
+    """Clamp-then-validate the contiguous decode grid. Shape-derived
+    clamps are documented and deterministic: a block cannot exceed the
+    cache, and there cannot be more splits than blocks. What is NOT
+    silently absorbed is misalignment — the old path zero-padded the cache
+    up to num_splits * block_k, which silently changed the grid (and HBM
+    traffic) behind the caller's back. Called by ``flash_decode`` and by
+    the serving engine at construction, so a bad (capacity, block) combo
+    fails fast instead of at the first jitted decode step.
+    """
+    block_k = min(block_k, capacity)
+    num_splits = min(num_splits, max(1, capacity // max(block_k, 1)))
+    if capacity % block_k:
+        raise ValueError(
+            f"flash_decode: cache capacity ({capacity}) must be a multiple "
+            f"of block_k ({block_k}); pad the cache at allocation time")
+    nk = capacity // block_k
+    if nk % num_splits:
+        raise ValueError(
+            f"flash_decode: cache capacity ({capacity}) must be a multiple "
+            f"of num_splits * block_k ({num_splits} * {block_k}); choose a "
+            f"num_splits dividing the {nk} kv blocks")
+    return block_k, num_splits
+
+
+def validate_paged_decode_geometry(pages_per_seq: int,
+                                   num_splits: int) -> int:
+    """Paged analogue: the page IS the block, so only the split count can
+    misalign. Returns the clamped num_splits."""
+    num_splits = min(num_splits, pages_per_seq)
+    if pages_per_seq % num_splits:
+        raise ValueError(
+            f"flash_decode_paged: pages per sequence ({pages_per_seq}) must "
+            f"be a multiple of num_splits ({num_splits})")
+    return num_splits
+
+
+def _merge_split_partials(o_p, m_p, l_p, dtype):
+    """Combine per-split partial softmax states with the online-softmax
+    merge (vectorized over splits). o_p: (b, hq, splits, d); m_p/l_p:
+    (b, hq, splits). Fully-masked rows (all partials empty) emit zeros."""
     m = jnp.max(m_p, axis=-1)                                     # (b, hq)
     w = jnp.where(m_p <= NEG_INF / 2, 0.0, jnp.exp(m_p - m[..., None]))
     l = jnp.sum(l_p * w, axis=-1)
     acc = jnp.sum(o_p * w[..., None], axis=2)                     # (b, hq, d)
     l_safe = jnp.where(l == 0.0, 1.0, l)
-    out = (acc / l_safe[..., None]).astype(q.dtype)
+    out = (acc / l_safe[..., None]).astype(dtype)
     return out[:, :, None, :]
+
+
+def flash_decode_paged(
+    q: jax.Array,            # (b, hq, 1, d)
+    k_pool: jax.Array,       # (hkv, num_pages, page_size, d) — shared pool
+    v_pool: jax.Array,
+    page_table: jax.Array,   # (b, pages_per_seq) int32; negative = unallocated
+    kv_len: jax.Array,       # (b,) int32 valid lengths
+    *,
+    scale: float | None = None,
+    num_splits: int = 8,
+    window: int | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Split-KV decode against a PAGED KV cache (DESIGN.md §6).
+
+    The pool is shared by all sequences; ``page_table`` maps each
+    sequence's logical kv block t (positions [t*page_size, (t+1)*page_size))
+    to a physical pool page. The page IS the mask IR's kv block
+    (block_k == page_size): ``masks.paged_block_layout`` classifies each
+    logical page SKIP / FULL / PARTIAL exactly as the contiguous kernel
+    classifies blocks, and the kernel's kv grid walks the page table — the
+    physical page index comes from a scalar-prefetched table read inside
+    the BlockSpec index_map, so each grid step DMAs exactly one page
+    (indirection instead of a contiguous slice). SKIP pages (beyond
+    kv_len, before the window start, or unallocated) never contribute;
+    FULL pages drop the element compares.
+    """
+    b, hq, sq, d = q.shape
+    hkv, num_pages, page_size, _ = k_pool.shape
+    assert sq == 1, "flash_decode_paged handles single-token decode"
+    n_rep = hq // hkv
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    T = page_table.shape[1]
+    num_splits = validate_paged_decode_geometry(T, num_splits)
+    t_in = T // num_splits
+
+    kv_len = kv_len.astype(jnp.int32)
+    # one XLA-level lowering per call: (b, T) page classes; unallocated
+    # entries are SKIP, so clamping them to page 0 for the fetch below is
+    # observationally irrelevant (the kernel body never runs on them).
+    layout = M.paged_block_layout(kv_len, page_table, page_size,
+                                  window=window).astype(jnp.int32)
+    table = jnp.maximum(page_table, 0).astype(jnp.int32)
+
+    kernel = functools.partial(_decode_kernel, scale=scale,
+                               block_k=page_size, window=window)
+
+    def wrapped(tab_ref, kvl_ref, q_ref, k_ref, v_ref, lay_ref, *rest):
+        return kernel(kvl_ref, q_ref, k_ref, v_ref, lay_ref, None, *rest)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, hq, num_splits, t_in),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, si, ki, tab: (b,)),
+            pl.BlockSpec((1, 1, 1, d), lambda b, h, si, ki, tab: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, page_size, d),
+                         lambda b, h, si, ki, tab:
+                         (h // n_rep, tab[b, si * t_in + ki], 0, 0)),
+            pl.BlockSpec((1, 1, page_size, d),
+                         lambda b, h, si, ki, tab:
+                         (h // n_rep, tab[b, si * t_in + ki], 0, 0)),
+            pl.BlockSpec((1, 1), lambda b, h, si, ki, tab: (b, si * t_in + ki)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, d), lambda b, h, si, ki, tab: (b, h, si, 0)),
+            pl.BlockSpec((1, 1, 1), lambda b, h, si, ki, tab: (b, h, si)),
+            pl.BlockSpec((1, 1, 1), lambda b, h, si, ki, tab: (b, h, si)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1, d), jnp.float32),
+            pltpu.VMEM((1, LANES), jnp.float32),
+            pltpu.VMEM((1, LANES), jnp.float32),
+        ],
+    )
+    o_p, m_p, l_p = pl.pallas_call(
+        wrapped,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hq, num_splits, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, hq, num_splits), jnp.float32),
+            jax.ShapeDtypeStruct((b, hq, num_splits), jnp.float32),
+        ],
+        interpret=interpret,
+    )(table, kv_len, q, k_pool, v_pool, layout)
+    return _merge_split_partials(o_p, m_p, l_p, q.dtype)

@@ -1,10 +1,14 @@
-"""Serving launcher: continuous-batching engine.
+"""Serving launcher: continuous-batching engine over the paged KV cache.
 
     PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b \
-        --slots 4 --requests 12
+        --slots 8 --requests 12 --page-size 16 --pages 24
 
 Reduced configs on CPU; on a TPU slice the same engine runs with the
-production mesh + `make_sharded_serve_steps` (sharded, donated decode)."""
+production mesh + `make_sharded_serve_steps` (sharded, donated decode).
+``--dense`` selects the fixed-slot baseline cache; by default the engine
+pages (families with recurrent state fall back to dense automatically).
+Each step prints batch occupancy and page-pool utilization so scheduler
+behaviour (admission waves, preemption, reclamation) is visible live."""
 
 from __future__ import annotations
 
@@ -22,28 +26,47 @@ from repro.serve import ServingEngine
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="granite-3-2b")
-    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--slots", type=int, default=4,
+                    help="decode batch lanes (dense: also the cache slots)")
     ap.add_argument("--requests", type=int, default=12)
-    ap.add_argument("--capacity", type=int, default=128)
+    ap.add_argument("--capacity", type=int, default=128,
+                    help="per-sequence max cache length")
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--dense", action="store_true",
+                    help="fixed-slot dense KV cache baseline")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="KV rows per page (== mask-IR kv block)")
+    ap.add_argument("--pages", type=int, default=None,
+                    help="page pool size (default: slots*capacity/page_size,"
+                         " the dense engine's HBM budget)")
     args = ap.parse_args()
 
     cfg = reduced_config(args.arch)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     eng = ServingEngine(model, params, num_slots=args.slots,
-                        capacity=args.capacity)
+                        capacity=args.capacity,
+                        paged=False if args.dense else None,
+                        page_size=args.page_size, num_pages=args.pages)
     rng = np.random.default_rng(0)
     t0 = time.perf_counter()
     for _ in range(args.requests):
         plen = int(rng.integers(3, 16))
         eng.submit(list(rng.integers(1, cfg.vocab_size, size=plen)),
                    max_new_tokens=int(rng.integers(4, args.max_new)))
-    done = eng.run()
+
+    mode = "paged" if eng.paged else "dense"
+    print(f"arch={cfg.name} mode={mode} lanes={args.slots} "
+          f"cache={eng.cache_bytes()/1e6:.2f} MB"
+          + (f" pool={eng.kv.num_pages}x{eng.kv.page_size}" if eng.paged
+             else f" slots={args.slots}x{args.capacity}"))
+    done = eng.run(on_step=ServingEngine.step_stats_printer())
     dt = time.perf_counter() - t0
     tok = sum(len(r.output) for r in done)
-    print(f"arch={cfg.name} slots={args.slots}: {len(done)} requests, "
-          f"{tok} tokens in {dt:.2f}s ({tok/dt:.1f} tok/s)")
+    extra = (f", peak_concurrent={eng.peak_active}, "
+             f"preemptions={eng.preemptions}" if eng.paged else "")
+    print(f"{len(done)} requests, {tok} tokens in {dt:.2f}s "
+          f"({tok/dt:.1f} tok/s{extra})")
     for r in done[:5]:
         print(f"  req{r.rid}: {len(r.output)} tokens {r.output[:8]}...")
 

@@ -15,7 +15,8 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
-from repro.core.attention import AttentionSpec, attention, decode_attention
+from repro.core.attention import (AttentionSpec, attention, decode_attention,
+                                  paged_decode_attention)
 from repro.core.masks import segment_relative_positions
 from repro.models.layers import apply_rope, dense_init, rms_normalize
 
@@ -25,7 +26,8 @@ def attn_spec_from_config(cfg: ModelConfig) -> AttentionSpec:
         impl=cfg.attn_impl, causal=cfg.causal, window=cfg.window,
         dropout_p=cfg.attn_dropout, unroll_chunks=cfg.unroll_chunks,
         chunk_size=cfg.attn_chunk_size, pv_bf16=cfg.attn_pv_bf16,
-        banded_window=cfg.banded_window)
+        banded_window=cfg.banded_window,
+        use_decode_kernel=cfg.use_decode_kernel)
 
 
 def init_attention(key, cfg: ModelConfig, dtype):
@@ -210,3 +212,67 @@ def decode_attention_step(params, cfg: ModelConfig, x, cache, kv_len,
     spec = spec or attn_spec_from_config(cfg)
     o = decode_attention(q, cache["k"], cache["v"], kv_len + 1, spec)
     return _merge_heads(o) @ params["wo"], cache
+
+
+# ---------------------------------------------------------------------------
+# Paged KV cache path (serving; DESIGN.md §6)
+# ---------------------------------------------------------------------------
+
+def init_paged_kv_cache(cfg: ModelConfig, num_pages: int, page_size: int,
+                        dtype):
+    """One layer's slice of the shared page pool. Unlike the dense per-slot
+    cache there is no batch dim: pages are the unit of allocation and any
+    sequence's page table may point anywhere in the pool."""
+    hkv, hd = cfg.num_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((hkv, num_pages, page_size, hd), dtype),
+        "v": jnp.zeros((hkv, num_pages, page_size, hd), dtype),
+    }
+
+
+def paged_kv_cache_specs():
+    # pages shard like the dense capacity dim ("kv_seq" on the model axis):
+    # the pool's page dim is the sharded analogue of split-KV decode.
+    return {"k": P(None, "kv_seq", None, None),
+            "v": P(None, "kv_seq", None, None)}
+
+
+def paged_decode_attention_step(params, cfg: ModelConfig, x, pool,
+                                page_table, kv_len,
+                                *, spec: AttentionSpec | None = None):
+    """Single-token decode against the shared page pool.
+
+    x: (b, 1, d_model); pool leaves (hkv, num_pages, page_size, hd);
+    page_table: (b, pages_per_seq) int32, negative = unallocated;
+    kv_len: (b,) logical lengths. Writes the new K/V into physical page
+    ``page_table[b, kv_len // page_size]`` at offset ``kv_len % page_size``
+    (one batched scatter; rows whose table entry is unallocated — idle
+    batch rows — are DROPPED, so they can never corrupt another sequence's
+    pages), then attends over [0, kv_len]. RoPE positions are the logical
+    ``kv_len`` exactly as in the dense path, so paged decode is
+    token-identical to dense decode. Returns (out, new_pool).
+    """
+    positions = kv_len[:, None]                  # (b, 1) position of new token
+    q, k, v = _project_qkv(params, cfg, x, x, positions, positions)
+
+    num_pages, page_size = pool["k"].shape[1], pool["k"].shape[2]
+    T = page_table.shape[1]
+    lp = jnp.minimum(kv_len // page_size, T - 1)
+    off = kv_len % page_size
+    phys = jnp.take_along_axis(page_table, lp[:, None], axis=1)[:, 0]
+    # unallocated entries AND rows already at full table capacity -> index
+    # num_pages, out of bounds under mode='drop'. Without the capacity
+    # guard the lp clamp above would redirect an overflow write into the
+    # LAST allocated page — silent corruption of live rows instead of a
+    # dropped write.
+    phys = jnp.where((phys < 0) | (kv_len >= T * page_size), num_pages, phys)
+
+    def _upd(c, new):  # c: (hkv, P, ps, hd); new: (b, hkv, 1, hd)
+        rows = new[:, :, 0].transpose(1, 0, 2).astype(c.dtype)  # (hkv, b, hd)
+        return c.at[:, phys, off, :].set(rows, mode="drop")
+
+    pool = {"k": _upd(pool["k"], k), "v": _upd(pool["v"], v)}
+    spec = spec or attn_spec_from_config(cfg)
+    o = paged_decode_attention(q, pool["k"], pool["v"], page_table,
+                               kv_len + 1, spec)
+    return _merge_heads(o) @ params["wo"], pool

@@ -172,6 +172,38 @@ class Model:
                  "kv_len": jnp.full((x.shape[0],), x.shape[1], jnp.int32)}
         return state, logits
 
+    def supports_paged_decode(self) -> bool:
+        """Paged decode scatters token-indexed K/V rows into shared pool
+        pages; exactly the families whose per-layer state is a
+        length-indexed KV cache support it (same predicate as packed
+        prefill — SSM/hybrid recurrent state and encoder/frontend streams
+        have no per-token rows to page)."""
+        return self.supports_packed_prefill()
+
+    def init_paged_decode_state(self, batch: int, num_pages: int,
+                                page_size: int, pages_per_seq: int):
+        """Decode state over a shared page pool: per-layer pools
+        (L, hkv, num_pages, page_size, hd), a (batch, pages_per_seq) page
+        table (negative = unallocated), and logical lengths. The batch dim
+        costs no cache memory — rows are just decode lanes; all KV bytes
+        live in the pool."""
+        cfg = self.cfg
+        assert self.supports_paged_decode(), cfg.family
+        caches = tfm.init_paged_decode_cache(cfg, num_pages, page_size,
+                                             _dtype(cfg))
+        return {"caches": caches,
+                "page_table": jnp.full((batch, pages_per_seq), -1, jnp.int32),
+                "kv_len": jnp.zeros((batch,), jnp.int32)}
+
+    def paged_decode_state_specs(self):
+        """Logical PartitionSpecs for the paged decode state — the sharded
+        analogue of the dense ``decode_cache_specs`` path in
+        ``input_specs``: the pool's page dim shards like the dense capacity
+        dim ("kv_seq"), page table and lengths follow the batch lanes."""
+        return {"caches": tfm.paged_decode_cache_specs(),
+                "page_table": P("data", None),
+                "kv_len": P("data")}
+
     def supports_packed_prefill(self) -> bool:
         """Packed prefill scatters per-segment KV-cache row ranges into
         slots; that requires every cache leaf to be a (length-indexed) KV
@@ -201,9 +233,22 @@ class Model:
         return caches, self._logits(params, h)
 
     def decode_step(self, params, state, token):
-        """token: (B,) i32. Returns (new_state, logits (B, 1, V))."""
+        """token: (B,) i32. Returns (new_state, logits (B, 1, V)).
+
+        Dispatches on the state's pytree structure: a ``page_table`` key
+        selects the paged KV-cache path (serve/kv_cache.py), otherwise the
+        dense per-slot cache. One jit trace per engine either way.
+        """
         cfg = self.cfg
         x = jnp.take(params["embed"], token[:, None], axis=0)
+        if "page_table" in state:
+            h, caches = tfm.apply_stack_decode_paged(
+                params["blocks"], cfg, x, state["caches"],
+                state["page_table"], state["kv_len"])
+            logits = self._logits(params, h)
+            new_state = {"caches": caches, "page_table": state["page_table"],
+                         "kv_len": state["kv_len"] + 1}
+            return new_state, logits
         h, caches = tfm.apply_stack_decode(params["blocks"], cfg, x,
                                            state["caches"], state["kv_len"])
         logits = self._logits(params, h)

@@ -280,6 +280,75 @@ def apply_block_decode(params: Params, cfg: ModelConfig, x, cache, kv_len,
     return x, new_cache
 
 
+def init_paged_decode_cache(cfg: ModelConfig, num_pages: int, page_size: int,
+                            dtype):
+    """Per-layer page pools stacked on a leading layer axis:
+    (L, hkv, num_pages, page_size, hd) per K/V leaf. Paged decode is an
+    attention-family feature (a page holds token-indexed K/V rows);
+    SSM/hybrid recurrent state and encoder streams have no such rows —
+    ``Model.supports_paged_decode`` gates those families to the dense path.
+    """
+    assert cfg.family in ("dense", "moe") and not cfg.hybrid, cfg.family
+
+    def one_layer(_):
+        return {"kv": attn_mod.init_paged_kv_cache(cfg, num_pages,
+                                                   page_size, dtype)}
+
+    return jax.vmap(one_layer)(jnp.arange(cfg.num_layers))
+
+
+def paged_decode_cache_specs():
+    def add_layer(spec):
+        return P(*((None,) + tuple(spec)))
+    return jax.tree.map(add_layer, {"kv": attn_mod.paged_kv_cache_specs()},
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def apply_block_decode_paged(params: Params, cfg: ModelConfig, x, cache,
+                             page_table, kv_len):
+    """One dense/moe block for one new token against the page pool."""
+    h = apply_norm(params["attn_norm"], x, cfg.norm_type)
+    a, kv = attn_mod.paged_decode_attention_step(
+        params["attn"], cfg, h, cache["kv"], page_table, kv_len)
+    x = x + a
+    if "moe" in params:
+        h = apply_norm(params["mlp_norm"], x, cfg.norm_type)
+        y, _ = moe_mod.apply_moe(params["moe"], cfg, h)
+        x = x + y
+    elif "mlp" in params:
+        h = apply_norm(params["mlp_norm"], x, cfg.norm_type)
+        x = x + apply_mlp(params["mlp"], h, cfg.mlp_type)
+    return x, {"kv": kv}
+
+
+def apply_stack_decode_paged(params: Params, cfg: ModelConfig, x, caches,
+                             page_table, kv_len):
+    """Scan a single token through all layers, threading per-layer pools.
+    ``page_table`` / ``kv_len`` are layer-invariant (one logical sequence
+    maps to the same pages in every layer's pool)."""
+    if not cfg.scan_layers:
+        outs = []
+        L = jax.tree.leaves(caches)[0].shape[0]
+        for l in range(L):
+            p_l = jax.tree.map(lambda p: p[l], params) \
+                if not isinstance(params, list) else params[l]
+            c_l = jax.tree.map(lambda c: c[l], caches)
+            x, nc = apply_block_decode_paged(p_l, cfg, x, c_l,
+                                             page_table, kv_len)
+            outs.append(nc)
+        new_caches = jax.tree.map(lambda *cs: jnp.stack(cs), *outs)
+        return x, new_caches
+
+    def body(x, inp):
+        p_l, cache_l = inp
+        x, new_cache = apply_block_decode_paged(p_l, cfg, x, cache_l,
+                                                page_table, kv_len)
+        return x, new_cache
+
+    x, new_caches = jax.lax.scan(body, x, (params, caches))
+    return x, new_caches
+
+
 def apply_stack_decode(params: Params, cfg: ModelConfig, x, caches, kv_len):
     """Scan a single token through all layers, threading per-layer caches."""
     if not cfg.scan_layers:

@@ -1,1 +1,2 @@
 from repro.serve.engine import Request, ServingEngine  # noqa: F401
+from repro.serve.kv_cache import PagedKVCache  # noqa: F401

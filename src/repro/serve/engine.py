@@ -1,32 +1,42 @@
-"""Serving engine: continuous (iteration-level) batching over a slotted,
-batched KV cache — the Orca/vLLM scheduling pattern on top of the paper's
-linear-memory attention.
+"""Serving engine: continuous (iteration-level) batching, with a PAGED
+KV cache as the default decode state — the Orca/vLLM scheduling pattern on
+top of the paper's linear-memory attention.
 
 Why this is the paper's payoff at serving time: the decode step's attention
-reads O(kv_len) cache bytes per token (no N x N materialization), so a slot's
-memory footprint is exactly its cache capacity — FlashAttention's linear
-memory is what makes large decode batches fit at all (paper §4.3, Fig. 3
-right).
+reads O(kv_len) cache bytes per token (no N x N materialization), so a
+sequence's memory footprint is exactly its cache length — FlashAttention's
+linear memory is what makes large decode batches fit at all (paper §4.3,
+Fig. 3 right). The paged cache (serve/kv_cache.py, DESIGN.md §6) finishes
+the thought: cache memory is allocated in mask-IR kv blocks ("pages"), so a
+request holds ``ceil(len/page_size)`` pages instead of a fixed capacity
+slot, and admission is bound by the free-page budget instead of slot count.
 
-Mechanics:
-  * B fixed slots, each with capacity C in the stacked per-layer cache;
-  * PACKED PREFILL (default, DESIGN.md §6): each admit drains up to
-    min(#free slots, queue) requests, packs their prompts back-to-back into
-    ONE (1, ΣLᵢ) model call with ``segment_ids`` (the same tensor the
-    segment-aware attention stack uses for packed training), then scatters
-    each segment's K/V row range into its slot. One model invocation
-    prefills K requests; segment masking + segment-relative RoPE make the
-    result token-identical to K batch-1 calls. Padding to a bucket multiple
-    bounds retracing;
-  * the sequential batch-1 prefill loop is kept (``packed_prefill=False``)
-    as the exactness baseline and for models whose per-layer state cannot
-    be split per segment (SSM/hybrid/enc-dec/frontends);
-  * every engine step decodes ALL slots in one jitted call (inactive slots
-    compute garbage that is never emitted — the static-shape trade);
-  * finished slots are immediately refilled from the queue (continuous).
+Mechanics (paged mode, the default for dense/moe text decoders):
+  * the decode batch has B lanes (rows); all KV bytes live in a shared
+    page pool — rows are free, pages are the resource;
+  * admission drains the queue while rows AND pages last; PACKED PREFILL
+    (DESIGN.md §6) runs the drained requests as ONE (1, ΣLᵢ) segment-masked
+    call whose K/V rows are scattered *straight into pool pages* by a
+    single jitted scatter (trace keyed on the bucketed packed length only —
+    the dense path's per-(slot, length) insert-retrace family is gone);
+  * each decode step appends one page per sequence crossing a page
+    boundary; when the pool is exhausted the YOUNGEST sequence is
+    preempted — its pages reclaimed, the request requeued at the queue
+    front (prompt + generated so far), token-identical under greedy
+    decoding when it resumes;
+  * pages are reclaimed the moment a request finishes (EOS / budget) and
+    reused immediately (the free list is FIFO, so churn fragments the
+    pool — which page-table indirection makes costless).
 
-``prefill_calls`` / ``decode_calls`` count model invocations (observability
-+ the packed-vs-sequential benchmark in benchmarks/bench_packed_prefill.py).
+Dense mode (``paged=False``, and automatically for SSM/hybrid/enc-dec/
+frontend families whose recurrent state cannot be paged) keeps the original
+fixed-slot cache and is retained as the exactness baseline — the paged
+engine is token-identical to it (tests/test_paged_kv.py) and
+``benchmarks/bench_serve_throughput.py`` measures the capacity win.
+
+``prefill_calls`` / ``decode_calls`` count model invocations;
+``preemptions`` / ``peak_active`` / ``kv.utilization()`` expose the paged
+scheduler's behaviour (printed by launch/serve.py per step).
 """
 
 from __future__ import annotations
@@ -42,7 +52,11 @@ import numpy as np
 
 from repro.core import masks
 from repro.core.masks import SEG_PAD_Q
+from repro.kernels.flash_decode import (validate_decode_geometry,
+                                        validate_paged_decode_geometry)
+from repro.models.attention_layer import attn_spec_from_config
 from repro.models.model_zoo import Model
+from repro.serve import kv_cache as kvc
 
 # Block size assumed for the packed-prefill layout-density report: the
 # dispatch default (AttentionSpec.block_q). Observability only — the model
@@ -58,12 +72,20 @@ class Request:
     output: list[int] = dataclasses.field(default_factory=list)
     done: bool = False
 
+    @property
+    def resume_tokens(self) -> list[int]:
+        """Prefill input: the prompt plus anything generated before a
+        preemption. Greedy decoding of this prefix reproduces the original
+        continuation token-identically, so preempt-and-requeue is exact."""
+        return self.prompt + self.output
+
 
 class ServingEngine:
     def __init__(self, model: Model, params, *, num_slots: int,
                  capacity: int, eos_id: int | None = None,
                  greedy: bool = True, packed_prefill: bool = True,
-                 prefill_bucket: int = 64):
+                 prefill_bucket: int = 64, paged: bool | None = None,
+                 page_size: int = 16, num_pages: int | None = None):
         self.model = model
         self.params = params
         self.B = num_slots
@@ -80,85 +102,197 @@ class ServingEngine:
         self.blocks_skipped = 0
         self.blocks_total = 0
         self.last_prefill_layout_density = 1.0
-        self.state = model.init_decode_state(num_slots, capacity)
+        # scheduler observability (both modes; paged specifics are zero in
+        # dense mode).
+        self.preemptions = 0
+        self.peak_active = 0
+        self.last_step_stats: dict[str, Any] = {}
+
+        can_page = model.supports_paged_decode()
+        self.paged = can_page if paged is None else bool(paged)
+        if self.paged and not can_page:
+            raise ValueError(
+                f"paged decode needs a per-token KV cache; family "
+                f"{model.cfg.family!r} (hybrid={model.cfg.hybrid}) carries "
+                f"recurrent/encoder state that cannot be paged")
+
         self.slot_req: list[Request | None] = [None] * num_slots
         self.queue: collections.deque[Request] = collections.deque()
         self.finished: list[Request] = []
         self.next_token = np.zeros((num_slots,), np.int32)
         self._rid = itertools.count()
+        self._admit_t: list[int] = [0] * num_slots       # admission order
+        self._admit_counter = itertools.count(1)
         self._decode = jax.jit(model.decode_step, donate_argnums=(1,))
 
-        def _insert(state, slot_state, slot, kv_len_new, slot_sizes=None):
-            def ins(big, small):
-                # big: (L, B, ...); small: (L, 1, ...) -> write at batch idx
-                idx = (0, slot) + (0,) * (big.ndim - 2)
-                return jax.lax.dynamic_update_slice(big, small.astype(big.dtype), idx)
+        if self.paged:
+            if capacity % page_size:
+                raise ValueError(
+                    f"capacity ({capacity}) must be a multiple of page_size "
+                    f"({page_size}): the page is the mask-IR kv block and "
+                    f"the per-sequence page table has capacity/page_size "
+                    f"entries")
+            self.page_size = page_size
+            self.pages_per_seq = capacity // page_size
+            if num_pages is None:
+                # HBM-equivalent default: exactly the dense engine's cells.
+                num_pages = num_slots * self.pages_per_seq
+            self.kv = kvc.PagedKVCache(num_pages, page_size)
+            self.state = model.init_paged_decode_state(
+                num_slots, num_pages, page_size, self.pages_per_seq)
+            self._kv_len_h = np.zeros((num_slots,), np.int64)
+            self._paged_dirty = True     # device table/kv_len need upload
+            self._scatter = jax.jit(kvc.scatter_packed_segments,
+                                    donate_argnums=(0,))
+            self._prefill_packed = jax.jit(model.prefill_packed)
+        else:
+            self.state = model.init_decode_state(num_slots, capacity)
+            if model.supports_packed_prefill():
+                self._prefill_packed = jax.jit(model.prefill_packed)
 
-            caches = jax.tree.map(ins, state["caches"], slot_state["caches"])
-            kv_len = state["kv_len"].at[slot].set(kv_len_new)
-            return {"caches": caches, "kv_len": kv_len}
+            def _insert(state, slot_state, slot, kv_len_new, slot_sizes=None):
+                def ins(big, small):
+                    # big: (L, B, ...); small: (L, 1, ...) -> write at batch idx
+                    idx = (0, slot) + (0,) * (big.ndim - 2)
+                    return jax.lax.dynamic_update_slice(big, small.astype(big.dtype), idx)
 
-        self._insert = jax.jit(_insert, donate_argnums=(0,),
-                               static_argnums=(2,))
+                caches = jax.tree.map(ins, state["caches"], slot_state["caches"])
+                kv_len = state["kv_len"].at[slot].set(kv_len_new)
+                return {"caches": caches, "kv_len": kv_len}
 
-        def _insert_segment(state, packed_caches, slot, offset, length):
-            """Scatter one packed segment's K/V rows [offset, offset+length)
-            into slot's cache rows [0, length). Cache leaves are
-            (L, B, hkv, capacity, hd); packed leaves (L, 1, hkv, ΣL, hd)."""
-            def ins(big, small):
-                seg = jax.lax.dynamic_slice_in_dim(small, offset, length, axis=3)
-                idx = (0, slot) + (0,) * (big.ndim - 2)
-                return jax.lax.dynamic_update_slice(big, seg.astype(big.dtype), idx)
+            self._insert = jax.jit(_insert, donate_argnums=(0,),
+                                   static_argnums=(2,))
 
-            caches = jax.tree.map(ins, state["caches"], packed_caches)
-            kv_len = state["kv_len"].at[slot].set(length)
-            return {"caches": caches, "kv_len": kv_len}
+            def _insert_segment(state, packed_caches, slot, offset, length,
+                                kv_len_new):
+                """Scatter one packed segment's K/V rows [offset, offset+length)
+                into slot's cache rows [0, length). Cache leaves are
+                (L, B, hkv, capacity, hd); packed leaves (L, 1, hkv, ΣL, hd).
+                ``length`` is static (shape-determining, bucketed by the
+                single-request path); ``offset`` and the recorded valid
+                length ``kv_len_new`` are traced."""
+                def ins(big, small):
+                    seg = jax.lax.dynamic_slice_in_dim(small, offset, length, axis=3)
+                    idx = (0, slot) + (0,) * (big.ndim - 2)
+                    return jax.lax.dynamic_update_slice(big, seg.astype(big.dtype), idx)
 
-        # slot and length static (shape-determining); offset traced, so one
-        # trace per (slot, prompt length) pair, not per packing layout.
-        self._insert_segment = jax.jit(_insert_segment, donate_argnums=(0,),
-                                       static_argnums=(2, 4))
+                caches = jax.tree.map(ins, state["caches"], packed_caches)
+                kv_len = state["kv_len"].at[slot].set(kv_len_new)
+                return {"caches": caches, "kv_len": kv_len}
+
+            # slot and length static (shape-determining); offset and the
+            # valid length traced, so one trace per (slot, padded length)
+            # pair — the single-request path buckets `length`, keeping its
+            # cache O(#slots x #buckets).
+            self._insert_segment = jax.jit(_insert_segment, donate_argnums=(0,),
+                                           static_argnums=(2, 4))
+
+        # fail fast on decode-kernel grid misalignment: the kernels raise
+        # the same errors, but from inside the first jitted decode step —
+        # long after construction accepted the geometry.
+        spec = attn_spec_from_config(model.cfg)
+        if spec.use_decode_kernel:
+            if self.paged:
+                validate_paged_decode_geometry(self.pages_per_seq,
+                                               spec.num_decode_splits)
+            else:
+                validate_decode_geometry(capacity, spec.block_k,
+                                         spec.num_decode_splits)
 
     # ----------------------------------------------------------------- admit
     def submit(self, prompt: list[int], max_new_tokens: int) -> int:
         rid = next(self._rid)
+        if len(prompt) + 1 > self.capacity:
+            # both modes: a longer prompt would fail asynchronously during
+            # run() (paged: no table room for the first decode write;
+            # dense: the prefill insert cannot fit the slot) with an error
+            # that no longer names the offending request.
+            raise ValueError(
+                f"prompt of {len(prompt)} tokens cannot decode within "
+                f"capacity {self.capacity}")
+        if self.paged:
+            # the final generated token is emitted but never written back
+            # (the request finishes first), so the worst-case footprint is
+            # prompt + max_new - 1 cache rows.
+            worst = self.kv.pages_for(
+                min(len(prompt) + max_new_tokens - 1, self.capacity))
+            if worst > self.kv.num_pages:
+                raise ValueError(
+                    f"request needs up to {worst} pages but the pool has "
+                    f"{self.kv.num_pages}; enlarge num_pages or shorten "
+                    f"the request")
         self.queue.append(Request(rid, list(prompt), max_new_tokens))
         return rid
 
-    def _start_or_finish(self, slot: int, req: Request, first: int) -> None:
-        """Common post-prefill bookkeeping for both prefill paths."""
-        req.output.append(first)
-        # the prefill-produced token can already terminate the request
-        if ((self.eos_id is not None and first == self.eos_id)
-                or req.max_new_tokens <= 1):
-            req.done = True
-            self.finished.append(req)
-            return
-        self.next_token[slot] = first
-        self.slot_req[slot] = req
+    def _bucketed(self, length: int) -> int:
+        """Pad a prefill length to the bucket multiple (capped at capacity)
+        so jit caches stay O(#buckets), not O(#distinct lengths)."""
+        bucket = max(1, min(self.prefill_bucket, self.capacity))
+        return min(length + (-length) % bucket, self.capacity)
 
-    def _admit_one(self, slot: int, req: Request) -> None:
-        """Sequential path: one batch-1 prefill call + whole-state insert."""
-        toks = jnp.asarray([req.prompt], jnp.int32)
-        slot_state, logits = self.model.prefill(
-            self.params, {"tokens": toks}, self.capacity)
-        self.prefill_calls += 1
-        self.state = self._insert(self.state, slot_state, slot,
-                                  len(req.prompt))
-        self._start_or_finish(slot, req, int(jnp.argmax(logits[0, -1])))
-
-    def _admit_packed(self, slots: list[int], reqs: list[Request]) -> None:
-        """Packed path: ONE (1, ΣLᵢ) prefill for all drained requests."""
-        lengths = [len(r.prompt) for r in reqs]
+    def _packed_batch(self, reqs: list[Request]):
+        """Tokens + segment ids for a packed prefill of ``reqs`` (resume
+        prompts), padded to the prefill bucket."""
+        lengths = [len(r.resume_tokens) for r in reqs]
         offsets = np.concatenate([[0], np.cumsum(lengths)])
         total = int(offsets[-1])
         padded = total + (-total) % self.prefill_bucket
         toks = np.zeros((1, padded), np.int32)
         segs = np.full((1, padded), SEG_PAD_Q, np.int32)
         for i, r in enumerate(reqs):
-            toks[0, offsets[i]:offsets[i + 1]] = r.prompt
+            toks[0, offsets[i]:offsets[i + 1]] = r.resume_tokens
             segs[0, offsets[i]:offsets[i + 1]] = i
-        caches, logits = self.model.prefill_packed(
+        return toks, segs, offsets, lengths
+
+    def _start_or_finish(self, slot: int, req: Request, first: int) -> None:
+        """Common post-prefill bookkeeping for both prefill paths."""
+        req.output.append(first)
+        # the prefill-produced token can already terminate the request
+        if ((self.eos_id is not None and first == self.eos_id)
+                or len(req.output) >= req.max_new_tokens):
+            req.done = True
+            self.finished.append(req)
+            if self.paged:
+                self.kv.release(req.rid)
+            return
+        self.next_token[slot] = first
+        self.slot_req[slot] = req
+        self._admit_t[slot] = next(self._admit_counter)
+
+    # -------------------------------------------------- dense-mode admission
+    def _admit_one(self, slot: int, req: Request) -> None:
+        """Sequential path: one batch-1 prefill call + state insert. For
+        packed-capable families the prompt is padded to the prefill bucket
+        (one trace per bucket); families with recurrent state (SSM/hybrid/
+        enc-dec) prefill unpadded — padding would run the recurrence past
+        the real tokens."""
+        toks = req.resume_tokens
+        L = len(toks)
+        if self.model.supports_packed_prefill():
+            padded = self._bucketed(L)
+            arr = np.zeros((1, padded), np.int32)
+            arr[0, :L] = toks
+            segs = np.full((1, padded), SEG_PAD_Q, np.int32)
+            segs[0, :L] = 0
+            caches, logits = self._prefill_packed(
+                self.params, {"tokens": jnp.asarray(arr),
+                              "segment_ids": jnp.asarray(segs)})
+            self.prefill_calls += 1
+            self.state = self._insert_segment(self.state, caches, slot,
+                                              0, padded, L)
+            self._start_or_finish(slot, req, int(jnp.argmax(logits[0, L - 1])))
+            return
+        slot_state, logits = self.model.prefill(
+            self.params, {"tokens": jnp.asarray([toks], jnp.int32)},
+            self.capacity)
+        self.prefill_calls += 1
+        self.state = self._insert(self.state, slot_state, slot, L)
+        self._start_or_finish(slot, req, int(jnp.argmax(logits[0, -1])))
+
+    def _admit_packed(self, slots: list[int], reqs: list[Request]) -> None:
+        """Packed path: ONE (1, ΣLᵢ) prefill for all drained requests."""
+        toks, segs, offsets, lengths = self._packed_batch(reqs)
+        caches, logits = self._prefill_packed(
             self.params, {"tokens": jnp.asarray(toks),
                           "segment_ids": jnp.asarray(segs)})
         self.prefill_calls += 1
@@ -168,8 +302,47 @@ class ServingEngine:
             np.int32)
         for i, (slot, req) in enumerate(zip(slots, reqs)):
             self.state = self._insert_segment(
-                self.state, caches, slot, int(offsets[i]), lengths[i])
+                self.state, caches, slot, int(offsets[i]), lengths[i],
+                lengths[i])
             self._start_or_finish(slot, req, int(lasts[i]))
+
+    # -------------------------------------------------- paged-mode admission
+    def _place_paged(self, rows: list[int], reqs: list[Request],
+                     caches, offsets, lengths, lasts) -> None:
+        """Allocate pages, scatter the packed K/V rows into them (ONE jitted
+        scatter per admitted batch), and start or finish each request."""
+        tables = []
+        for req, length in zip(reqs, lengths):
+            ok = self.kv.alloc(req.rid, self.kv.pages_for(length))
+            assert ok, "admission reserved a page budget that vanished"
+            tables.append(self.kv.table(req.rid))
+        total = jax.tree.leaves(caches)[0].shape[3]
+        dest_page, dest_off = kvc.packed_destinations(
+            tables, offsets, lengths, self.page_size, total,
+            self.kv.num_pages)
+        self.state["caches"] = self._scatter(
+            self.state["caches"], caches, jnp.asarray(dest_page),
+            jnp.asarray(dest_off))
+        self._paged_dirty = True
+        for row, req, length, first in zip(rows, reqs, lengths, lasts):
+            self._kv_len_h[row] = length
+            self._start_or_finish(row, req, int(first))
+            if req.done:
+                self._kv_len_h[row] = 0    # pages already released
+
+    def _admit_packed_paged(self, rows: list[int], reqs: list[Request]) -> None:
+        """One bucketed (1, ΣLᵢ) prefill scattered into pages — also the
+        sequential paged path with a single-request batch."""
+        toks, segs, offsets, lengths = self._packed_batch(reqs)
+        caches, logits = self._prefill_packed(
+            self.params, {"tokens": jnp.asarray(toks),
+                          "segment_ids": jnp.asarray(segs)})
+        self.prefill_calls += 1
+        self._record_layout_stats(segs)
+        lasts = np.asarray(
+            jnp.argmax(logits[0, jnp.asarray(offsets[1:] - 1)], axis=-1),
+            np.int32)
+        self._place_paged(rows, reqs, caches, offsets, lengths, lasts)
 
     def _record_layout_stats(self, segs: np.ndarray) -> None:
         """Compile the packed call's causal+segment layout and count the
@@ -194,6 +367,38 @@ class ServingEngine:
 
     def _admit(self) -> None:
         free = [s for s in range(self.B) if self.slot_req[s] is None]
+        if self.paged:
+            take: list[Request] = []
+            # reserve a page for every ACTIVE row whose next token crosses
+            # a page boundary: admitting into those pages would trigger an
+            # immediate preempt of the request we just paid a prefill for
+            # (admit -> prefill -> preempt thrash).
+            reserved = sum(
+                1 for r in range(self.B)
+                if self.slot_req[r] is not None
+                and (int(self._kv_len_h[r]) // self.page_size
+                     >= len(self.kv.table(self.slot_req[r].rid))))
+            budget = self.kv.free_pages - reserved
+            while len(take) < len(free) and self.queue:
+                # +1 for the first decoded token, capped at capacity: a
+                # resume prompt of exactly `capacity` tokens still admits
+                # (its prefill emits one token, then the prepass finishes
+                # it at the capacity boundary).
+                need = self.kv.pages_for(
+                    min(len(self.queue[0].resume_tokens) + 1, self.capacity))
+                if need > budget:
+                    break  # head-of-line: keep arrival order
+                budget -= need
+                take.append(self.queue.popleft())
+            if not take:
+                return
+            rows = free[:len(take)]
+            if self.packed_prefill and len(take) > 1:
+                self._admit_packed_paged(rows, take)
+            else:
+                for row, req in zip(rows, take):
+                    self._admit_packed_paged([row], [req])
+            return
         n = min(len(free), len(self.queue))
         if n == 0:
             return
@@ -204,11 +409,91 @@ class ServingEngine:
             for slot, req in zip(free, reqs):
                 self._admit_one(slot, req)
 
+    # ------------------------------------------------------- paged scheduling
+    def _preempt(self, row: int) -> None:
+        """Reclaim a sequence's pages and requeue it at the queue FRONT with
+        its progress kept (resume_tokens); greedy decoding makes the resumed
+        output token-identical."""
+        req = self.slot_req[row]
+        self.kv.release(req.rid)
+        self.slot_req[row] = None
+        self._kv_len_h[row] = 0
+        self._paged_dirty = True
+        if len(req.resume_tokens) > self.capacity:
+            # already at per-sequence capacity: a resumed prefill could not
+            # decode further (the prepass would capacity-finish it one step
+            # later) and its resume prompt would not even pass submit-time
+            # validation — finish it here instead of requeueing.
+            req.done = True
+            self.finished.append(req)
+            return
+        self.queue.appendleft(req)
+        self.preemptions += 1
+
+    def _youngest_active(self) -> int:
+        rows = [r for r in range(self.B) if self.slot_req[r] is not None]
+        return max(rows, key=lambda r: self._admit_t[r])
+
+    def _paged_prepass(self) -> None:
+        """Before a decode step, make sure every active sequence has a page
+        for its next token; preempt the youngest sequence when the pool is
+        exhausted (oldest-first service guarantees progress)."""
+        rows = sorted((r for r in range(self.B)
+                       if self.slot_req[r] is not None),
+                      key=lambda r: self._admit_t[r])
+        for row in rows:
+            req = self.slot_req[row]
+            if req is None:
+                continue  # preempted as a victim earlier in this pass
+            lp = int(self._kv_len_h[row]) // self.page_size
+            if lp < len(self.kv.table(req.rid)):
+                continue
+            if lp >= self.pages_per_seq:
+                # per-sequence capacity exhausted: the dense engine would
+                # silently overrun its slot here; finish the request instead.
+                req.done = True
+                self.finished.append(req)
+                self.kv.release(req.rid)
+                self.slot_req[row] = None
+                self._kv_len_h[row] = 0
+                self._paged_dirty = True
+                continue
+            while not self.kv.alloc(req.rid, 1):
+                victim = self._youngest_active()
+                self._preempt(victim)
+                if victim == row:
+                    break
+            else:
+                self._paged_dirty = True   # table gained a page
+
     # ------------------------------------------------------------------ step
     def step(self) -> None:
         self._admit()
-        if not any(r is not None for r in self.slot_req):
-            return
+        if self.paged:
+            self._paged_prepass()
+        active = [s for s, r in enumerate(self.slot_req) if r is not None]
+        self.last_step_stats = {
+            "active": len(active),
+            "occupancy": len(active) / self.B,
+            "pool_utilization": (self.kv.utilization() if self.paged
+                                 else None),
+            "queued": len(self.queue),
+        }
+        if not active:
+            return  # e.g. every admitted request finished at prefill
+        self.peak_active = max(self.peak_active, len(active))
+        if self.paged and self._paged_dirty:
+            # upload the host allocator's view only when it changed
+            # (admission, page append, finish, preemption). On event-free
+            # steps — most steps, for page_size >> 1 — the device table is
+            # already current and decode_step's own kv_len+1 matches the
+            # host mirror's increment below.
+            row_rids = [r.rid if r is not None else None
+                        for r in self.slot_req]
+            self.state["page_table"] = jnp.asarray(
+                self.kv.table_array(row_rids, self.pages_per_seq))
+            self.state["kv_len"] = jnp.asarray(self._kv_len_h, jnp.int32)
+            self._paged_dirty = False
         tok = jnp.asarray(self.next_token)
         self.state, logits = self._decode(self.params, self.state, tok)
         self.decode_calls += 1
@@ -219,15 +504,51 @@ class ServingEngine:
             t = int(nxt[slot])
             req.output.append(t)
             self.next_token[slot] = t
+            if self.paged:
+                self._kv_len_h[slot] += 1
             hit_eos = self.eos_id is not None and t == self.eos_id
             if len(req.output) >= req.max_new_tokens or hit_eos:
                 req.done = True
                 self.finished.append(req)
                 self.slot_req[slot] = None
+                if self.paged:
+                    self.kv.release(req.rid)
+                    self._kv_len_h[slot] = 0
+                    self._paged_dirty = True
+        # post-decode queue depth (finish/reclaim just happened)
+        self.last_step_stats["queued"] = len(self.queue)
 
-    def run(self, max_steps: int = 10_000) -> list[Request]:
+    def run(self, max_steps: int = 10_000, on_step=None) -> list[Request]:
+        """Drive the engine to drain. ``on_step(engine)`` is called after
+        every step — the one place per-step observability hangs off
+        (``last_step_stats``, pool utilization), instead of each caller
+        hand-rolling the drain loop."""
         for _ in range(max_steps):
             if not self.queue and all(r is None for r in self.slot_req):
                 break
             self.step()
+            if on_step is not None:
+                on_step(self)
         return self.finished
+
+    # --------------------------------------------------------- observability
+    @staticmethod
+    def step_stats_printer():
+        """``run(on_step=...)`` callback printing per-step batch occupancy
+        and page-pool utilization (shared by launch/serve.py and the
+        serving examples — one format, one place)."""
+        counter = itertools.count(1)
+
+        def show(e):
+            s = e.last_step_stats
+            util = (f" pool {s['pool_utilization']:.0%}"
+                    if s["pool_utilization"] is not None else "")
+            print(f"  step {next(counter):>3}: batch {s['active']}/{e.B} "
+                  f"({s['occupancy']:.0%}){util} queued {s['queued']}")
+
+        return show
+
+    def cache_bytes(self) -> int:
+        """HBM bytes resident in the decode KV state (pool or slot cache)."""
+        return int(sum(leaf.nbytes
+                       for leaf in jax.tree.leaves(self.state["caches"])))

@@ -1,0 +1,158 @@
+"""Paged KV cache: the mask IR's kv block as the unit of cache ALLOCATION.
+
+FlashAttention processes attention in SRAM-sized tiles so HBM traffic
+scales with the tiles actually touched; the serving-side dual is to
+allocate cache memory in the same tiles. The device state is a shared page
+pool — per-layer ``(L, hkv, num_pages, page_size, hd)`` arrays — and each
+sequence owns a *page table* mapping its logical kv blocks (positions
+``[t*page_size, (t+1)*page_size)``) to physical pool pages. Consequences:
+
+  * a request's resident bytes are ``ceil(len / page_size)`` pages, not a
+    fixed per-slot capacity — short requests stop paying for long ones;
+  * admission is bound by the free-page budget, not by slot count, so the
+    decode batch can hold many more concurrent short sequences than the
+    dense ``num_slots x capacity`` cache at equal HBM;
+  * because the page IS the mask IR's kv block (page_size == block_k),
+    ``masks.paged_block_layout`` classifies pages SKIP / FULL / PARTIAL
+    exactly as the contiguous kernels classify blocks — SKIP (and
+    unallocated) pages are provably never dereferenced;
+  * pages freed by finished sequences are reused immediately; after churn
+    a sequence's pages are scattered through the pool (fragmentation is
+    free — the indirection already pays for it).
+
+This module owns the HOST side: the allocator (free list, per-sequence
+tables, utilization counters) plus the two pure device functions the
+engine jits — the packed-prefill page scatter and the destination-index
+builder. The device pool itself lives in the engine's decode state
+(``Model.init_paged_decode_state``) so it can be donated through the
+decode step.
+"""
+
+from __future__ import annotations
+
+import collections
+
+import jax
+import numpy as np
+
+__all__ = ["PagedKVCache", "scatter_packed_segments",
+           "packed_destinations", "pages_for"]
+
+
+def pages_for(n_tokens: int, page_size: int) -> int:
+    """Pages needed to hold n_tokens cache rows."""
+    return -(-max(n_tokens, 0) // page_size)
+
+
+class PagedKVCache:
+    """Host-side page allocator: free list + per-sequence page tables.
+
+    Pages are identified by index into the pool's page dim. The free list
+    is a FIFO deque: pages released by finished sequences go to the back,
+    so sustained churn naturally produces non-contiguous (fragmented)
+    tables — which the indirection makes costless, and which the tests
+    exercise deliberately.
+    """
+
+    def __init__(self, num_pages: int, page_size: int):
+        if num_pages < 1 or page_size < 1:
+            raise ValueError(
+                f"paged KV cache needs at least one page of at least one "
+                f"row, got num_pages={num_pages}, page_size={page_size}")
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self.free: collections.deque[int] = collections.deque(range(num_pages))
+        self.tables: dict[int, list[int]] = {}       # rid -> physical pages
+        # observability
+        self.alloc_events = 0
+        self.free_events = 0
+        self.peak_in_use = 0
+
+    # ------------------------------------------------------------- accounting
+    @property
+    def used_pages(self) -> int:
+        return self.num_pages - len(self.free)
+
+    @property
+    def free_pages(self) -> int:
+        return len(self.free)
+
+    def utilization(self) -> float:
+        return self.used_pages / self.num_pages
+
+    def pages_for(self, n_tokens: int) -> int:
+        return pages_for(n_tokens, self.page_size)
+
+    # ------------------------------------------------------------- alloc/free
+    def alloc(self, rid: int, n_pages: int) -> bool:
+        """Extend rid's table by n_pages. All-or-nothing: returns False
+        (allocating nothing) when the pool cannot satisfy the request."""
+        if n_pages > len(self.free):
+            return False
+        table = self.tables.setdefault(rid, [])
+        for _ in range(n_pages):
+            table.append(self.free.popleft())
+        self.alloc_events += n_pages
+        self.peak_in_use = max(self.peak_in_use, self.used_pages)
+        return True
+
+    def release(self, rid: int) -> int:
+        """Reclaim all of rid's pages (EOS / finish / preemption)."""
+        table = self.tables.pop(rid, [])
+        self.free.extend(table)
+        self.free_events += len(table)
+        return len(table)
+
+    def table(self, rid: int) -> list[int]:
+        return self.tables.get(rid, [])
+
+    def table_array(self, row_rids: list[int | None],
+                    pages_per_seq: int) -> np.ndarray:
+        """(B, pages_per_seq) int32 device-ready page table; -1 =
+        unallocated (rows without a sequence are all -1 and therefore
+        all-SKIP for the mask IR and write-dropped by the decode scatter)."""
+        out = np.full((len(row_rids), pages_per_seq), -1, np.int32)
+        for row, rid in enumerate(row_rids):
+            if rid is None:
+                continue
+            t = self.tables.get(rid, [])
+            out[row, :len(t)] = t
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Packed prefill -> pages: ONE traced scatter
+# ---------------------------------------------------------------------------
+
+def packed_destinations(tables: list[list[int]], offsets: np.ndarray,
+                        lengths: list[int], page_size: int, total: int,
+                        num_pages: int) -> tuple[np.ndarray, np.ndarray]:
+    """Map every packed-token position to its (physical page, in-page
+    offset) destination. Positions outside any segment (bucket padding)
+    map to page ``num_pages`` — out of bounds, dropped by the scatter.
+    Host numpy: the result is data to a single jitted scatter whose trace
+    depends only on the (bucketed) packed length, not on the packing
+    layout — this is what kills the dense engine's per-(slot, length)
+    ``_insert_segment`` retrace family."""
+    dest_page = np.full((total,), num_pages, np.int32)
+    dest_off = np.zeros((total,), np.int32)
+    for table, o, n in zip(tables, offsets, lengths):
+        pos = np.arange(n)
+        dest_page[o:o + n] = np.asarray(table, np.int32)[pos // page_size]
+        dest_off[o:o + n] = pos % page_size
+    return dest_page, dest_off
+
+
+def scatter_packed_segments(pool_caches, packed_caches, dest_page, dest_off):
+    """Scatter a packed prefill's K/V rows straight into pool pages.
+
+    pool leaves: (L, hkv, num_pages, page_size, hd); packed leaves
+    (L, 1, hkv, S, hd); dest_page/dest_off: (S,) int32 with out-of-bounds
+    page ids for padding rows (mode='drop'). Jitted by the engine with the
+    pool donated — one in-place HBM pass per admitted batch.
+    """
+    def scat(pool, packed):
+        src = packed[:, 0].astype(pool.dtype)            # (L, hkv, S, hd)
+        return pool.at[:, :, dest_page, dest_off, :].set(src, mode="drop")
+
+    return jax.tree.map(scat, pool_caches, packed_caches)

@@ -1,4 +1,5 @@
-"""Block-sparse FlashAttention (Alg. 5) + split-KV decode kernel tests."""
+"""Block-sparse FlashAttention (Alg. 5) + split-KV decode kernel tests
+(contiguous and paged cache geometries)."""
 
 import jax
 import jax.numpy as jnp
@@ -6,7 +7,7 @@ import numpy as np
 import pytest
 
 from repro.core import masks as M
-from repro.kernels.flash_decode import flash_decode
+from repro.kernels.flash_decode import flash_decode, flash_decode_paged
 from repro.kernels.ops import flash_attention
 from repro.kernels.ref import standard_attention
 
@@ -153,6 +154,135 @@ def test_decode_kv_mask_matches_standard():
     spec = AttentionSpec(use_decode_kernel=False)
     o_xla = decode_attention(q, k, v, kv_len, spec, kv_mask=kvm)
     np.testing.assert_allclose(o, o_xla, **TOL)
+
+
+def test_decode_capacity_validation():
+    """Misaligned cache geometry raises up front instead of silently
+    padding (which changed the grid and HBM traffic behind the caller)."""
+    q, k, v = _qkv(9, 1, 2, 2, 1, 384, 32)
+    kv_len = jnp.array([100], jnp.int32)
+    with pytest.raises(ValueError, match="multiple of block_k"):
+        flash_decode(q, k, v, kv_len, block_k=256, num_splits=1)
+    with pytest.raises(ValueError, match="num_splits"):
+        flash_decode(q, k, v, kv_len, block_k=128, num_splits=2)  # 3 blocks
+    # shape-derived clamps still apply: block bigger than the cache and
+    # more splits than blocks are deterministic no-ops, not errors.
+    q2, k2, v2 = _qkv(9, 1, 2, 2, 1, 64, 32)
+    o = flash_decode(q2, k2, v2, jnp.array([64], jnp.int32),
+                     block_k=128, num_splits=8)
+    np.testing.assert_allclose(o, standard_attention(q2, k2, v2), **TOL)
+
+
+# ---------------------------------------------------------------------------
+# paged split-KV decode (page-table indirection)
+# ---------------------------------------------------------------------------
+
+def _paged_case(seed, b, hq, hkv, d, ps, T, num_pages, kv_len):
+    """Random pool + per-sequence tables whose allocated pages are
+    deliberately scattered (and interleaved across sequences)."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (b, hq, 1, d))
+    k_pool = jax.random.normal(ks[1], (hkv, num_pages, ps, d))
+    v_pool = jax.random.normal(ks[2], (hkv, num_pages, ps, d))
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(num_pages)
+    table = np.full((b, T), -1, np.int32)
+    used = 0
+    for i, n in enumerate(-(-np.asarray(kv_len) // ps)):
+        table[i, :n] = perm[used:used + n]
+        used += n
+    return q, k_pool, v_pool, jnp.asarray(table), jnp.asarray(kv_len, jnp.int32)
+
+
+def _paged_oracle(q, k_pool, v_pool, table, kv_len, window=None):
+    """Gather the logical view with numpy indexing and run the standard
+    oracle over the shared validity band."""
+    hkv, num_pages, ps, d = k_pool.shape
+    b, T = table.shape
+    safe = np.clip(np.asarray(table), 0, num_pages - 1)
+
+    def gather(pool):
+        return jnp.transpose(pool[:, safe], (1, 0, 2, 3, 4)).reshape(
+            b, hkv, T * ps, d)
+
+    kvm = M.decode_kv_valid(kv_len, T * ps, window=window)
+    o = standard_attention(q, gather(k_pool), gather(v_pool), kv_mask=kvm)
+    return jnp.where((kv_len == 0)[:, None, None, None], 0.0, o)
+
+
+@pytest.mark.parametrize("splits,window", [(1, None), (3, None), (6, 20)])
+def test_paged_decode_matches_oracle(splits, window):
+    b, hq, hkv, d, ps, T, P = 3, 4, 2, 32, 8, 6, 24
+    kv_len = [13, 48, 0]
+    q, kp, vp, table, kvl = _paged_case(0, b, hq, hkv, d, ps, T, P, kv_len)
+    o = flash_decode_paged(q, kp, vp, table, kvl, num_splits=splits,
+                           window=window)
+    np.testing.assert_allclose(o, _paged_oracle(q, kp, vp, table, kvl,
+                                                window=window), **TOL)
+
+
+def test_paged_decode_xla_parity_and_dispatch():
+    """Kernel and XLA gather paths agree through paged_decode_attention."""
+    from repro.core.attention import AttentionSpec, paged_decode_attention
+    b, hq, hkv, d, ps, T, P = 2, 4, 2, 16, 8, 4, 16
+    q, kp, vp, table, kvl = _paged_case(1, b, hq, hkv, d, ps, T, P, [19, 32])
+    o_xla = paged_decode_attention(q, kp, vp, table, kvl,
+                                   AttentionSpec(use_decode_kernel=False))
+    o_ker = paged_decode_attention(
+        q, kp, vp, table, kvl,
+        AttentionSpec(use_decode_kernel=True, num_decode_splits=2))
+    np.testing.assert_allclose(o_ker, o_xla, **TOL)
+    np.testing.assert_allclose(o_xla, _paged_oracle(q, kp, vp, table, kvl),
+                               **TOL)
+
+
+def test_paged_decode_gqa_matches_contiguous():
+    """Chopping a contiguous cache into (permuted) pages changes nothing."""
+    b, hq, hkv, cap, d, ps = 2, 8, 2, 256, 32, 32
+    q, k, v = _qkv(5, b, hq, hkv, 1, cap, d)
+    kv_len = jnp.array([256, 128], jnp.int32)
+    o_contig = flash_decode(q, k, v, kv_len, num_splits=4, block_k=64)
+
+    T = cap // ps
+    rng = np.random.default_rng(5)
+    perm = rng.permutation(b * T)
+    pool_k = np.zeros((hkv, b * T, ps, d), np.float32)
+    pool_v = np.zeros_like(pool_k)
+    table = np.zeros((b, T), np.int32)
+    for i in range(b):
+        for t in range(T):
+            pg = int(perm[i * T + t])
+            pool_k[:, pg] = np.asarray(k)[i, :, t * ps:(t + 1) * ps]
+            pool_v[:, pg] = np.asarray(v)[i, :, t * ps:(t + 1) * ps]
+            table[i, t] = pg
+    o_paged = flash_decode_paged(q, jnp.asarray(pool_k), jnp.asarray(pool_v),
+                                 jnp.asarray(table), kv_len, num_splits=4)
+    np.testing.assert_allclose(o_paged, o_contig, **TOL)
+
+
+def test_paged_skip_pages_provably_never_read():
+    """NaN-poison every page NOT named by an (allocated, valid) table entry:
+    the kernel must still produce the exact oracle answer — SKIP and
+    unallocated pages are never touched by the compute."""
+    b, hq, hkv, d, ps, T, P = 2, 2, 2, 16, 8, 4, 16
+    q, kp, vp, table, kvl = _paged_case(2, b, hq, hkv, d, ps, T, P, [11, 26])
+    ref = _paged_oracle(q, kp, vp, table, kvl)
+    live = {int(p) for row, n in zip(np.asarray(table),
+                                     -(-np.asarray(kvl) // ps))
+            for p in row[:n]}
+    dead = jnp.asarray([p for p in range(P) if p not in live])
+    kp = kp.at[:, dead].set(jnp.nan)
+    vp = vp.at[:, dead].set(jnp.nan)
+    o = flash_decode_paged(q, kp, vp, table, kvl, num_splits=2)
+    assert not bool(jnp.any(jnp.isnan(o)))
+    np.testing.assert_allclose(o, ref, **TOL)
+
+
+def test_paged_num_splits_validation():
+    b, hq, hkv, d, ps, T, P = 1, 2, 2, 16, 8, 6, 8
+    q, kp, vp, table, kvl = _paged_case(3, b, hq, hkv, d, ps, T, P, [20])
+    with pytest.raises(ValueError, match="num_splits"):
+        flash_decode_paged(q, kp, vp, table, kvl, num_splits=4)  # 6 % 4
 
 
 def test_decode_window_masks_old_positions():

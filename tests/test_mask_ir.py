@@ -180,6 +180,43 @@ def test_decode_kv_valid_band():
     np.testing.assert_array_equal(full, np.arange(8)[None, :] < np.asarray(kv_len)[:, None])
 
 
+@pytest.mark.parametrize("window", [None, 5, 11])
+def test_paged_block_layout_matches_element_mask(window):
+    """The page-table lowering preserves the mask-IR invariant under
+    indirection: expanding the (b, T) page classes back to element
+    granularity reproduces the fused decode validity band exactly, and
+    unallocated table entries expand to all-False (provably skippable —
+    a kernel walking the table never dereferences them)."""
+    ps, T, num_pages = 8, 6, 32
+    kv_len = jnp.asarray([0, 3, 8, 29, 48])
+    b = kv_len.shape[0]
+    rng = np.random.default_rng(0)
+    perm = rng.permutation(num_pages)
+    table = np.full((b, T), -1, np.int32)
+    used = 0
+    for i, n in enumerate(-(-np.asarray(kv_len) // ps)):
+        table[i, :n] = perm[used:used + n]
+        used += n
+
+    valid = M.decode_kv_valid(kv_len, T * ps, window=window)
+    layout = M.paged_block_layout(kv_len, jnp.asarray(table), ps,
+                                  window=window)
+    got = M.layout_to_element_mask(layout[:, None, :], 1, ps, 1, T * ps,
+                                   base_mask=valid[:, None, :])
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(valid[:, None, :]))
+    # unallocated entries are SKIP regardless of the validity band; an
+    # (inconsistent) band cannot resurrect them
+    bad = M.paged_block_layout(kv_len, jnp.full((b, T), -1, jnp.int32), ps,
+                               window=window)
+    np.testing.assert_array_equal(np.asarray(bad),
+                                  np.full((b, T), M.BLOCK_SKIP))
+    # class semantics match the contiguous classifier on the same band
+    np.testing.assert_array_equal(
+        np.asarray(jnp.where(jnp.asarray(table) < 0, M.BLOCK_SKIP,
+                             M.kv_block_layout(valid, ps))),
+        np.asarray(layout))
+
+
 def test_vectorized_builders_agree_with_definition():
     """The numpy-broadcast builders classify exactly like the per-element
     masks they summarize (FULL blocks all-True, SKIP all-False)."""
