@@ -23,7 +23,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import time_call
-from repro.core import masks as M
+from repro.core import io_model, masks as M
+from repro.kernels import tuning
 from repro.kernels.ref import chunked_attention, standard_attention
 
 
@@ -92,6 +93,22 @@ def run(smoke: bool = False) -> list[tuple[str, float, str]]:
     # mask IR skip-rate report (Prop. 4 structure, incl. packed padded tail)
     report_n = 512 if smoke else 4096
     rows.extend(_layout_skip_rows(report_n, 128))
+
+    # kernel-tuner report (pure arithmetic, runs in smoke too): the analytic
+    # chooser's tiles vs the old fixed 128/128 default, scored on the
+    # Theorem-2 HBM-byte surface. The long-sequence rows are the PR-4
+    # acceptance signal: chosen-config bytes must not exceed fixed-128/128.
+    for n in [4096, 32768] if not smoke else [4096]:
+        for d in [64, 128]:
+            cfg = tuning.choose_tile_config(n, n, d, backward=True)
+            chosen = io_model.flash_hbm_bytes_tiled(
+                n, n, d, 1, 1, cfg.block_q, cfg.block_k, elt=2)
+            fixed = io_model.flash_hbm_bytes_tiled(n, n, d, 1, 1, 128, 128,
+                                                   elt=2)
+            rows.append((f"autotune_chosen_vs_128_hbm_N{n}_d{d}",
+                         chosen / fixed,
+                         f"block_q={cfg.block_q} block_k={cfg.block_k} "
+                         f"budget={tuning.sram_budget()} src={cfg.source}"))
     return rows
 
 

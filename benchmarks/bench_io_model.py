@@ -10,9 +10,9 @@ Checks (exact arithmetic, no hardware needed):
 
 from __future__ import annotations
 
-from benchmarks.common import (blocksparse_flash_hbm_bytes,
-                               flash_attention_hbm_bytes,
-                               standard_attention_hbm_bytes)
+from repro.core.io_model import (blocksparse_flash_hbm_bytes,
+                                 flash_attention_hbm_bytes,
+                                 standard_attention_hbm_bytes)
 
 
 def run() -> list[tuple[str, float, str]]:

@@ -1,5 +1,10 @@
-"""Shared benchmark utilities: timing, the IO-cost model (paper Theorem 2 /
-Prop. 4), and hardware constants."""
+"""Shared benchmark utilities: timing + re-exports of the IO-cost model.
+
+The Theorem-2 / Prop.-4 accounting and the hardware constants now live in
+``repro.core.io_model`` (product code — the kernel tuner imports them to
+CHOOSE tile sizes, see kernels/tuning.py); they are re-exported here so
+existing benchmark imports keep working, with no duplicated formulas.
+"""
 
 from __future__ import annotations
 
@@ -8,14 +13,11 @@ import time
 import jax
 import numpy as np
 
-# paper Fig. 2 setting (A100): used for the analytic reproduction numbers
-A100_SRAM_BYTES = 192 * 1024          # per SM
-A100_HBM_BW = 1.555e12
-
-# TPU v5e targets (roofline §)
-V5E_PEAK_FLOPS = 197e12
-V5E_HBM_BW = 819e9
-V5E_VMEM_BYTES = 128 * 1024 * 1024
+from repro.core.io_model import (  # noqa: F401
+    A100_HBM_BW, A100_SRAM_BYTES, V5E_HBM_BW, V5E_PEAK_FLOPS,
+    V5E_VMEM_BYTES, attention_flops, attention_working_set_bytes,
+    blocksparse_flash_hbm_bytes, flash_attention_hbm_bytes,
+    flash_hbm_bytes_tiled, standard_attention_hbm_bytes)
 
 
 def time_call(fn, *args, iters: int = 5, warmup: int = 2) -> float:
@@ -28,65 +30,3 @@ def time_call(fn, *args, iters: int = 5, warmup: int = 2) -> float:
         jax.block_until_ready(fn(*args))
         ts.append(time.perf_counter() - t0)
     return float(np.median(ts))
-
-
-# ---------------------------------------------------------------------------
-# IO-cost model (exact accounting of Algorithm 0 vs Algorithm 1/5)
-# ---------------------------------------------------------------------------
-
-def standard_attention_hbm_bytes(n: int, d: int, heads: int, batch: int,
-                                 elt: int = 2, fwd_and_bwd: bool = True) -> float:
-    """Algorithm 0: Theta(Nd + N^2) accesses, counted exactly:
-    fwd: read Q,K (2Nd) write S (N^2), read S write P (2N^2),
-    read P,V (N^2 + Nd) write O (Nd) => 4Nd + 4N^2 (elements).
-    bwd (Alg. 3): read P,dO write dV; read dO,V write dP; read P,dP write dS;
-    read dS,K write dQ; read dS,Q write dK => 6Nd + 5N^2 + (dS write) N^2.
-    """
-    bh = batch * heads
-    fwd = 4 * n * d + 4 * n * n
-    bwd = 8 * n * d + 6 * n * n
-    total = fwd + (bwd if fwd_and_bwd else 0)
-    return float(total * bh * elt)
-
-
-def flash_attention_hbm_bytes(n: int, d: int, heads: int, batch: int,
-                              sram_bytes: float, elt: int = 2,
-                              fwd_and_bwd: bool = True,
-                              block_c: int | None = None) -> float:
-    """Algorithm 1: Theta(N^2 d^2 M^-1). With B_c = ceil(M/4d) (paper line 1),
-    T_c = ceil(N/B_c) passes over Q and O:
-    fwd: read K,V once (2Nd) + T_c * (read Q + read/write O) (3Nd T_c)
-    bwd (Alg. 4): K,V once + dK,dV once (4Nd) + T_c * (Q,O,dO,dQ r/w: 5Nd).
-    """
-    m_elems = sram_bytes / elt
-    bc = block_c if block_c is not None else max(1, int(m_elems // (4 * d)))
-    tc = int(np.ceil(n / bc))
-    bh = batch * heads
-    fwd = 2 * n * d + 3 * n * d * tc
-    bwd = 4 * n * d + 5 * n * d * tc
-    total = fwd + (bwd if fwd_and_bwd else 0)
-    return float(total * bh * elt)
-
-
-def blocksparse_flash_hbm_bytes(n: int, d: int, heads: int, batch: int,
-                                sram_bytes: float, density: float,
-                                elt: int = 2, fwd_and_bwd: bool = True) -> float:
-    """Prop. 4: Theta(Nd + N^2 d^2 M^-1 s): the T_c passes scale by s."""
-    m_elems = sram_bytes / elt
-    bc = max(1, int(m_elems // (4 * d)))
-    tc = int(np.ceil(n / bc))
-    bh = batch * heads
-    fwd = 2 * n * d + 3 * n * d * tc * density
-    bwd = 4 * n * d + 5 * n * d * tc * density
-    total = fwd + (bwd if fwd_and_bwd else 0)
-    return float(total * bh * elt)
-
-
-def attention_flops(n: int, d: int, heads: int, batch: int,
-                    fwd_and_bwd: bool = True, recompute: bool = True) -> float:
-    """Matmul FLOPs: fwd 4N^2d (QK^T + PV), bwd 8N^2d (dV, dP, dQ, dK)
-    + recomputation of S in the flash backward (+2N^2d)."""
-    bh = batch * heads
-    fwd = 4 * n * n * d
-    bwd = 8 * n * n * d + (2 * n * n * d if recompute else 0)
-    return float((fwd + (bwd if fwd_and_bwd else 0)) * bh)

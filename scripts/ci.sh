@@ -4,12 +4,25 @@
 # smoke pass so layout-compiler / harness regressions fail here instead of
 # rotting silently. The smoke set includes bench_serve_throughput, which
 # asserts the paged KV-cache engine beats the dense slot ceiling at equal
-# HBM with token-identical outputs (DESIGN.md §6.5).
+# HBM with token-identical outputs (DESIGN.md §6.5), and the attention
+# sweep's autotune rows (chosen-config vs fixed-128/128 HBM bytes).
+#
+# The kernel autotuner (kernels/tuning.py) gets a write+read roundtrip
+# against a throwaway cache: the first --smoke run times candidates and
+# persists the winner; the second MUST be served from the cache
+# (--expect-hit exits nonzero otherwise).
 set -euo pipefail
 
 cd "$(dirname "$0")/.."
 
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
+
+echo "== autotune smoke roundtrip (repro.kernels.tuning --smoke) =="
+TUNE_CACHE="$(mktemp -d)/autotune.json"
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m repro.kernels.tuning --smoke --cache "$TUNE_CACHE"
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m repro.kernels.tuning --smoke --cache "$TUNE_CACHE" --expect-hit
 
 echo "== benchmark smoke (benchmarks.run --smoke) =="
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.run --smoke

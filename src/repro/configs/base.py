@@ -29,6 +29,11 @@ class ModelConfig:
     qk_norm: bool = False
     rope_theta: float = 10_000.0
     attn_dropout: float = 0.0
+    # kernel tile geometry: None = auto (resolved per call site through
+    # kernels.tuning); explicit values pin the grid and are validated.
+    attn_block_q: int | None = None
+    attn_block_k: int | None = None
+    num_decode_splits: int | None = None
 
     # norms / mlp
     norm_type: Literal["rmsnorm", "layernorm", "layernorm_np"] = "rmsnorm"

@@ -46,16 +46,23 @@ AttnImpl = Literal["pallas", "chunked", "reference", "block_sparse"]
 
 @dataclasses.dataclass(frozen=True)
 class AttentionSpec:
-    """Static attention configuration carried by model configs."""
+    """Static attention configuration carried by model configs.
+
+    ``block_q`` / ``block_k`` / ``num_decode_splits`` default to ``None`` =
+    **auto**: every consumer resolves them through ``kernels.tuning`` (the
+    analytic SRAM-budget chooser, or the empirical autotuner when enabled)
+    at the call site where the true shapes are known. Explicit integers pin
+    the geometry and are validated, never silently adjusted.
+    """
     impl: AttnImpl = "chunked"
     causal: bool = True
     window: int | None = None
     dropout_p: float = 0.0
-    block_q: int = 128
-    block_k: int = 128
+    block_q: int | None = None
+    block_k: int | None = None
     chunk_size: int = 1024
     variant: str = "fa2"            # pallas accumulator variant: "paper"|"fa2"
-    num_decode_splits: int = 8
+    num_decode_splits: int | None = None
     use_decode_kernel: bool = False
     unroll_chunks: bool = False     # dry-run cost probes only
     pv_bf16: bool = False           # cast P to bf16 for P@V (f32 accumulate)

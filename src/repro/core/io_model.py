@@ -1,0 +1,193 @@
+"""The paper's IO-cost model as importable library code (Theorem 2 /
+Props. 3-4), plus the tile-level accounting the kernel tuner optimizes.
+
+Until PR 4 these formulas lived in ``benchmarks/common.py`` as a
+validation-only artifact; ``kernels/tuning.py`` now imports them to *choose*
+tile sizes (the paper's Alg. 1 line 1 made a real decision instead of an
+inherited ``block=128`` constant), and the benchmarks re-import them from
+here so there is exactly one copy of the arithmetic.
+
+Two granularities:
+
+* **M-derived** (``flash_attention_hbm_bytes``): the paper's own accounting,
+  parameterized by the SRAM budget M with ``B_c = ceil(M/4d)`` — used to
+  validate the Theta(N^2 d^2 / M) claims.
+* **Tile-derived** (``flash_hbm_bytes_tiled``): the same pass-counting for an
+  *explicit* ``(block_q, block_k)`` choice and loop order — the objective
+  surface ``kernels.tuning.choose_tile_config`` minimizes, and what the
+  benchmarks report as "chosen config vs fixed 128/128".
+
+``attention_working_set_bytes`` accounts the VMEM residency of one grid step
+of the actual Pallas kernels (q/k/v/o tiles, the S/P tile, f32 accumulators,
+lane-replicated m/l/delta scratch) so the chooser can pick the largest tiles
+that *fit* — Alg. 1 line 1 with the kernel's true footprint instead of the
+paper's 4·B·d idealization.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+# paper Fig. 2 setting (A100): used for the analytic reproduction numbers
+A100_SRAM_BYTES = 192 * 1024          # per SM
+A100_HBM_BW = 1.555e12
+
+# TPU v5e targets (roofline §)
+V5E_PEAK_FLOPS = 197e12
+V5E_HBM_BW = 819e9
+V5E_VMEM_BYTES = 128 * 1024 * 1024
+
+# Per-core VMEM is ~16 MiB on current TPUs (pallas guide §Memory); the
+# default tuner budget leaves half for Pallas's double-buffered pipeline
+# (each BlockSpec stages the *next* tile while the current one computes)
+# and for code/stack slop.
+TPU_CORE_VMEM_BYTES = 16 * 1024 * 1024
+DEFAULT_SRAM_BUDGET = TPU_CORE_VMEM_BYTES // 2
+
+LANES = 128    # TPU vreg lane count (last tile dim)
+SUBLANES = 8   # f32 sublane count (second-to-last tile dim)
+
+
+# ---------------------------------------------------------------------------
+# IO-cost model (exact accounting of Algorithm 0 vs Algorithm 1/5)
+# ---------------------------------------------------------------------------
+
+def standard_attention_hbm_bytes(n: int, d: int, heads: int, batch: int,
+                                 elt: int = 2, fwd_and_bwd: bool = True) -> float:
+    """Algorithm 0: Theta(Nd + N^2) accesses, counted exactly:
+    fwd: read Q,K (2Nd) write S (N^2), read S write P (2N^2),
+    read P,V (N^2 + Nd) write O (Nd) => 4Nd + 4N^2 (elements).
+    bwd (Alg. 3): read P,dO write dV; read dO,V write dP; read P,dP write dS;
+    read dS,K write dQ; read dS,Q write dK => 6Nd + 5N^2 + (dS write) N^2.
+    """
+    bh = batch * heads
+    fwd = 4 * n * d + 4 * n * n
+    bwd = 8 * n * d + 6 * n * n
+    total = fwd + (bwd if fwd_and_bwd else 0)
+    return float(total * bh * elt)
+
+
+def flash_attention_hbm_bytes(n: int, d: int, heads: int, batch: int,
+                              sram_bytes: float, elt: int = 2,
+                              fwd_and_bwd: bool = True,
+                              block_c: int | None = None) -> float:
+    """Algorithm 1: Theta(N^2 d^2 M^-1). With B_c = ceil(M/4d) (paper line 1),
+    T_c = ceil(N/B_c) passes over Q and O:
+    fwd: read K,V once (2Nd) + T_c * (read Q + read/write O) (3Nd T_c)
+    bwd (Alg. 4): K,V once + dK,dV once (4Nd) + T_c * (Q,O,dO,dQ r/w: 5Nd).
+    """
+    m_elems = sram_bytes / elt
+    bc = block_c if block_c is not None else max(1, int(m_elems // (4 * d)))
+    tc = int(np.ceil(n / bc))
+    bh = batch * heads
+    fwd = 2 * n * d + 3 * n * d * tc
+    bwd = 4 * n * d + 5 * n * d * tc
+    total = fwd + (bwd if fwd_and_bwd else 0)
+    return float(total * bh * elt)
+
+
+def blocksparse_flash_hbm_bytes(n: int, d: int, heads: int, batch: int,
+                                sram_bytes: float, density: float,
+                                elt: int = 2, fwd_and_bwd: bool = True) -> float:
+    """Prop. 4: Theta(Nd + N^2 d^2 M^-1 s): the T_c passes scale by s."""
+    m_elems = sram_bytes / elt
+    bc = max(1, int(m_elems // (4 * d)))
+    tc = int(np.ceil(n / bc))
+    bh = batch * heads
+    fwd = 2 * n * d + 3 * n * d * tc * density
+    bwd = 4 * n * d + 5 * n * d * tc * density
+    total = fwd + (bwd if fwd_and_bwd else 0)
+    return float(total * bh * elt)
+
+
+def attention_flops(n: int, d: int, heads: int, batch: int,
+                    fwd_and_bwd: bool = True, recompute: bool = True) -> float:
+    """Matmul FLOPs: fwd 4N^2d (QK^T + PV), bwd 8N^2d (dV, dP, dQ, dK)
+    + recomputation of S in the flash backward (+2N^2d)."""
+    bh = batch * heads
+    fwd = 4 * n * n * d
+    bwd = 8 * n * n * d + (2 * n * n * d if recompute else 0)
+    return float((fwd + (bwd if fwd_and_bwd else 0)) * bh)
+
+
+# ---------------------------------------------------------------------------
+# Tile-level accounting (what the tuner optimizes / must fit)
+# ---------------------------------------------------------------------------
+
+def flash_hbm_bytes_tiled(n_q: int, n_k: int, d: int, heads: int, batch: int,
+                          block_q: int, block_k: int, elt: int = 2,
+                          fwd_and_bwd: bool = True, density: float = 1.0,
+                          kv_major: bool = False) -> float:
+    """Theorem-2 pass counting for an EXPLICIT tile choice and loop order.
+
+    ``kv_major=False`` is the repo's forward/dq grid (q outer, kv innermost,
+    accumulators VMEM-resident across the kv sweep): Q read and O written
+    once, K/V re-streamed once per q block => 3·N_q·d + 2·N_k·d·T_r with
+    T_r = ceil(N_q/B_q). ``kv_major=True`` is the transposed order (the dkv
+    backward kernel; also Alg. 1's outer loop): K/V once, Q/O per kv block.
+    ``density`` scales the re-streamed term by the block layout's run
+    fraction (Prop. 4): SKIP tiles are never DMA'd.
+
+    The backward charges both orders (the dq kernel is q-major, the dkv
+    kernel kv-major, each re-streaming the opposite operand set of
+    {q, o, do} / {k, v} plus its own accumulator traffic).
+    """
+    bh = batch * heads
+    t_r = int(np.ceil(n_q / block_q))
+    t_c = int(np.ceil(n_k / block_k))
+    if kv_major:
+        fwd = 2 * n_k * d + 3 * n_q * d * t_c * density
+    else:
+        fwd = 3 * n_q * d + 2 * n_k * d * t_r * density
+    # dq kernel (q-major): q,do read + dq written once (3·N_q·d); k,v,m,l,o
+    # re-streamed per q block. dkv kernel (kv-major): k,v read + dk,dv
+    # written once (4·N_k·d); q,o,do re-streamed per kv block.
+    bwd = (3 * n_q * d + 3 * n_k * d * t_r * density
+           + 4 * n_k * d + 3 * n_q * d * t_c * density)
+    total = fwd + (bwd if fwd_and_bwd else 0)
+    return float(total * bh * elt)
+
+
+def attention_working_set_bytes(block_q: int, block_k: int, d: int,
+                                in_elt: int = 4, acc_elt: int = 4,
+                                backward: bool = True,
+                                lanes: int = LANES) -> int:
+    """VMEM bytes resident during ONE grid step of the Pallas kernels.
+
+    Forward (kernels/flash_attention.py): q/o tiles (B_q x d), k/v tiles
+    (B_k x d), the S/P tile (B_q x B_k, f32 — never leaves VMEM, the IO
+    claim), the f32 output accumulator, and the lane-replicated m/l scratch
+    (B_q x LANES each). Backward is the max of the dq kernel (adds do, the
+    dq accumulator, ds tile, delta scratch) and the dkv kernel (adds do,
+    dk/dv accumulators, ds tile). The tuner fits max(fwd, bwd) so one
+    ``TileConfig`` serves the whole custom_vjp.
+    """
+    s_tile = block_q * block_k * acc_elt
+    ml = block_q * lanes * acc_elt
+    fwd = (2 * block_q * d * in_elt          # q tile, o tile
+           + 2 * block_k * d * in_elt        # k, v tiles
+           + s_tile                          # S/P (f32, VMEM-only)
+           + block_q * d * acc_elt           # f32 output accumulator
+           + 2 * ml)                         # m, l scratch
+    if not backward:
+        return int(fwd)
+    dq_k = (3 * block_q * d * in_elt         # q, o, do tiles
+            + 2 * block_k * d * in_elt       # k, v tiles
+            + 2 * s_tile                     # s, ds
+            + block_q * d * acc_elt          # dq accumulator
+            + 3 * ml)                        # m, l, delta
+    dkv_k = (3 * block_q * d * in_elt        # q, o, do tiles
+             + 2 * block_k * d * in_elt      # k, v tiles
+             + 2 * s_tile                    # s, ds
+             + 2 * block_k * d * acc_elt     # dk, dv accumulators
+             + 3 * ml)
+    return int(max(fwd, dq_k, dkv_k))
+
+
+def decode_working_set_bytes(block_k: int, d: int, in_elt: int = 4,
+                             acc_elt: int = 4, lanes: int = LANES) -> int:
+    """VMEM residency of one split-KV decode grid step (single q row):
+    k/v page tiles, the (1, B_k) score row, and the (1, d)/(1, LANES)
+    accumulator scratch."""
+    return int(2 * block_k * d * in_elt + block_k * acc_elt
+               + d * acc_elt + 2 * lanes * acc_elt)

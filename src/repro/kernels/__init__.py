@@ -4,4 +4,6 @@ flash_attention.py  Alg. 1/2 fwd + Alg. 4 bwd (dq, dkv), dense & block-sparse
 flash_decode.py     split-KV decode (FlashDecoding adaptation)
 ops.py              jit'd wrappers + custom_vjp assembly
 ref.py              oracles: standard attention (Alg. 0), chunked (Alg. 1 @ XLA)
+tuning.py           IO-aware tile resolution (analytic chooser + autotuner);
+                    None block fields resolve here (DESIGN.md §9)
 """

@@ -50,9 +50,11 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import masks as M
+from repro.core.io_model import LANES  # noqa: F401 — one source of truth:
+# the tuner's working-set model (io_model.attention_working_set_bytes)
+# accounts the lane-replicated m/l scratch with the SAME constant the
+# kernels allocate it with; flash_decode re-imports it from here.
 from repro.core.masks import NEG_INF
-
-LANES = 128  # TPU vreg lane count; m/l scratch is lane-replicated.
 
 
 # ---------------------------------------------------------------------------

@@ -42,6 +42,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import masks as M
 from repro.core.masks import NEG_INF
+from repro.kernels import tuning
 from repro.kernels.flash_attention import LANES
 
 
@@ -105,8 +106,8 @@ def flash_decode(
     kv_len: jax.Array,     # (b,) int32 valid lengths
     *,
     scale: float | None = None,
-    block_k: int = 256,
-    num_splits: int = 8,
+    block_k: int | None = None,        # None = resolve via kernels.tuning
+    num_splits: int | None = None,
     window: int | None = None,
     kv_mask: jax.Array | None = None,   # (b, sk) True = valid cache slot
     interpret: bool | None = None,
@@ -117,7 +118,11 @@ def flash_decode(
     sliding-window semantics); ``kv_mask`` masks out individual cache slots.
     Blocks past the valid length, before the window start, or fully
     masked-out are classified SKIP by the compiled per-batch layout and
-    never run."""
+    never run.
+
+    ``block_k``/``num_splits`` left ``None`` resolve through
+    ``tuning.resolve_decode_geometry`` — divisor-valid by construction;
+    explicit values are validated exactly as before (misalignment raises)."""
     b, hq, sq, d = q.shape
     _, hkv, sk, _ = k.shape
     assert sq == 1, "flash_decode handles single-token decode; use flash_attention otherwise"
@@ -127,7 +132,8 @@ def flash_decode(
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
 
-    block_k, num_splits = validate_decode_geometry(sk, block_k, num_splits)
+    block_k, num_splits = tuning.resolve_decode_geometry(
+        sk, block_k, num_splits, head_dim=d, dtype=k.dtype)
     nk_in = (sk // block_k) // num_splits
 
     kvm = kv_mask
@@ -242,7 +248,7 @@ def flash_decode_paged(
     kv_len: jax.Array,       # (b,) int32 valid lengths
     *,
     scale: float | None = None,
-    num_splits: int = 8,
+    num_splits: int | None = None,     # None = resolve via kernels.tuning
     window: int | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
@@ -270,6 +276,10 @@ def flash_decode_paged(
         interpret = jax.default_backend() != "tpu"
 
     T = page_table.shape[1]
+    if num_splits is None:
+        _, num_splits = tuning.resolve_decode_geometry(
+            T * page_size, None, None, head_dim=d, dtype=k_pool.dtype,
+            page_size=page_size)
     num_splits = validate_paged_decode_geometry(T, num_splits)
     t_in = T // num_splits
 

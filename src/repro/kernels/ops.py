@@ -31,6 +31,7 @@ from repro.core.masks import (MaskSpec, SEG_PAD_KV, SEG_PAD_Q,
                               compile_block_layout, resolve_segment_ids)
 from repro.kernels import flash_attention as fa
 from repro.kernels import ref as ref_mod
+from repro.kernels import tuning
 
 
 def default_interpret() -> bool:
@@ -115,8 +116,8 @@ def flash_attention(
     q_offset: int | None = None,
     dropout_p: float = 0.0,
     dropout_seed: int = 0,
-    block_q: int = 128,
-    block_k: int = 128,
+    block_q: int | None = None,       # None = resolve via kernels.tuning
+    block_k: int | None = None,
     variant: str = "fa2",              # "paper" (Alg. 1 faithful) | "fa2"
     block_layout=None,                 # (nq, nk) uint8 sparse pattern (Alg. 5)
     segment_ids: jax.Array | None = None,     # (b, s) packed ids (self-attn)
@@ -133,7 +134,14 @@ def flash_attention(
     SKIP / FULL / PARTIAL classes in one place. ``segment_ids`` isolates
     packed (varlen) documents: tokens attend only within their own segment.
     Padded tails get sentinel segments (q/kv pads differ), so padded rows
-    come out fully masked."""
+    come out fully masked.
+
+    ``block_q``/``block_k`` left ``None`` are resolved through
+    ``kernels.tuning`` (analytic SRAM-budget chooser, or the empirical
+    autotuner when enabled); explicit values pass through. Either way the
+    blocks are then clamped to the sequence with ``tuning.round_block`` —
+    rounding to a sublane multiple and padding the operands, never emitting
+    an unaligned tile for tiny/ragged sequence lengths."""
     b, hq, sq, d = q.shape
     _, hkv, sk, _ = k.shape
     if hq % hkv != 0:
@@ -146,8 +154,23 @@ def flash_attention(
         q_offset = sk - sq
     if interpret is None:
         interpret = default_interpret()
-    block_q = min(block_q, max(sq, 1))
-    block_k = min(block_k, max(sk, 1))
+    if block_layout is not None and (block_q is None or block_k is None):
+        # an Alg. 5 sparse pattern fixes the block grid: its shape IS the
+        # tile decision, so auto-resolution must not fight it.
+        nq_s, nk_s = np.asarray(block_layout).shape
+        block_q = -(-sq // nq_s) if block_q is None else block_q
+        block_k = -(-sk // nk_s) if block_k is None else block_k
+    if block_q is None or block_k is None:
+        tiles = tuning.resolve_tiles(
+            block_q, block_k, sq=sq, sk=sk, head_dim=d, dtype=q.dtype,
+            mask_class=tuning.mask_class_of(
+                causal=causal, window=window,
+                has_kv_mask=kv_mask is not None,
+                has_segments=q_seg is not None,
+                has_sparse=block_layout is not None))
+        block_q, block_k = tiles.block_q, tiles.block_k
+    block_q = tuning.round_block(block_q, sq)
+    block_k = tuning.round_block(block_k, sk)
 
     qp, qpad = _pad_to(q, 2, block_q)
     kp, kpad = _pad_to(k, 2, block_k)

@@ -1,0 +1,554 @@
+"""IO-aware kernel tuning: every tile size is a resolved decision.
+
+The paper derives its block sizes from the SRAM budget M (Alg. 1 line 1:
+``B_c = ceil(M/4d)``); until PR 4 the repo instead hard-coded
+``block_q = block_k = 128`` at ~a dozen call sites and kept the Theorem-2
+accounting as a benchmark-only artifact. This module is the single audited
+decision point those call sites now resolve through:
+
+* ``TileConfig`` — one record of every tile-shaped choice a call makes:
+  training/prefill ``(block_q, block_k)``, decode ``(decode_block_k,
+  num_decode_splits)``, the accumulator ``variant``, and the grid loop
+  order (``kv_major``).
+* ``choose_tile_config`` — the ANALYTIC chooser: picks the largest
+  lane-aligned tiles whose fwd+bwd VMEM working set
+  (``core.io_model.attention_working_set_bytes``) fits a configurable SRAM
+  budget, ranked by the Theorem-2 HBM-byte surface
+  (``core.io_model.flash_hbm_bytes_tiled``). Pure arithmetic — safe at
+  trace time, memoized.
+* ``Autotuner`` — the optional EMPIRICAL refinement: times the analytic
+  chooser's top candidates on-device and persists the winner in a JSON
+  cache keyed by ``(device_kind, dtype, head_dim, seq_bucket, mask_class)``
+  so the timing cost is paid once per (hardware, workload) class.
+* ``resolve_tiles`` / ``resolve_decode_geometry`` — what consumers call.
+  ``AttentionSpec.block_q/block_k/num_decode_splits`` default to ``None``
+  (= auto); explicit integers pass through untouched (and are still
+  validated), so tests and benchmarks can pin any geometry.
+
+Paged invariant: the page is the mask IR's kv block and the unit of cache
+ALLOCATION (DESIGN.md §6.5), so for paged decode the tuner does not get to
+choose the kv block — it takes ``page_size`` or rejects an explicit
+conflicting ``block_k``.
+
+``python -m repro.kernels.tuning --smoke`` exercises the autotune
+write+read roundtrip (scripts/ci.sh runs it twice and asserts the second
+run is served from the cache).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import json
+import os
+from typing import Any
+
+from repro.core import io_model
+
+LANES = io_model.LANES
+SUBLANES = io_model.SUBLANES
+MAX_BLOCK = 1024           # beyond this the S tile alone dwarfs any win
+TARGET_DECODE_SPLITS = 8   # split-KV parallelism target (cores/megacore)
+
+_DTYPE_BYTES = {
+    "float32": 4, "f32": 4, "bfloat16": 2, "bf16": 2, "float16": 2,
+    "f16": 2, "float8_e4m3fn": 1, "float8_e5m2": 1,
+}
+
+
+def _dtype_name(dtype: Any) -> str:
+    try:
+        import numpy as np
+        return np.dtype(dtype).name
+    except TypeError:
+        return str(dtype)
+
+
+def _elt_bytes(dtype: Any) -> int:
+    return _DTYPE_BYTES.get(_dtype_name(dtype), 4)
+
+
+# ---------------------------------------------------------------------------
+# TileConfig — the resolved decision record
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TileConfig:
+    """Every tile-shaped decision one attention call site makes.
+
+    ``kv_major`` records the forward grid's loop order. The present Pallas
+    forward kernel iterates kv innermost with q-major accumulators
+    (``kv_major=False``); the field keeps the decision explicit so the IO
+    model can score both orders and a future kv-major forward slots in
+    without widening any signature. ``source`` is observability only:
+    "explicit" (caller pinned it), "analytic", "cache", or "autotuned".
+    """
+    block_q: int
+    block_k: int
+    decode_block_k: int | None = None
+    num_decode_splits: int | None = None
+    variant: str = "fa2"
+    kv_major: bool = False
+    source: str = "analytic"
+
+    def as_cache_entry(self) -> dict:
+        d = dataclasses.asdict(self)
+        d.pop("source")
+        return d
+
+    @classmethod
+    def from_cache_entry(cls, entry: dict) -> "TileConfig":
+        fields = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in entry.items() if k in fields},
+                   source="cache")
+
+
+# ---------------------------------------------------------------------------
+# Tuner-wide knobs (CLIs: --autotune / --sram-budget)
+# ---------------------------------------------------------------------------
+
+_DEFAULT_CACHE = os.environ.get(
+    "REPRO_AUTOTUNE_CACHE",
+    os.path.join(os.path.expanduser("~"), ".cache", "repro",
+                 "autotune.json"))
+
+_STATE: dict[str, Any] = {
+    "sram_budget": int(os.environ["REPRO_SRAM_BUDGET"])
+    if "REPRO_SRAM_BUDGET" in os.environ else None,
+    "autotune": os.environ.get("REPRO_AUTOTUNE", "") == "1",
+    "cache_path": _DEFAULT_CACHE,
+}
+
+
+def configure_tuning(*, sram_budget: int | None = None,
+                     autotune: bool | None = None,
+                     cache_path: str | None = None) -> None:
+    """Process-wide tuner knobs (launch CLIs call this from flag values).
+    ``None`` leaves a knob unchanged; analytic memoization is dropped so a
+    new budget takes effect immediately."""
+    if sram_budget is not None:
+        _STATE["sram_budget"] = int(sram_budget)
+    if autotune is not None:
+        _STATE["autotune"] = bool(autotune)
+    if cache_path is not None:
+        _STATE["cache_path"] = cache_path
+        global _CACHE
+        _CACHE = None
+    _analytic_choice.cache_clear()
+
+
+def sram_budget() -> int:
+    b = _STATE["sram_budget"]
+    return io_model.DEFAULT_SRAM_BUDGET if b is None else int(b)
+
+
+def autotune_enabled() -> bool:
+    return bool(_STATE["autotune"])
+
+
+# ---------------------------------------------------------------------------
+# Block clamping (the lane-alignment fix for tiny/ragged sequence lengths)
+# ---------------------------------------------------------------------------
+
+def round_block(requested: int, seq_len: int) -> int:
+    """Clamp a block size to a sequence WITHOUT producing an unaligned tile.
+
+    The old clamp was ``min(block, seq_len)``: for seq_len = 100 that made a
+    100-row tile — not a sublane multiple, so the Mosaic lowering either
+    fails or pads every vreg on a real TPU. Instead, cap the block at the
+    sequence rounded UP to the sublane multiple (the caller pads the
+    operand to a block multiple anyway, so a ragged tail costs at most
+    ``SUBLANES - 1`` padded rows) and round the result down to a sublane
+    multiple, floor ``SUBLANES``.
+    """
+    cap = -(-max(seq_len, 1) // SUBLANES) * SUBLANES
+    blk = min(int(requested), cap)
+    blk = max(SUBLANES, (blk // SUBLANES) * SUBLANES)
+    return min(blk, cap)
+
+
+def _aligned_candidates(seq_len: int) -> list[int]:
+    """Descending tile-size candidates for one axis: lane multiples first
+    (what the MXU wants), sublane multiples only when the axis itself is
+    shorter than one lane tile."""
+    cap = min(MAX_BLOCK, -(-max(seq_len, 1) // SUBLANES) * SUBLANES)
+    lane = [b for b in range(LANES, cap + 1, LANES)]
+    if lane:
+        return lane[::-1]
+    return [b for b in range(SUBLANES, cap + 1, SUBLANES)][::-1] or [SUBLANES]
+
+
+# ---------------------------------------------------------------------------
+# Analytic chooser (Alg. 1 line 1 with the kernel's true footprint)
+# ---------------------------------------------------------------------------
+
+def _divisors_desc(n: int) -> list[int]:
+    return [d for d in range(n, 0, -1) if n % d == 0]
+
+
+def choose_decode_geometry(capacity: int, head_dim: int, *,
+                           elt: int = 4, budget: int | None = None,
+                           target_splits: int = TARGET_DECODE_SPLITS,
+                           pinned_splits: int | None = None,
+                           ) -> tuple[int, int]:
+    """Pick ``(decode_block_k, num_splits)`` for a contiguous cache.
+
+    The split-KV kernel reads every valid cache byte exactly once whatever
+    the block size, so the objective is parallelism-then-locality: among
+    block sizes that divide the capacity (alignment-preferred, working set
+    within budget), maximize the usable split count (capped at
+    ``target_splits``), then the block size. Divisibility is guaranteed by
+    construction — ``validate_decode_geometry`` can no longer fire for an
+    auto-resolved geometry.
+
+    ``pinned_splits`` (an explicit ``num_splits`` with an auto block) is a
+    CONSTRAINT on the block search, not a preference: only blocks whose
+    grid honors exactly that split count qualify; if no aligned divisor
+    does, that's an error — never a silent clamp.
+    """
+    budget = sram_budget() if budget is None else budget
+    cands = [b for b in _divisors_desc(capacity)
+             if b % SUBLANES == 0 or b == capacity]
+    cands = ([b for b in cands
+              if io_model.decode_working_set_bytes(b, head_dim, elt)
+              <= budget] or [min(cands, default=capacity)])
+    best = None
+    for blk in cands:
+        nk = capacity // blk
+        if pinned_splits is not None:
+            if nk % pinned_splits:
+                continue
+            key = (pinned_splits, blk)
+        else:
+            splits = next(s for s in _divisors_desc(nk)
+                          if s <= target_splits)
+            key = (splits, blk)
+        if best is None or key > best:
+            best = key
+    if best is None:
+        raise ValueError(
+            f"flash_decode: no aligned kv block of the {capacity}-slot "
+            f"cache yields a grid divisible by num_splits "
+            f"({pinned_splits}); pick a num_splits dividing the block "
+            f"count or leave it auto")
+    splits, blk = best[0], best[1]
+    return blk, splits
+
+
+@functools.lru_cache(maxsize=512)
+def _analytic_choice(sq: int, sk: int, head_dim: int, elt: int,
+                     backward: bool, budget: int,
+                     fixed_bq: int | None, fixed_bk: int | None,
+                     decode_capacity: int | None) -> TileConfig:
+    bq_cands = [fixed_bq] if fixed_bq is not None else _aligned_candidates(sq)
+    bk_cands = [fixed_bk] if fixed_bk is not None else _aligned_candidates(sk)
+    best: tuple | None = None
+    for bq in bq_cands:
+        for bk in bk_cands:
+            ws = io_model.attention_working_set_bytes(
+                bq, bk, head_dim, in_elt=elt, backward=backward)
+            fits = ws <= budget
+            hbm = io_model.flash_hbm_bytes_tiled(
+                sq, sk, head_dim, 1, 1, bq, bk, elt=elt,
+                fwd_and_bwd=backward)
+            # rank: fitting first; among fitting, fewest HBM bytes then the
+            # larger tile (fewer grid steps at equal traffic); among
+            # non-fitting (caller pinned an over-budget tile, or the budget
+            # is below one minimal tile) the smallest working set.
+            key = (fits, -hbm if fits else -ws, bq + bk, bk)
+            if best is None or key > best[:4]:
+                best = key + (bq, bk)
+    bq, bk = best[4], best[5]
+    dec_blk = dec_splits = None
+    if decode_capacity is not None:
+        dec_blk, dec_splits = choose_decode_geometry(
+            decode_capacity, head_dim, elt=elt, budget=budget)
+    return TileConfig(block_q=bq, block_k=bk, decode_block_k=dec_blk,
+                      num_decode_splits=dec_splits, source="analytic")
+
+
+def choose_tile_config(sq: int, sk: int, head_dim: int, *,
+                       dtype: Any = "float32", backward: bool = True,
+                       sram_budget_bytes: int | None = None,
+                       decode_capacity: int | None = None,
+                       block_q: int | None = None,
+                       block_k: int | None = None) -> TileConfig:
+    """Analytic tile choice (see module docstring). Explicit ``block_q`` /
+    ``block_k`` pin that axis and the chooser fills the rest."""
+    budget = (sram_budget() if sram_budget_bytes is None
+              else int(sram_budget_bytes))
+    return _analytic_choice(int(sq), int(sk), int(head_dim),
+                            _elt_bytes(dtype), bool(backward), budget,
+                            block_q, block_k, decode_capacity)
+
+
+# ---------------------------------------------------------------------------
+# Empirical autotuner + persistent cache
+# ---------------------------------------------------------------------------
+
+def seq_bucket(n: int) -> int:
+    """Pow-2 bucket so one timing run covers a band of nearby lengths."""
+    b = LANES
+    while b < n:
+        b *= 2
+    return b
+
+
+def cache_key(device_kind: str, dtype: Any, head_dim: int, bucket: int,
+              mask_class: str) -> str:
+    return f"{device_kind}|{_dtype_name(dtype)}|{head_dim}|" \
+           f"{bucket}|{mask_class}"
+
+
+class AutotuneCache:
+    """JSON-file persistence for autotuned ``TileConfig``s. Load is lazy;
+    every ``put`` rewrites the file (entries are few — one per
+    (device, dtype, head_dim, bucket, mask) class)."""
+
+    def __init__(self, path: str):
+        self.path = path
+        self._entries: dict[str, dict] | None = None
+        self.hits = 0
+        self.misses = 0
+
+    def _load(self) -> dict[str, dict]:
+        if self._entries is None:
+            try:
+                with open(self.path) as f:
+                    self._entries = json.load(f).get("entries", {})
+            except (OSError, ValueError):
+                self._entries = {}
+        return self._entries
+
+    def get(self, key: str) -> TileConfig | None:
+        entry = self._load().get(key)
+        if entry is None:
+            self.misses += 1
+            return None
+        self.hits += 1
+        return TileConfig.from_cache_entry(entry)
+
+    def put(self, key: str, cfg: TileConfig, timed_us: float) -> None:
+        entries = self._load()
+        entries[key] = {**cfg.as_cache_entry(), "timed_us": timed_us}
+        os.makedirs(os.path.dirname(self.path) or ".", exist_ok=True)
+        with open(self.path, "w") as f:
+            json.dump({"version": 1, "entries": entries}, f, indent=1,
+                      sort_keys=True)
+
+
+_CACHE: AutotuneCache | None = None
+
+
+def autotune_cache() -> AutotuneCache:
+    global _CACHE
+    if _CACHE is None or _CACHE.path != _STATE["cache_path"]:
+        _CACHE = AutotuneCache(_STATE["cache_path"])
+    return _CACHE
+
+
+def _device_kind() -> str:
+    import jax
+    return jax.devices()[0].device_kind.replace("|", "_")
+
+
+def _time_candidates(sq: int, sk: int, head_dim: int, dtype,
+                     candidates: list[tuple[int, int]], *,
+                     causal: bool, iters: int = 3) -> tuple[int, int, float]:
+    """Time the forward call per candidate on-device, return the winner.
+    Candidates are explicit, so the timed calls never re-enter resolution."""
+    import time
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    shape = (1, 2, sq, head_dim)
+    q = jax.random.normal(ks[0], shape, dtype)
+    k = jax.random.normal(ks[1], (1, 2, sk, head_dim), dtype)
+    v = jax.random.normal(ks[2], (1, 2, sk, head_dim), dtype)
+    best: tuple[float, int, int] | None = None
+    for bq, bk in candidates:
+        fn = jax.jit(functools.partial(ops.flash_attention, causal=causal,
+                                       block_q=bq, block_k=bk))
+        jax.block_until_ready(fn(q, k, v))          # compile outside timing
+        ts = []
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(q, k, v))
+            ts.append(time.perf_counter() - t0)
+        t = min(ts)
+        if best is None or t < best[0]:
+            best = (t, bq, bk)
+    return best[1], best[2], best[0] * 1e6
+
+
+def autotune_tiles(sq: int, sk: int, head_dim: int, *, dtype,
+                   mask_class: str, backward: bool = True,
+                   max_candidates: int = 4,
+                   block_q: int | None = None,
+                   block_k: int | None = None) -> TileConfig:
+    """Empirical resolution: cache lookup, else time the analytic chooser's
+    top fitting candidates and persist the winner. A pinned ``block_q`` /
+    ``block_k`` axis CONSTRAINS the candidate list (only combinations that
+    honor the pin are timed) and is part of the cache key — a pinned call
+    never reuses, or pollutes, the unpinned entry."""
+    bucket = seq_bucket(max(sq, sk))
+    key = cache_key(_device_kind(), dtype, head_dim, bucket, mask_class)
+    if block_q is not None:
+        key += f"|bq={block_q}"
+    if block_k is not None:
+        key += f"|bk={block_k}"
+    cache = autotune_cache()
+    hit = cache.get(key)
+    if hit is not None:
+        return hit
+    analytic = choose_tile_config(bucket, bucket, head_dim, dtype=dtype,
+                                  backward=backward,
+                                  block_q=block_q, block_k=block_k)
+    budget = sram_budget()
+    elt = _elt_bytes(dtype)
+    cands: list[tuple[int, int]] = [(analytic.block_q, analytic.block_k)]
+    bq_cands = [block_q] if block_q is not None else _aligned_candidates(bucket)
+    bk_cands = [block_k] if block_k is not None else _aligned_candidates(bucket)
+    for bq in bq_cands:
+        for bk in bk_cands:
+            ws = io_model.attention_working_set_bytes(
+                bq, bk, head_dim, in_elt=elt, backward=backward)
+            if ws <= budget and (bq, bk) not in cands:
+                cands.append((bq, bk))
+    bq, bk, t_us = _time_candidates(
+        sq=bucket, sk=bucket, head_dim=head_dim, dtype=dtype,
+        candidates=cands[:max_candidates],
+        causal="causal" in mask_class)
+    cfg = dataclasses.replace(analytic, block_q=bq, block_k=bk,
+                              source="autotuned")
+    cache.put(key, cfg, t_us)
+    return cfg
+
+
+# ---------------------------------------------------------------------------
+# Resolution entry points (what the kernels / engine / models call)
+# ---------------------------------------------------------------------------
+
+def mask_class_of(*, causal: bool = False, window: int | None = None,
+                  has_kv_mask: bool = False, has_segments: bool = False,
+                  has_sparse: bool = False) -> str:
+    parts = [p for p, on in [("causal", causal), ("win", window is not None),
+                             ("seg", has_segments), ("kvm", has_kv_mask),
+                             ("sparse", has_sparse)] if on]
+    return "+".join(parts) or "dense"
+
+
+def resolve_tiles(block_q: int | None, block_k: int | None, *,
+                  sq: int, sk: int, head_dim: int, dtype: Any,
+                  mask_class: str = "dense",
+                  backward: bool = True) -> TileConfig:
+    """THE audited decision point for training/prefill tiles.
+
+    Explicit (non-``None``) values pass through untouched; ``None`` means
+    auto — empirical when autotuning is enabled, analytic otherwise. The
+    caller still owes ``round_block`` against its true (possibly ragged)
+    sequence lengths: resolution works on the padded geometry.
+    """
+    if block_q is not None and block_k is not None:
+        return TileConfig(block_q=int(block_q), block_k=int(block_k),
+                          source="explicit")
+    if autotune_enabled():
+        return autotune_tiles(sq, sk, head_dim, dtype=dtype,
+                              mask_class=mask_class, backward=backward,
+                              block_q=block_q, block_k=block_k)
+    return choose_tile_config(sq, sk, head_dim, dtype=dtype,
+                              backward=backward,
+                              block_q=block_q, block_k=block_k)
+
+
+def resolve_decode_geometry(capacity: int, block_k: int | None,
+                            num_splits: int | None, *, head_dim: int,
+                            dtype: Any = "float32",
+                            page_size: int | None = None,
+                            target_splits: int = TARGET_DECODE_SPLITS,
+                            ) -> tuple[int, int]:
+    """Resolve decode ``(block_k, num_splits)`` for a contiguous or paged
+    cache. For a paged cache the kv block IS the page (allocation-unit
+    invariant, DESIGN.md §6.5): an explicit conflicting ``block_k`` is
+    rejected, never silently overridden; ``capacity`` is then the
+    per-sequence capacity (``pages_per_seq * page_size``).
+
+    Explicit values are validated exactly as before (misalignment raises);
+    auto values are valid by construction.
+    """
+    from repro.kernels.flash_decode import (validate_decode_geometry,
+                                            validate_paged_decode_geometry)
+
+    if page_size is not None:
+        if block_k is not None and int(block_k) != int(page_size):
+            raise ValueError(
+                f"paged decode: block_k ({block_k}) must equal page_size "
+                f"({page_size}) — the page is the unit of cache allocation "
+                f"and the mask IR's kv block; re-tile the pool or leave "
+                f"block_k auto")
+        pages_per_seq = max(1, capacity // page_size)
+        if num_splits is None:
+            num_splits = next(s for s in _divisors_desc(pages_per_seq)
+                              if s <= target_splits)
+        else:
+            num_splits = validate_paged_decode_geometry(pages_per_seq,
+                                                        int(num_splits))
+        return int(page_size), int(num_splits)
+
+    if block_k is None:
+        block_k, num_splits = choose_decode_geometry(
+            capacity, head_dim, elt=_elt_bytes(dtype),
+            target_splits=target_splits,
+            pinned_splits=None if num_splits is None else int(num_splits))
+    elif num_splits is None:
+        block_k = min(int(block_k), capacity)
+        nk = max(1, capacity // max(int(block_k), 1))
+        num_splits = next(s for s in _divisors_desc(nk)
+                          if s <= target_splits)
+    return validate_decode_geometry(capacity, int(block_k), int(num_splits))
+
+
+# ---------------------------------------------------------------------------
+# CLI: the CI smoke roundtrip
+# ---------------------------------------------------------------------------
+
+def _main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shape (256, d=64) so CI stays cheap")
+    ap.add_argument("--cache", default=None, help="autotune cache path")
+    ap.add_argument("--sram-budget", type=int, default=None)
+    ap.add_argument("--expect-hit", action="store_true",
+                    help="fail unless resolution was served from the cache")
+    ap.add_argument("--seq", type=int, default=None)
+    ap.add_argument("--head-dim", type=int, default=64)
+    args = ap.parse_args()
+
+    configure_tuning(sram_budget=args.sram_budget, autotune=True,
+                     cache_path=args.cache)
+    seq = args.seq if args.seq is not None else (256 if args.smoke else 2048)
+    import jax.numpy as jnp
+    cfg = autotune_tiles(seq, seq, args.head_dim, dtype=jnp.float32,
+                         mask_class="causal", backward=False)
+    cache = autotune_cache()
+    fixed = io_model.flash_hbm_bytes_tiled(seq, seq, args.head_dim, 1, 1,
+                                           128, 128, elt=4)
+    chosen = io_model.flash_hbm_bytes_tiled(seq, seq, args.head_dim, 1, 1,
+                                            cfg.block_q, cfg.block_k, elt=4)
+    hit = cfg.source == "cache"
+    print(f"autotune seq={seq} d={args.head_dim}: block_q={cfg.block_q} "
+          f"block_k={cfg.block_k} source={cfg.source} "
+          f"hbm_vs_128x128={chosen / fixed:.3f} cache_hit={hit} "
+          f"(hits={cache.hits} misses={cache.misses}) path={cache.path}")
+    if args.expect_hit and not hit:
+        raise SystemExit("expected a cache hit but resolution re-tuned")
+
+
+if __name__ == "__main__":
+    _main()

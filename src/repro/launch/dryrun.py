@@ -292,7 +292,14 @@ def main():
                     help="config overrides, e.g. ssm_chunk=64,attn_pv_bf16=true")
     ap.add_argument("--tag", default="",
                     help="suffix for result files (perf-iteration runs)")
+    ap.add_argument("--autotune", action="store_true",
+                    help="empirical tile autotuning (kernels.tuning)")
+    ap.add_argument("--sram-budget", type=int, default=None,
+                    help="tuner SRAM budget in bytes")
     args = ap.parse_args()
+    from repro.kernels import tuning
+    tuning.configure_tuning(sram_budget=args.sram_budget,
+                            autotune=args.autotune or None)
     overrides = parse_overrides(args.override)
     os.makedirs(args.out, exist_ok=True)
 

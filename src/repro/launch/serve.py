@@ -19,6 +19,7 @@ import jax
 import numpy as np
 
 from repro.configs import reduced_config
+from repro.kernels import tuning
 from repro.models import build_model
 from repro.serve import ServingEngine
 
@@ -26,6 +27,12 @@ from repro.serve import ServingEngine
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="granite-3-2b")
+    ap.add_argument("--autotune", action="store_true",
+                    help="empirically time tile candidates on this device "
+                         "(persisted in the autotune cache)")
+    ap.add_argument("--sram-budget", type=int, default=None,
+                    help="tuner SRAM budget in bytes (default: "
+                         "io_model.DEFAULT_SRAM_BUDGET)")
     ap.add_argument("--slots", type=int, default=4,
                     help="decode batch lanes (dense: also the cache slots)")
     ap.add_argument("--requests", type=int, default=12)
@@ -41,6 +48,8 @@ def main():
                          " the dense engine's HBM budget)")
     args = ap.parse_args()
 
+    tuning.configure_tuning(sram_budget=args.sram_budget,
+                            autotune=args.autotune or None)
     cfg = reduced_config(args.arch)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))

@@ -29,6 +29,7 @@ import jax
 from repro.configs import SHAPES, get_config, reduced_config
 from repro.data import SyntheticLM
 from repro.distributed.sharding import auto_rules, resolve_tree
+from repro.kernels import tuning
 from repro.models import build_model
 from repro.optim import adamw, warmup_cosine
 from repro.train import Trainer, TrainerConfig, make_sharded_train_step, make_train_step
@@ -37,6 +38,12 @@ from repro.train import Trainer, TrainerConfig, make_sharded_train_step, make_tr
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="olmo-1b")
+    ap.add_argument("--autotune", action="store_true",
+                    help="empirically time attention tile candidates on "
+                         "this device (persisted in the autotune cache)")
+    ap.add_argument("--sram-budget", type=int, default=None,
+                    help="tuner SRAM budget in bytes for the analytic "
+                         "tile chooser")
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--seq", type=int, default=256)
     ap.add_argument("--batch", type=int, default=8)
@@ -50,6 +57,8 @@ def main():
                     help="full config on the production mesh (TPU slice)")
     args = ap.parse_args()
 
+    tuning.configure_tuning(sram_budget=args.sram_budget,
+                            autotune=args.autotune or None)
     if args.reduced:
         cfg = reduced_config(args.arch)
         model = build_model(cfg)

@@ -27,6 +27,8 @@ def attn_spec_from_config(cfg: ModelConfig) -> AttentionSpec:
         dropout_p=cfg.attn_dropout, unroll_chunks=cfg.unroll_chunks,
         chunk_size=cfg.attn_chunk_size, pv_bf16=cfg.attn_pv_bf16,
         banded_window=cfg.banded_window,
+        block_q=cfg.attn_block_q, block_k=cfg.attn_block_k,
+        num_decode_splits=cfg.num_decode_splits,
         use_decode_kernel=cfg.use_decode_kernel)
 
 

@@ -52,16 +52,10 @@ import numpy as np
 
 from repro.core import masks
 from repro.core.masks import SEG_PAD_Q
-from repro.kernels.flash_decode import (validate_decode_geometry,
-                                        validate_paged_decode_geometry)
+from repro.kernels import tuning
 from repro.models.attention_layer import attn_spec_from_config
 from repro.models.model_zoo import Model
 from repro.serve import kv_cache as kvc
-
-# Block size assumed for the packed-prefill layout-density report: the
-# dispatch default (AttentionSpec.block_q). Observability only — the model
-# compiles its own layout from the same MaskSpec inside kernels/ops.py.
-_REPORT_BLOCK = 128
 
 
 @dataclasses.dataclass
@@ -187,17 +181,20 @@ class ServingEngine:
             self._insert_segment = jax.jit(_insert_segment, donate_argnums=(0,),
                                            static_argnums=(2, 4))
 
-        # fail fast on decode-kernel grid misalignment: the kernels raise
-        # the same errors, but from inside the first jitted decode step —
-        # long after construction accepted the geometry.
+        # Resolve the decode tile geometry ONCE at construction through the
+        # tuner — the same resolution the kernels perform per call, so a bad
+        # explicit (capacity, block, splits) combo fails fast here instead
+        # of inside the first jitted decode step, auto fields get a
+        # divisor-valid geometry by construction, and (paged mode) an
+        # explicit block_k conflicting with the page size — the unit of
+        # cache allocation — is rejected, never silently overridden.
         spec = attn_spec_from_config(model.cfg)
         if spec.use_decode_kernel:
-            if self.paged:
-                validate_paged_decode_geometry(self.pages_per_seq,
-                                               spec.num_decode_splits)
-            else:
-                validate_decode_geometry(capacity, spec.block_k,
-                                         spec.num_decode_splits)
+            self.decode_block_k, self.num_decode_splits = \
+                tuning.resolve_decode_geometry(
+                    capacity, spec.block_k, spec.num_decode_splits,
+                    head_dim=model.cfg.head_dim, dtype=model.cfg.dtype,
+                    page_size=page_size if self.paged else None)
 
     # ----------------------------------------------------------------- admit
     def submit(self, prompt: list[int], max_new_tokens: int) -> int:
@@ -347,9 +344,17 @@ class ServingEngine:
     def _record_layout_stats(self, segs: np.ndarray) -> None:
         """Compile the packed call's causal+segment layout and count the
         blocks it proves skippable (cross-document and padded-tail tiles the
-        dense geometry alone would run)."""
+        dense geometry alone would run). The report tile comes from the
+        same tuner the model's packed-prefill call resolves through
+        (kernels/ops.py) — analytic path only: a counter must never
+        trigger a device-timing autotune run."""
         s = segs.shape[1]
-        bq = min(_REPORT_BLOCK, self.prefill_bucket, s)
+        spec = attn_spec_from_config(self.model.cfg)
+        report_block = (spec.block_q if spec.block_q is not None
+                        else tuning.choose_tile_config(
+                            s, s, self.model.cfg.head_dim,
+                            dtype=self.model.cfg.dtype).block_q)
+        bq = min(report_block, self.prefill_bucket, s)
         if s % bq:
             return  # bucket not block-aligned; skip the report, not the call
         ids = jnp.asarray(segs)

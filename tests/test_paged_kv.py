@@ -142,18 +142,40 @@ def test_paged_geometry_validation(setup):
 
 def test_decode_kernel_geometry_fails_at_construction(setup):
     """With cfg.use_decode_kernel the engine validates the kernel grid at
-    __init__ — not at the first jitted decode step."""
+    __init__ — not at the first jitted decode step. Explicit (pinned) tile
+    fields keep their fail-fast misalignment errors; auto (None) fields
+    resolve to a divisor-valid geometry through kernels.tuning instead."""
     cfg, model, params = setup
-    kcfg = reduced_config("granite-3-2b", use_decode_kernel=True)
-    kmodel = build_model(kcfg)
+    scfg = reduced_config("granite-3-2b", use_decode_kernel=True,
+                          num_decode_splits=8)
+    smodel = build_model(scfg)
     with pytest.raises(ValueError, match="num_splits"):
-        # pages_per_seq = 12, default num_decode_splits = 8
-        ServingEngine(kmodel, params, num_slots=2, capacity=192,
+        # pages_per_seq = 12, pinned num_decode_splits = 8
+        ServingEngine(smodel, params, num_slots=2, capacity=192,
                       paged=True, page_size=16)
+    bcfg = reduced_config("granite-3-2b", use_decode_kernel=True,
+                          attn_block_k=128)
+    bmodel = build_model(bcfg)
     with pytest.raises(ValueError, match="block_k"):
-        # capacity 192 is not a multiple of the default block_k 128
-        ServingEngine(kmodel, params, num_slots=2, capacity=192,
+        # capacity 192 is not a multiple of the pinned block_k 128
+        ServingEngine(bmodel, params, num_slots=2, capacity=192,
                       paged=False)
+    # paged mode: a pinned block_k that disagrees with the page size breaks
+    # the page == kv-block allocation invariant -> rejected, not overridden
+    with pytest.raises(ValueError, match="page_size"):
+        ServingEngine(bmodel, params, num_slots=2, capacity=192,
+                      paged=True, page_size=32)
+    # auto fields: the tuner picks a valid grid for the same capacities
+    acfg = reduced_config("granite-3-2b", use_decode_kernel=True)
+    amodel = build_model(acfg)
+    eng = ServingEngine(amodel, params, num_slots=2, capacity=192,
+                        paged=True, page_size=16)
+    assert eng.pages_per_seq % eng.num_decode_splits == 0
+    dense = ServingEngine(amodel, params, num_slots=2, capacity=192,
+                          paged=False)
+    assert 192 % dense.decode_block_k == 0
+    nk = 192 // dense.decode_block_k
+    assert nk % dense.num_decode_splits == 0
 
 
 def test_paged_refuses_recurrent_families():
