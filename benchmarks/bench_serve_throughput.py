@@ -1,17 +1,26 @@
-"""Paged vs dense serving at EQUAL HBM budget: concurrency, tok/s,
-resident cache bytes, and pool utilization under mixed request lengths.
+"""Paged vs dense serving at EQUAL HBM budget, and chunked vs atomic
+prefill under a mixed workload: concurrency, tok/s, resident cache bytes,
+pool utilization, and time-to-first-decode-token.
 
     PYTHONPATH=src python benchmarks/bench_serve_throughput.py
 
-The dense engine pins ``num_slots`` fixed-capacity cache slots, so its
-concurrency ceiling is ``num_slots`` no matter how short the requests are.
-The paged engine holds the SAME cache bytes as one shared page pool
-(``num_pages * page_size == num_slots * capacity`` cells) but admits by the
-free-page budget: mixed short requests each hold only ``ceil(len/16)``
-pages, so strictly more of them decode concurrently — the acceptance
-property this benchmark asserts. Pool utilization shows how much of the
-budget actually holds live KV rows (the dense engine's "utilization" of
-the same bytes is the mean request length / capacity).
+Part 1 (paged vs dense): the dense engine pins ``num_slots``
+fixed-capacity cache slots, so its concurrency ceiling is ``num_slots`` no
+matter how short the requests are. The paged engine holds the SAME cache
+bytes as one shared page pool (``num_pages * page_size == num_slots *
+capacity`` cells) but admits by the free-page budget: mixed short requests
+each hold only ``ceil(len/16)`` pages, so strictly more of them decode
+concurrently — asserted. Pool utilization shows how much of the budget
+actually holds live KV rows.
+
+Part 2 (mixed workload, DESIGN.md §10): one 8k prompt plus short decoders.
+The atomic engine prefills the 8k prompt in one call, so the short
+requests' first decode token waits behind the whole prefill
+(head-of-line); the chunked scheduler interleaves ``chunk_size``-token
+prefill slices with the short requests' decode steps, so their first
+token lands after ONE chunk instead. Asserted: outputs token-identical,
+time-to-first-decode-token improves, and decode steps occur BEFORE the
+long prompt's prefill completes (the continuous-batching property).
 
 Wired into ``benchmarks.run --smoke`` (scripts/ci.sh) so scheduler or
 page-table regressions fail CI rather than rotting silently.
@@ -52,6 +61,74 @@ def _drive(eng, prompts, new_tokens):
     toks = sum(len(r.output) for r in done)
     outs = {r.rid: r.output for r in done}
     return dict(dt=dt, toks=toks, outs=outs, util_peak=peak["util"])
+
+
+def _mixed_workload(smoke: bool) -> list[tuple[str, float, str]]:
+    """One 8k prompt + short decoders: chunked vs atomic prefill."""
+    long_len, chunk = 8192, 1024
+    cfg = reduced_config("granite-3-2b", num_layers=1, d_model=64,
+                         num_heads=2, num_kv_heads=1, head_dim=32, d_ff=128,
+                         vocab_size=256, dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(1)
+    long_prompt = list(rng.integers(1, cfg.vocab_size, size=long_len))
+    n_short = 3 if smoke else 6
+    shorts = [list(rng.integers(1, cfg.vocab_size, size=12))
+              for _ in range(n_short)]
+    max_new_short = 6 if smoke else 12
+
+    def drive(chunked: bool):
+        eng = ServingEngine(
+            model, params, num_slots=1 + n_short, capacity=long_len + 64,
+            paged=True, page_size=64,
+            chunk_size=chunk if chunked else None,
+            token_budget=(chunk + 64) if chunked else None,
+            chunk_kv_bucket=2048)
+        t0 = time.perf_counter()
+        rid_long = eng.submit(long_prompt, max_new_tokens=4)
+        for s in shorts:
+            eng.submit(s, max_new_tokens=max_new_short)
+        state = {"ttfdt": None, "decode_before_long": 0}
+
+        def track(e):
+            long_active = any(r is not None and r.rid == rid_long
+                              and not r.output for r in e.slot_req)
+            short_started = any(r.rid != rid_long and r.output
+                                for r in e.finished) or any(
+                r is not None and r.rid != rid_long and r.output
+                for r in e.slot_req)
+            if state["ttfdt"] is None and short_started:
+                state["ttfdt"] = time.perf_counter() - t0
+            if long_active and e.last_step_stats.get("decode_tokens", 0):
+                state["decode_before_long"] += 1
+
+        done = eng.run(on_step=track)
+        assert len(done) == 1 + n_short
+        return {r.rid: r.output for r in done}, state
+
+    outs_atomic, atomic = drive(chunked=False)
+    outs_chunked, chunked = drive(chunked=True)
+    assert outs_atomic == outs_chunked, \
+        "chunked prefill diverged from atomic prefill"
+    # the continuous-batching property: short requests decode while the
+    # long prompt is still mid-prefill — impossible under atomic prefill.
+    assert chunked["decode_before_long"] > 0, \
+        "no decode step ran before the long prompt's prefill completed"
+    assert atomic["decode_before_long"] == 0
+    assert chunked["ttfdt"] < atomic["ttfdt"], (
+        f"chunked time-to-first-decode-token {chunked['ttfdt']:.2f}s did "
+        f"not beat atomic {atomic['ttfdt']:.2f}s")
+    return [
+        ("serve_mixed_ttfdt_atomic_s", atomic["ttfdt"],
+         f"one {long_len}-token prompt + {n_short} short decoders; "
+         f"first short decode token waits for the whole prefill"),
+        ("serve_mixed_ttfdt_chunked_s", chunked["ttfdt"],
+         f"chunk={chunk}; decode interleaved "
+         f"{chunked['decode_before_long']} steps before long prefill done"),
+        ("serve_mixed_ttfdt_speedup", atomic["ttfdt"] / chunked["ttfdt"],
+         "token-identical outputs; chunked vs atomic prefill"),
+    ]
 
 
 def run(smoke: bool = False) -> list[tuple[str, float, str]]:
@@ -100,6 +177,7 @@ def run(smoke: bool = False) -> list[tuple[str, float, str]]:
          paged.peak_active / dense_slots,
          f"token-identical outputs; equal HBM budget ({gb} bytes)"),
     ]
+    rows += _mixed_workload(smoke)
     return rows
 
 

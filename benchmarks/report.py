@@ -1,0 +1,150 @@
+"""Benchmark trajectory report: diff consecutive BENCH_<n>.json files and
+flag regressions.
+
+    PYTHONPATH=src python -m benchmarks.report            # latest two runs
+    PYTHONPATH=src python -m benchmarks.report --base 3 --head 5
+    PYTHONPATH=src python -m benchmarks.report --threshold 0.25 --strict
+
+``benchmarks.run`` persists one ``BENCH_<n>.json`` per invocation (next
+free index), so the perf trajectory across PRs is machine-readable; this
+tool closes the loop by comparing two snapshots row by row. Rows are
+matched by name between runs with the SAME ``smoke`` flag (a smoke run is
+never compared against a full run — the sweep sizes differ).
+
+Direction is inferred from the row name: time/size units (``_us``,
+``_ms``, ``_s``, ``_MB``, ``_GB``, ``_bytes``) regress UP, while
+throughput/capacity rows (``tok_per_s``, ``_toks``, ``concurrency``,
+``gain``, ``speedup``) regress DOWN. Everything else (ratios, model
+constants) is reported but never flagged — those rows assert their own
+invariants inside the benchmarks.
+
+Exit status: 0 unless ``--strict`` AND at least one regression beyond
+``--threshold`` (relative). CI (scripts/ci.sh) runs the non-strict form
+right after ``benchmarks.run --smoke`` so the diff is printed in every CI
+log; timing noise on shared CPU runners makes a hard gate counter-
+productive, but the trajectory is always visible.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import sys
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+_LOWER_BETTER = re.compile(r"_(us|ms|s|MB|GB|bytes)$")
+_HIGHER_BETTER = re.compile(r"(tok_per_s|_toks$|concurrency|gain|speedup)")
+
+
+def direction_of(name: str) -> int:
+    """+1 = higher is better, -1 = lower is better, 0 = informational.
+    Throughput patterns are checked FIRST: ``tok_per_s`` ends in ``_s``
+    and must not be misread as a time unit."""
+    if _HIGHER_BETTER.search(name):
+        return +1
+    if _LOWER_BETTER.search(name):
+        return -1
+    return 0
+
+
+def load_runs(results_dir: str) -> dict[int, dict]:
+    runs = {}
+    if not os.path.isdir(results_dir):
+        return runs
+    for f in os.listdir(results_dir):
+        m = re.fullmatch(r"BENCH_(\d+)\.json", f)
+        if not m:
+            continue
+        with open(os.path.join(results_dir, f)) as fh:
+            runs[int(m.group(1))] = json.load(fh)
+    return runs
+
+
+def pick_pair(runs: dict[int, dict], base: int | None, head: int | None):
+    """Resolve the run pair: an explicit index is always honoured; a
+    missing ``head`` defaults to the latest run, a missing ``base`` to the
+    most recent earlier run with the same smoke flag as head."""
+    if not runs:
+        return None, None
+    if head is None:
+        head = max(runs)
+    if base is None and head in runs:
+        smoke = runs[head].get("smoke", False)
+        base = next((b for b in sorted(runs, reverse=True)
+                     if b < head and runs[b].get("smoke", False) == smoke),
+                    None)
+    return base, head
+
+
+def diff_runs(base_run: dict, head_run: dict, threshold: float):
+    """Yields (name, base, head, rel_change, status) per matched row."""
+    base_rows = {r["name"]: r["value"] for r in base_run.get("benches", [])}
+    for row in head_run.get("benches", []):
+        name, head_v = row["name"], row["value"]
+        if name not in base_rows:
+            yield name, None, head_v, None, "new"
+            continue
+        base_v = base_rows[name]
+        rel = (head_v - base_v) / abs(base_v) if base_v else 0.0
+        d = direction_of(name)
+        if d == 0 or abs(rel) < threshold:
+            status = "ok"
+        elif (d < 0) == (rel > 0):
+            status = "REGRESSION"
+        else:
+            status = "improved"
+        yield name, base_v, head_v, rel, status
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results-dir", default=RESULTS_DIR)
+    ap.add_argument("--base", type=int, default=None,
+                    help="BENCH index to diff from (default: previous "
+                         "compatible run)")
+    ap.add_argument("--head", type=int, default=None,
+                    help="BENCH index to diff to (default: latest run)")
+    ap.add_argument("--threshold", type=float, default=0.20,
+                    help="relative change below which a row is noise")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit nonzero when a regression is flagged")
+    args = ap.parse_args()
+
+    runs = load_runs(args.results_dir)
+    for flag, idx in (("--base", args.base), ("--head", args.head)):
+        if idx is not None and idx not in runs:
+            # an explicit-but-missing index is an ERROR, never silently
+            # replaced by an auto-picked pair (a typo in CI must fail loud)
+            print(f"{flag} {idx}: no BENCH_{idx}.json in "
+                  f"{args.results_dir} (have {sorted(runs)})",
+                  file=sys.stderr)
+            raise SystemExit(2)
+    base, head = pick_pair(runs, args.base, args.head)
+    if head is None or base is None:
+        print(f"nothing to diff: {len(runs)} run(s) in {args.results_dir} "
+              f"(need two with a matching smoke flag)")
+        return
+
+    print(f"# BENCH_{base} -> BENCH_{head} "
+          f"(smoke={runs[head].get('smoke', False)}, "
+          f"threshold={args.threshold:.0%})")
+    print(f"{'name':<40} {'base':>12} {'head':>12} {'delta':>8}  status")
+    regressions = 0
+    for name, b, h, rel, status in diff_runs(runs[base], runs[head],
+                                             args.threshold):
+        if status == "new":
+            print(f"{name:<40} {'-':>12} {h:>12.4g} {'-':>8}  new")
+            continue
+        if status == "REGRESSION":
+            regressions += 1
+        print(f"{name:<40} {b:>12.4g} {h:>12.4g} {rel:>+7.1%}  {status}")
+    print(f"# {regressions} regression(s) flagged")
+    if regressions and args.strict:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,15 +1,18 @@
 """Batched serving with continuous batching over a PAGED KV cache.
 
     PYTHONPATH=src python examples/serve_batched.py [--dense]
-        [--page-size 16] [--pages 16]
+        [--page-size 16] [--pages 16] [--chunk-size 16 [--token-budget 32]]
 
-Submits a burst of mixed-length requests against a page pool holding (at
-the default flags) the HBM budget of only 4 dense slots; the engine admits
-by free-page budget
-(more concurrent requests than slots), appends/reclaims pages as requests
-grow and finish, and prints per-step batch occupancy + pool utilization.
-Outputs are verified token-exact against per-request full-context greedy
-decoding."""
+Submits a burst of mixed-length requests — plus, in chunked mode, one
+LONG prompt — against a page pool holding (at the default flags) the HBM
+budget of only 4 dense slots; the engine admits by free-page budget (more
+concurrent requests than slots), appends/reclaims pages as requests grow
+and finish, and prints per-step batch occupancy + pool utilization.
+``--chunk-size`` enables the continuous-batching scheduler's chunked
+prefill (DESIGN.md §10): the long prompt prefills a chunk per step while
+the short requests keep decoding — watch the per-step ``prefill Nt+decode
+Mt`` split. Outputs are verified token-exact against per-request
+full-context greedy decoding in every mode."""
 
 import argparse
 import time
@@ -28,7 +31,13 @@ def main():
     ap.add_argument("--dense", action="store_true")
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--pages", type=int, default=16)
+    ap.add_argument("--chunk-size", type=int, default=None,
+                    help="prefill chunk length (paged mode; enables the "
+                         "long-prompt demo request)")
+    ap.add_argument("--token-budget", type=int, default=None)
     args = ap.parse_args()
+    if args.chunk_size and args.dense:
+        ap.error("--chunk-size requires the paged engine (drop --dense)")
 
     cfg = reduced_config("granite-3-2b", num_layers=4, d_model=128,
                          num_heads=4, num_kv_heads=2, head_dim=32,
@@ -41,6 +50,11 @@ def main():
     prompts = [list(rng.integers(1, cfg.vocab_size,
                                  size=rng.integers(3, 12))) for _ in range(n_requests)]
     new_tokens = [int(rng.integers(4, 12)) for _ in range(n_requests)]
+    if args.chunk_size:
+        # one long prompt to demonstrate chunk/decode interleaving: it
+        # prefills --chunk-size tokens per step while the shorts decode.
+        prompts.insert(0, list(rng.integers(1, cfg.vocab_size, size=40)))
+        new_tokens.insert(0, 4)
 
     dense_slots, capacity = 4, 64
     if args.dense:
@@ -55,11 +69,15 @@ def main():
         lanes = max(dense_slots, 2 * cells // capacity)
         eng = ServingEngine(model, params, num_slots=lanes,
                             capacity=capacity, paged=True,
-                            page_size=args.page_size, num_pages=args.pages)
+                            page_size=args.page_size, num_pages=args.pages,
+                            chunk_size=args.chunk_size,
+                            token_budget=args.token_budget)
+        chunked = (f", chunked prefill {args.chunk_size}t/step"
+                   if args.chunk_size else "")
         print(f"paged: {args.pages} pages x {args.page_size} rows "
               f"({cells} cells = {cells / (dense_slots * capacity):.2g}x "
               f"the dense {dense_slots}x{capacity} budget), {lanes} decode "
-              f"lanes ({eng.cache_bytes()/1e6:.2f} MB pool)")
+              f"lanes ({eng.cache_bytes()/1e6:.2f} MB pool){chunked}")
 
     t0 = time.perf_counter()
     for p, n in zip(prompts, new_tokens):

@@ -26,3 +26,9 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
 
 echo "== benchmark smoke (benchmarks.run --smoke) =="
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.run --smoke
+
+echo "== benchmark trajectory (benchmarks.report) =="
+# diff the run just written against the previous compatible BENCH_<n>.json
+# and print flagged regressions in every CI log (non-strict: CPU timing
+# noise makes a hard gate counterproductive; the trajectory stays visible).
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.report

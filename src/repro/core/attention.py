@@ -75,6 +75,10 @@ def attention(
     *,
     kv_mask: jax.Array | None = None,
     segment_ids: jax.Array | None = None,   # (b, s) packed-document ids
+    q_segment_ids: jax.Array | None = None,   # (b, sq) explicit q-side ids
+    kv_segment_ids: jax.Array | None = None,  # (b, sk) explicit kv-side ids
+    q_positions: jax.Array | None = None,     # (b, sq) logical positions
+    kv_positions: jax.Array | None = None,    # (b, sk) logical positions
     block_layout=None,
     dropout_seed: int = 0,
     deterministic: bool = True,
@@ -85,10 +89,16 @@ def attention(
 
     ``segment_ids`` makes packed (varlen) sequences first-class for every
     impl: tokens attend only within their own segment (DESIGN.md §8).
+    Suffix shapes (sq != sk) pass ``q_segment_ids``/``kv_segment_ids``
+    explicitly, and ``q_positions``/``kv_positions`` give the causal term
+    a per-segment q_offset (chunked prefill, DESIGN.md §10) — every impl
+    evaluates the same fused mask either way.
     """
     dropout_p = 0.0 if deterministic else spec.dropout_p
     common = dict(causal=spec.causal, window=spec.window, kv_mask=kv_mask,
-                  segment_ids=segment_ids, scale=scale, q_offset=q_offset)
+                  segment_ids=segment_ids, q_segment_ids=q_segment_ids,
+                  kv_segment_ids=kv_segment_ids, q_positions=q_positions,
+                  kv_positions=kv_positions, scale=scale, q_offset=q_offset)
     if spec.impl in ("pallas", "block_sparse"):
         # One path: every call's masks compile to a block layout inside
         # kernels/ops.py; "block_sparse" is just the Alg. 5 sparse pattern
@@ -106,6 +116,7 @@ def attention(
             raise ValueError("attention dropout requires impl='pallas'")
         if (spec.banded_window and spec.window is not None
                 and kv_mask is None and segment_ids is None
+                and q_segment_ids is None and q_positions is None
                 and q.shape[2] == k.shape[2] and (q_offset in (None, 0))):
             return kref.window_banded_attention(
                 q, k, v, window=spec.window, scale=scale,

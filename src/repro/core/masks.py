@@ -111,7 +111,17 @@ class MaskSpec:
     trace; array fields are traced. ``sparse_layout`` is an authoritative
     Alg. 5 block pattern: its FULL blocks attend fully regardless of
     geometry (causal/window shape only its PARTIAL blocks' element masks),
-    while validity/isolation terms still apply everywhere."""
+    while validity/isolation terms still apply everywhere.
+
+    ``q_positions`` / ``kv_positions`` ((b, sq) / (b, sk) int32, traced,
+    both or neither) generalize the static ``q_offset``: when present the
+    causal/window terms compare these LOGICAL token positions instead of
+    buffer indices. This is how packed chunked prefill expresses a
+    *per-segment* q_offset — each packed segment's chunk queries carry
+    positions ``hist_i + r`` against its gathered prefix's ``0..hist_i+C_i``
+    (DESIGN.md §10). ``q_offset`` is ignored when positions are given, and
+    ``kv_valid_len`` (a buffer-index term) must be None — buffer-tail
+    padding is expressed through ``kv_mask`` or out-of-range positions."""
     causal: bool = False
     window: int | None = None
     q_offset: int = 0
@@ -119,12 +129,31 @@ class MaskSpec:
     kv_mask: Any = None                   # (b, sk) bool, traced
     q_segment_ids: Any = None             # (b, sq) int32, traced
     kv_segment_ids: Any = None            # (b, sk) int32, traced
+    q_positions: Any = None               # (b, sq) int32, traced
+    kv_positions: Any = None              # (b, sk) int32, traced
     sparse_layout: Any = None             # static (nq, nk) uint8 pattern
+
+    def __post_init__(self):
+        if (self.q_positions is None) != (self.kv_positions is None):
+            raise ValueError(
+                "q_positions and kv_positions must be passed together")
+        if self.q_positions is not None and self.kv_valid_len is not None:
+            raise ValueError(
+                "kv_valid_len is a buffer-index term and cannot combine with "
+                "logical q/kv_positions; express the padding tail through "
+                "kv_mask or out-of-range kv positions")
+        if self.q_positions is not None and self.sparse_layout is not None:
+            raise ValueError(
+                "a static sparse_layout cannot govern traced positions")
 
     @property
     def has_geometry(self) -> bool:
         """Geometric terms (subject to sparse-FULL override)."""
         return self.causal or self.window is not None
+
+    @property
+    def has_positions(self) -> bool:
+        return self.q_positions is not None
 
     @property
     def has_data(self) -> bool:
@@ -134,13 +163,18 @@ class MaskSpec:
 
     @property
     def has_traced(self) -> bool:
-        return self.kv_mask is not None or self.q_segment_ids is not None
+        return (self.kv_mask is not None or self.q_segment_ids is not None
+                or self.q_positions is not None)
 
     def element_mask(self, q_len: int, k_len: int):
         """Full-range fused mask: (b, 1, q, k) if traced terms participate,
         (q, k) otherwise, or None if unmasked. Oracle-side lowering."""
-        q_pos = jnp.arange(q_len)[:, None] + self.q_offset
-        k_pos = jnp.arange(k_len)[None, :]
+        if self.q_positions is not None:
+            q_pos = self.q_positions[:, None, :, None]
+            k_pos = self.kv_positions[:, None, None, :]
+        else:
+            q_pos = jnp.arange(q_len)[:, None] + self.q_offset
+            k_pos = jnp.arange(k_len)[None, :]
         return element_mask(
             q_pos, k_pos, causal=self.causal, window=self.window,
             kv_valid_len=self.kv_valid_len,
@@ -201,6 +235,14 @@ def decode_kv_valid(kv_len: jnp.ndarray, capacity: int, *,
 # come out fully masked (l == 0 -> output 0) instead of attending garbage.
 SEG_PAD_Q = -1
 SEG_PAD_KV = -2
+
+# Sentinel POSITION for padded rows when traced q/kv_positions are in play.
+# Far beyond any real token position but small enough that int32
+# ``q_pos - k_pos`` arithmetic cannot overflow: a padded KEY at POS_PAD is
+# causally unreachable from every real query (q_pos >= k_pos fails), so
+# bucket-padding tails self-mask under causal position masking, and the
+# per-block position ranges classify all-padded kv blocks SKIP.
+POS_PAD = 1 << 28
 
 
 def segment_mask(q_segment_ids: jnp.ndarray,
@@ -376,6 +418,53 @@ def paged_block_layout(kv_len: jnp.ndarray, page_table: jnp.ndarray,
     return jnp.where(page_table < 0, BLOCK_SKIP, lay)
 
 
+def position_block_layout(q_positions: jnp.ndarray,
+                          kv_positions: jnp.ndarray,
+                          block_q: int, block_k: int, *,
+                          causal: bool = True,
+                          window: int | None = None) -> jnp.ndarray:
+    """(b, sq) x (b, sk) logical positions -> (b, nq, nk) uint8 geometry
+    classes for position-based causal/window masking.
+
+    The traced analogue of ``causal_block_layout`` when token positions are
+    data (packed chunked prefill: each segment's queries sit at
+    ``hist + r`` against prefix keys ``0..hist+C``). Range-based and sound
+    for ARBITRARY position arrays: with per-block [min, max] bounds,
+    every (q, k) pair satisfies ``q >= k`` iff ``q_min >= k_max`` (FULL),
+    and no pair does iff ``q_max < k_min`` (SKIP); the window term
+    ``q - k < w`` is provably all-true iff ``q_max - k_min < w`` and
+    all-false iff ``q_min - k_max >= w``. Padded rows at POS_PAD make
+    all-padding kv blocks SKIP for free."""
+    b, sq = q_positions.shape
+    _, sk = kv_positions.shape
+    qr = q_positions.reshape(b, sq // block_q, block_q)
+    kr = kv_positions.reshape(b, sk // block_k, block_k)
+    qmin, qmax = jnp.min(qr, -1)[:, :, None], jnp.max(qr, -1)[:, :, None]
+    kmin, kmax = jnp.min(kr, -1)[:, None, :], jnp.max(kr, -1)[:, None, :]
+    if not (causal or window is not None):
+        # no geometric term consumes positions: (b, nq, nk) all-FULL
+        return jnp.full((b, qr.shape[1], kr.shape[1]), BLOCK_FULL, jnp.int32)
+    skip = qmax < kmin
+    full = qmin >= kmax
+    if window is not None:
+        skip = skip | ((qmin - kmax) >= window)
+        full = full & ((qmax - kmin) < window)
+    return jnp.where(skip, BLOCK_SKIP,
+                     jnp.where(full, BLOCK_FULL, BLOCK_PARTIAL))
+
+
+def combine_geometry_layouts(layout, geo):
+    """Fold a GEOMETRY block classification (position-based causal/window)
+    into a layout. Unlike ``combine_block_layouts`` — whose PARTIAL
+    demotion targets PARTIAL_DATA because only data terms remain — a
+    geometry-PARTIAL block must re-apply the geometric element terms, so
+    FULL and PARTIAL_DATA alike demote to plain PARTIAL."""
+    xp = np if isinstance(layout, np.ndarray) and isinstance(geo, np.ndarray) else jnp
+    run = (layout != BLOCK_SKIP) & (geo != BLOCK_SKIP)
+    demoted = xp.where(geo == BLOCK_FULL, layout, BLOCK_PARTIAL)
+    return xp.where(run, demoted, BLOCK_SKIP)
+
+
 def segment_block_layout(q_segment_ids: jnp.ndarray,
                          kv_segment_ids: jnp.ndarray,
                          block_q: int, block_k: int) -> jnp.ndarray:
@@ -466,7 +555,11 @@ def compile_block_layout(spec: MaskSpec, q_len: int, k_len: int,
     nq = (q_len + block_q - 1) // block_q
     nk = (k_len + block_k - 1) // block_k
 
-    if spec.sparse_layout is not None:
+    if spec.has_positions:
+        # geometry is data now: causal/window classify via traced per-block
+        # position ranges below; the static seed is all-FULL.
+        static = full_block_layout(q_len, k_len, block_q, block_k)
+    elif spec.sparse_layout is not None:
         static = np.asarray(spec.sparse_layout, np.uint8)
         if static.shape != (nq, nk):
             raise ValueError(
@@ -497,6 +590,11 @@ def compile_block_layout(spec: MaskSpec, q_len: int, k_len: int,
             f"divisible by block sizes, got ({q_len}, {k_len}) vs "
             f"({block_q}, {block_k})")
     layout = jnp.asarray(static, jnp.int32)[None]          # (1, nq, nk)
+    if spec.has_positions:
+        geo = position_block_layout(spec.q_positions, spec.kv_positions,
+                                    block_q, block_k, causal=spec.causal,
+                                    window=spec.window)    # (b, nq, nk)
+        layout = combine_geometry_layouts(layout, geo)
     if spec.kv_mask is not None:
         col = kv_block_layout(spec.kv_mask, block_k)       # (b, nk)
         layout = combine_block_layouts(layout, col[:, None, :])

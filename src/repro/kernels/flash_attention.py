@@ -93,16 +93,24 @@ def _layout_block(layout_ref):
 
 
 def _tile_mask(qi, ki, bq, bk, q_offset, *, causal, window, kv_valid_len,
-               kvm_ref, qseg_ref, kseg_ref, geometry):
+               kvm_ref, qseg_ref, kseg_ref, qpos_ref=None, kpos_ref=None,
+               geometry=True):
     """The fused element mask (core.masks.element_mask) for tile (qi, ki).
 
     ``geometry=False`` drops the causal/window terms (PARTIAL_DATA blocks:
     the compiler proved them all-true, or an Alg. 5 sparse layout overrides
-    them); validity/isolation terms always apply. Returns None if no term
-    is active.
+    them); validity/isolation terms always apply. With ``qpos_ref`` /
+    ``kpos_ref`` (traced logical positions, the per-segment-q_offset path)
+    the causal/window compare reads the loaded position rows instead of the
+    tile iotas (``kv_valid_len`` — a buffer-index term — is excluded by
+    the MaskSpec). Returns None if no term is active.
     """
-    q_pos = qi * bq + q_offset + jax.lax.broadcasted_iota(jnp.int32, (bq, 1), 0)
-    k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
+    if qpos_ref is not None:
+        q_pos = qpos_ref[0][:, None]
+        k_pos = kpos_ref[0][None, :]
+    else:
+        q_pos = qi * bq + q_offset + jax.lax.broadcasted_iota(jnp.int32, (bq, 1), 0)
+        k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
     return M.element_mask(
         q_pos, k_pos,
         causal=causal if geometry else False,
@@ -142,7 +150,8 @@ def _layout_branches(blk, step, *, causal, window, kv_valid_len,
 # ---------------------------------------------------------------------------
 
 def _fwd_kernel(seed_ref, q_ref, k_ref, v_ref, layout_ref, kvm_ref, qseg_ref,
-                kseg_ref, o_ref, m_ref, l_ref, acc_sc, m_sc, l_sc, *,
+                kseg_ref, qpos_ref, kpos_ref, o_ref, m_ref, l_ref,
+                acc_sc, m_sc, l_sc, *,
                 scale, causal, window, q_offset, kv_valid_len, dropout_p,
                 num_heads, q_len, k_len, variant):
     b, h = pl.program_id(0), pl.program_id(1)
@@ -170,7 +179,8 @@ def _fwd_kernel(seed_ref, q_ref, k_ref, v_ref, layout_ref, kvm_ref, qseg_ref,
             ok = _tile_mask(qi, ki, bq, bk, q_offset, causal=causal,
                             window=window, kv_valid_len=kv_valid_len,
                             kvm_ref=kvm_ref, qseg_ref=qseg_ref,
-                            kseg_ref=kseg_ref, geometry=(mode == "geo_data"))
+                            kseg_ref=kseg_ref, qpos_ref=qpos_ref,
+                            kpos_ref=kpos_ref, geometry=(mode == "geo_data"))
             if ok is not None:
                 s = jnp.where(ok, s, NEG_INF)
 
@@ -232,6 +242,8 @@ def flash_attention_forward(
     dropout_dims: tuple[int, int] | None = None,
     q_segment_ids: jax.Array | None = None,
     kv_segment_ids: jax.Array | None = None,
+    q_positions: jax.Array | None = None,
+    kv_positions: jax.Array | None = None,
     interpret: bool = True,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Returns (o, m, l). Shapes: q (b,hq,sq,d), k/v (b,hkv,sk,d),
@@ -241,14 +253,18 @@ def flash_attention_forward(
     (b, nq, nk) traced — and is the single source of block-run truth.
     ``kv_valid_len`` statically marks the kv padding tail (keys >= it are
     invalid); ``q/kv_segment_ids`` ((b, sq) / (b, sk) int32, both or
-    neither) feed the PARTIAL-block element compare. dropout_seed may be a
-    traced scalar (no retrace per step); dropout_dims = (orig_q_len,
-    orig_k_len) keeps the counter-based dropout hash independent of
-    padding."""
+    neither) feed the PARTIAL-block element compare; ``q/kv_positions``
+    ((b, sq) / (b, sk) int32, both or neither) make the causal/window
+    compare position-based (per-segment q_offset; excludes kv_valid_len).
+    dropout_seed may be a traced scalar (no retrace per step);
+    dropout_dims = (orig_q_len, orig_k_len) keeps the counter-based
+    dropout hash independent of padding."""
     b, hq, sq, d = q.shape
     _, hkv, sk, _ = k.shape
     n_rep = hq // hkv
     nq, nk = sq // block_q, sk // block_k
+    if q_positions is not None and kv_valid_len is not None:
+        raise ValueError("kv_valid_len cannot combine with q/kv_positions")
     dq_len, dk_len = dropout_dims if dropout_dims is not None else (sq, sk)
     seed_arr = jnp.asarray(dropout_seed, jnp.uint32).reshape(1)
 
@@ -267,6 +283,7 @@ def flash_attention_forward(
     args = [seed_arr, q, k, v, block_layout]
     has_kvm = kv_mask is not None
     has_seg = q_segment_ids is not None
+    has_pos = q_positions is not None
     if has_kvm:
         in_specs.append(pl.BlockSpec((1, block_k), lambda b, h, qi, ki: (b, ki)))
         args.append(kv_mask)
@@ -275,12 +292,17 @@ def flash_attention_forward(
         args.append(q_segment_ids)
         in_specs.append(pl.BlockSpec((1, block_k), lambda b, h, qi, ki: (b, ki)))
         args.append(kv_segment_ids)
+    if has_pos:
+        in_specs.append(pl.BlockSpec((1, block_q), lambda b, h, qi, ki: (b, qi)))
+        args.append(q_positions)
+        in_specs.append(pl.BlockSpec((1, block_k), lambda b, h, qi, ki: (b, ki)))
+        args.append(kv_positions)
 
     def wrapped(seed_ref, q_ref, k_ref, v_ref, layout_ref, *rest):
-        kvm_ref, qseg_ref, kseg_ref, rest = _split_opts(
-            rest, has_kvm, has_seg)
+        kvm_ref, qseg_ref, kseg_ref, qpos_ref, kpos_ref, rest = _split_opts(
+            rest, has_kvm, has_seg, has_pos)
         return kernel(seed_ref, q_ref, k_ref, v_ref, layout_ref, kvm_ref,
-                      qseg_ref, kseg_ref, *rest)
+                      qseg_ref, kseg_ref, qpos_ref, kpos_ref, *rest)
 
     out_specs = [
         pl.BlockSpec((1, 1, block_q, d), lambda b, h, qi, ki: (b, h, qi, 0)),
@@ -321,14 +343,18 @@ def _layout_spec(block_layout, kv_major: bool = False):
     return pl.BlockSpec((1, 1, 1), lambda b, h, qi, ki: (b, qi, ki))
 
 
-def _split_opts(rest, has_kvm, has_seg):
-    """Route the optional (kvm, qseg, kseg) refs from a flat ref tuple."""
-    n_opt = int(has_kvm) + 2 * int(has_seg)
+def _split_opts(rest, has_kvm, has_seg, has_pos=False):
+    """Route the optional (kvm, qseg, kseg, qpos, kpos) refs from a flat
+    ref tuple."""
+    n_opt = int(has_kvm) + 2 * int(has_seg) + 2 * int(has_pos)
     opts, rest = rest[:n_opt], rest[n_opt:]
     kvm_ref = opts[0] if has_kvm else None
     qseg_ref = opts[int(has_kvm)] if has_seg else None
     kseg_ref = opts[int(has_kvm) + 1] if has_seg else None
-    return kvm_ref, qseg_ref, kseg_ref, rest
+    base = int(has_kvm) + 2 * int(has_seg)
+    qpos_ref = opts[base] if has_pos else None
+    kpos_ref = opts[base + 1] if has_pos else None
+    return kvm_ref, qseg_ref, kseg_ref, qpos_ref, kpos_ref, rest
 
 
 # ---------------------------------------------------------------------------
@@ -349,7 +375,8 @@ def _recompute_p(q, k, m_row, l_row, scale, ok):
 
 
 def _dq_kernel(seed_ref, q_ref, k_ref, v_ref, do_ref, m_ref, l_ref, dd_ref,
-               layout_ref, kvm_ref, qseg_ref, kseg_ref, dq_ref, dq_sc, *,
+               layout_ref, kvm_ref, qseg_ref, kseg_ref, qpos_ref, kpos_ref,
+               dq_ref, dq_sc, *,
                scale, causal, window, q_offset, kv_valid_len, dropout_p,
                num_heads, q_len, k_len):
     b, h = pl.program_id(0), pl.program_id(1)
@@ -373,7 +400,8 @@ def _dq_kernel(seed_ref, q_ref, k_ref, v_ref, do_ref, m_ref, l_ref, dd_ref,
             ok = _tile_mask(qi, ki, bq, bk, q_offset, causal=causal,
                             window=window, kv_valid_len=kv_valid_len,
                             kvm_ref=kvm_ref, qseg_ref=qseg_ref,
-                            kseg_ref=kseg_ref, geometry=(mode == "geo_data"))
+                            kseg_ref=kseg_ref, qpos_ref=qpos_ref,
+                            kpos_ref=kpos_ref, geometry=(mode == "geo_data"))
         p = _recompute_p(q, k, m_row, l_row, scale, ok)
         dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
                                  preferred_element_type=jnp.float32)
@@ -399,8 +427,8 @@ def _dq_kernel(seed_ref, q_ref, k_ref, v_ref, do_ref, m_ref, l_ref, dd_ref,
 # ---------------------------------------------------------------------------
 
 def _dkv_kernel(seed_ref, q_ref, k_ref, v_ref, do_ref, m_ref, l_ref, dd_ref,
-                layout_ref, kvm_ref, qseg_ref, kseg_ref, dk_ref, dv_ref,
-                dk_sc, dv_sc, *,
+                layout_ref, kvm_ref, qseg_ref, kseg_ref, qpos_ref, kpos_ref,
+                dk_ref, dv_ref, dk_sc, dv_sc, *,
                 scale, causal, window, q_offset, kv_valid_len, dropout_p,
                 num_heads, q_len, k_len):
     b, h = pl.program_id(0), pl.program_id(1)
@@ -425,7 +453,8 @@ def _dkv_kernel(seed_ref, q_ref, k_ref, v_ref, do_ref, m_ref, l_ref, dd_ref,
             ok = _tile_mask(qi, ki, bq, bk, q_offset, causal=causal,
                             window=window, kv_valid_len=kv_valid_len,
                             kvm_ref=kvm_ref, qseg_ref=qseg_ref,
-                            kseg_ref=kseg_ref, geometry=(mode == "geo_data"))
+                            kseg_ref=kseg_ref, qpos_ref=qpos_ref,
+                            kpos_ref=kpos_ref, geometry=(mode == "geo_data"))
         p = _recompute_p(q, k, m_row, l_row, scale, ok)
         if dropout_p > 0.0:
             keep = _dropout_keep(seed_ref[0], b, h, qi * bq, ki * bk, bq, bk,
@@ -465,6 +494,8 @@ def flash_attention_backward(
     block_q, block_k, dropout_dims: tuple[int, int] | None = None,
     q_segment_ids: jax.Array | None = None,
     kv_segment_ids: jax.Array | None = None,
+    q_positions: jax.Array | None = None,
+    kv_positions: jax.Array | None = None,
     interpret: bool = True,
 ):
     """Returns (dq, dk, dv) with dk/dv already group-summed for GQA.
@@ -476,6 +507,7 @@ def flash_attention_backward(
     dq_len, dk_len = dropout_dims if dropout_dims is not None else (sq, sk)
     has_kvm = kv_mask is not None
     has_seg = q_segment_ids is not None
+    has_pos = q_positions is not None
     seed_arr = jnp.asarray(dropout_seed, jnp.uint32).reshape(1)
 
     # D_i = rowsum(dO ∘ O) (paper Eq. 4 / Alg. 4 line 19). O(Nd) IO, done at
@@ -489,9 +521,10 @@ def flash_attention_backward(
     def _route(kernel, n_fixed):
         def wrapped(*refs):
             fixed = refs[:n_fixed]
-            kvm_ref, qseg_ref, kseg_ref, rest = _split_opts(
-                refs[n_fixed:], has_kvm, has_seg)
-            return kernel(*fixed, kvm_ref, qseg_ref, kseg_ref, *rest)
+            kvm_ref, qseg_ref, kseg_ref, qpos_ref, kpos_ref, rest = \
+                _split_opts(refs[n_fixed:], has_kvm, has_seg, has_pos)
+            return kernel(*fixed, kvm_ref, qseg_ref, kseg_ref, qpos_ref,
+                          kpos_ref, *rest)
         return wrapped
 
     def _append_opts(in_specs, args, kvm_spec, qseg_spec, kseg_spec):
@@ -503,6 +536,12 @@ def flash_attention_backward(
             args.append(q_segment_ids)
             in_specs.append(kseg_spec)
             args.append(kv_segment_ids)
+        if has_pos:
+            # positions ride the same q-row / kv-row BlockSpecs as the ids
+            in_specs.append(qseg_spec)
+            args.append(q_positions)
+            in_specs.append(kseg_spec)
+            args.append(kv_positions)
 
     # ---- dq kernel ----
     dq_kernel = functools.partial(_dq_kernel, **common)

@@ -27,7 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.masks import (MaskSpec, SEG_PAD_KV, SEG_PAD_Q,
+from repro.core.masks import (MaskSpec, POS_PAD, SEG_PAD_KV, SEG_PAD_Q,
                               compile_block_layout, resolve_segment_ids)
 from repro.kernels import flash_attention as fa
 from repro.kernels import ref as ref_mod
@@ -50,11 +50,11 @@ def _pad_to(x: jax.Array, axis: int, mult: int) -> tuple[jax.Array, int]:
 
 @functools.partial(
     jax.custom_vjp,
-    nondiff_argnums=(8, 9, 10, 11, 12, 13, 14, 15, 16, 17, 18),
+    nondiff_argnums=(10, 11, 12, 13, 14, 15, 16, 17, 18, 19, 20),
 )
-def _flash_core(q, k, v, kv_mask, q_seg, kv_seg, block_layout, dropout_seed,
-                scale, causal, window, q_offset, kv_valid_len, dropout_p,
-                block_q, block_k, variant, dropout_dims, interpret):
+def _flash_core(q, k, v, kv_mask, q_seg, kv_seg, q_pos, kv_pos, block_layout,
+                dropout_seed, scale, causal, window, q_offset, kv_valid_len,
+                dropout_p, block_q, block_k, variant, dropout_dims, interpret):
     o, _, _ = fa.flash_attention_forward(
         q, k, v, kv_mask, block_layout, scale=scale, causal=causal,
         window=window, q_offset=q_offset, kv_valid_len=kv_valid_len,
@@ -62,14 +62,15 @@ def _flash_core(q, k, v, kv_mask, q_seg, kv_seg, block_layout, dropout_seed,
         block_q=block_q, block_k=block_k, variant=variant,
         dropout_dims=dropout_dims,
         q_segment_ids=q_seg, kv_segment_ids=kv_seg,
+        q_positions=q_pos, kv_positions=kv_pos,
         interpret=interpret)
     return o
 
 
-def _flash_core_fwd(q, k, v, kv_mask, q_seg, kv_seg, block_layout,
-                    dropout_seed, scale, causal, window, q_offset,
-                    kv_valid_len, dropout_p, block_q, block_k, variant,
-                    dropout_dims, interpret):
+def _flash_core_fwd(q, k, v, kv_mask, q_seg, kv_seg, q_pos, kv_pos,
+                    block_layout, dropout_seed, scale, causal, window,
+                    q_offset, kv_valid_len, dropout_p, block_q, block_k,
+                    variant, dropout_dims, interpret):
     o, m, l = fa.flash_attention_forward(
         q, k, v, kv_mask, block_layout, scale=scale, causal=causal,
         window=window, q_offset=q_offset, kv_valid_len=kv_valid_len,
@@ -77,27 +78,31 @@ def _flash_core_fwd(q, k, v, kv_mask, q_seg, kv_seg, block_layout,
         block_q=block_q, block_k=block_k, variant=variant,
         dropout_dims=dropout_dims,
         q_segment_ids=q_seg, kv_segment_ids=kv_seg,
+        q_positions=q_pos, kv_positions=kv_pos,
         interpret=interpret)
-    return o, (q, k, v, kv_mask, q_seg, kv_seg, block_layout, dropout_seed,
-               o, m, l)
+    return o, (q, k, v, kv_mask, q_seg, kv_seg, q_pos, kv_pos, block_layout,
+               dropout_seed, o, m, l)
 
 
 def _flash_core_bwd(scale, causal, window, q_offset, kv_valid_len, dropout_p,
                     block_q, block_k, variant, dropout_dims, interpret, res, do):
-    q, k, v, kv_mask, q_seg, kv_seg, block_layout, dropout_seed, o, m, l = res
+    (q, k, v, kv_mask, q_seg, kv_seg, q_pos, kv_pos, block_layout,
+     dropout_seed, o, m, l) = res
     dq, dk, dv = fa.flash_attention_backward(
         q, k, v, o, do, m, l, kv_mask, block_layout,
         scale=scale, causal=causal, window=window, q_offset=q_offset,
         kv_valid_len=kv_valid_len,
         dropout_p=dropout_p, dropout_seed=dropout_seed,
         block_q=block_q, block_k=block_k, dropout_dims=dropout_dims,
-        q_segment_ids=q_seg, kv_segment_ids=kv_seg, interpret=interpret)
+        q_segment_ids=q_seg, kv_segment_ids=kv_seg,
+        q_positions=q_pos, kv_positions=kv_pos, interpret=interpret)
 
     def _zero_tangent(x):
         return None if x is None else np.zeros(x.shape, jax.dtypes.float0)
 
     return (dq, dk, dv, _zero_tangent(kv_mask), _zero_tangent(q_seg),
-            _zero_tangent(kv_seg), _zero_tangent(block_layout),
+            _zero_tangent(kv_seg), _zero_tangent(q_pos),
+            _zero_tangent(kv_pos), _zero_tangent(block_layout),
             np.zeros((), jax.dtypes.float0))
 
 
@@ -123,6 +128,8 @@ def flash_attention(
     segment_ids: jax.Array | None = None,     # (b, s) packed ids (self-attn)
     q_segment_ids: jax.Array | None = None,   # (b, sq) explicit q-side ids
     kv_segment_ids: jax.Array | None = None,  # (b, sk) explicit kv-side ids
+    q_positions: jax.Array | None = None,     # (b, sq) logical positions
+    kv_positions: jax.Array | None = None,    # (b, sk) logical positions
     interpret: bool | None = None,
 ) -> jax.Array:
     """Differentiable FlashAttention (Pallas). Pads seq dims to block
@@ -136,6 +143,14 @@ def flash_attention(
     Padded tails get sentinel segments (q/kv pads differ), so padded rows
     come out fully masked.
 
+    ``q_positions`` / ``kv_positions`` (both or neither) make the
+    causal/window terms compare LOGICAL token positions instead of buffer
+    indices — the per-segment q_offset of packed chunked prefill, where
+    each segment's chunk queries at ``hist + r`` attend its gathered prefix
+    at ``0..hist+C``. ``q_offset`` is ignored when positions are given, and
+    padded rows take the ``masks.POS_PAD`` sentinel (causally unreachable,
+    so bucket tails self-mask).
+
     ``block_q``/``block_k`` left ``None`` are resolved through
     ``kernels.tuning`` (analytic SRAM-budget chooser, or the empirical
     autotuner when enabled); explicit values pass through. Either way the
@@ -148,6 +163,13 @@ def flash_attention(
         raise ValueError(f"q heads {hq} not a multiple of kv heads {hkv}")
     q_seg, kv_seg = resolve_segment_ids(segment_ids, q_segment_ids,
                                         kv_segment_ids, sq, sk)
+    if (q_positions is None) != (kv_positions is None):
+        raise ValueError(
+            "q_positions and kv_positions must be passed together")
+    if q_positions is not None and not (causal or window is not None):
+        # no geometric term consumes positions: they are inert — drop them
+        # so the call takes the cheaper static-layout path.
+        q_positions = kv_positions = None
     if scale is None:
         scale = 1.0 / (d ** 0.5)
     if q_offset is None:
@@ -167,7 +189,8 @@ def flash_attention(
                 causal=causal, window=window,
                 has_kv_mask=kv_mask is not None,
                 has_segments=q_seg is not None,
-                has_sparse=block_layout is not None))
+                has_sparse=block_layout is not None,
+                has_positions=q_positions is not None))
         block_q, block_k = tiles.block_q, tiles.block_k
     block_q = tuning.round_block(block_q, sq)
     block_k = tuning.round_block(block_k, sk)
@@ -183,19 +206,33 @@ def flash_attention(
                         constant_values=SEG_PAD_Q)
         kv_seg = jnp.pad(jnp.asarray(kv_seg, jnp.int32), ((0, 0), (0, kpad)),
                          constant_values=SEG_PAD_KV)
+    if q_positions is not None:
+        # POS_PAD keys are causally unreachable from real queries, so the
+        # kv padding tail self-masks (kv_valid_len is a buffer-index term
+        # and cannot combine with logical positions).
+        q_positions = jnp.pad(
+            jnp.asarray(q_positions, jnp.int32), ((0, 0), (0, qpad)),
+            constant_values=POS_PAD)
+        kv_positions = jnp.pad(
+            jnp.asarray(kv_positions, jnp.int32), ((0, 0), (0, kpad)),
+            constant_values=POS_PAD)
 
+    has_pos = q_positions is not None
     spec = MaskSpec(
-        causal=causal, window=window, q_offset=q_offset,
-        kv_valid_len=sk if kpad else None,
+        causal=causal, window=window,
+        q_offset=0 if has_pos else q_offset,
+        kv_valid_len=None if has_pos else (sk if kpad else None),
         kv_mask=kvm, q_segment_ids=q_seg, kv_segment_ids=kv_seg,
+        q_positions=q_positions, kv_positions=kv_positions,
         sparse_layout=block_layout)
     layout = compile_block_layout(spec, qp.shape[2], kp.shape[2],
                                   block_q, block_k).as_array()
 
     seed = jnp.asarray(dropout_seed, jnp.uint32)
-    o = _flash_core(qp, kp, vp, kvm, q_seg, kv_seg, layout, seed, scale,
-                    causal, window, q_offset, spec.kv_valid_len, dropout_p,
-                    block_q, block_k, variant, (sq, sk), interpret)
+    o = _flash_core(qp, kp, vp, kvm, q_seg, kv_seg, q_positions,
+                    kv_positions, layout, seed, scale,
+                    causal, window, spec.q_offset, spec.kv_valid_len,
+                    dropout_p, block_q, block_k, variant, (sq, sk), interpret)
     return o[:, :, :sq]
 
 

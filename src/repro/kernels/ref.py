@@ -91,6 +91,8 @@ def standard_attention(
     segment_ids: jax.Array | None = None,     # (b, s) packed-segment ids (self-attn)
     q_segment_ids: jax.Array | None = None,   # (b, sq) explicit q-side ids
     kv_segment_ids: jax.Array | None = None,  # (b, sk) explicit kv-side ids
+    q_positions: jax.Array | None = None,     # (b, sq) logical positions
+    kv_positions: jax.Array | None = None,    # (b, sk) logical positions
     scale: float | None = None,
     dropout_p: float = 0.0,
     dropout_seed: int = 0,
@@ -102,6 +104,8 @@ def standard_attention(
     assert hq % hkv == 0, (hq, hkv)
     q_seg, kv_seg = resolve_segment_ids(segment_ids, q_segment_ids,
                                         kv_segment_ids, sq, sk)
+    if (q_positions is None) != (kv_positions is None):
+        raise ValueError("q_positions and kv_positions must be passed together")
     k = repeat_kv(k, hq // hkv)
     v = repeat_kv(v, hq // hkv)
     if scale is None:
@@ -113,9 +117,16 @@ def standard_attention(
     if bias is not None:
         s = s + bias.astype(jnp.float32)
 
+    if q_positions is not None:
+        # logical positions make causal/window per-segment-q_offset aware
+        q_pos = q_positions[:, None, :, None]
+        k_pos = kv_positions[:, None, None, :]
+    else:
+        q_pos = jnp.arange(sq)[:, None] + q_offset
+        k_pos = jnp.arange(sk)[None, :]
     neg = jnp.float32(NEG_INF)
     ok = M.element_mask(
-        jnp.arange(sq)[:, None] + q_offset, jnp.arange(sk)[None, :],
+        q_pos, k_pos,
         causal=causal, window=window,
         kv_valid=kv_mask[:, None, None, :] if kv_mask is not None else None,
         q_seg=q_seg[:, None, :, None] if q_seg is not None else None,
@@ -159,6 +170,8 @@ def chunked_attention(
     segment_ids: jax.Array | None = None,     # (b, s) packed-segment ids
     q_segment_ids: jax.Array | None = None,
     kv_segment_ids: jax.Array | None = None,
+    q_positions: jax.Array | None = None,     # (b, sq) logical positions
+    kv_positions: jax.Array | None = None,    # (b, sk) logical positions
     scale: float | None = None,
     chunk_size: int = 1024,
     q_offset: int | None = None,
@@ -172,7 +185,8 @@ def chunked_attention(
     (used by the dry-run cost probes: XLA cost_analysis counts loop bodies
     once, so probes unroll and extrapolate). Packed segments are masked
     per chunk, the O(n) Rabe–Staats formulation inheriting the fix for free
-    (DESIGN.md §8).
+    (DESIGN.md §8); traced ``q/kv_positions`` make the causal/window terms
+    position-based (per-segment q_offset — packed chunked prefill).
     """
     b, hq, sq, d = q.shape
     _, hkv, sk, _ = k.shape
@@ -180,6 +194,8 @@ def chunked_attention(
     n_rep = hq // hkv
     q_seg, kv_seg = resolve_segment_ids(segment_ids, q_segment_ids,
                                         kv_segment_ids, sq, sk)
+    if (q_positions is None) != (kv_positions is None):
+        raise ValueError("q_positions and kv_positions must be passed together")
     # self-packing (one id tensor both sides): every causal q row keeps its
     # own diagonal key, so the guard-free fast path below stays NaN-safe.
     self_seg = q_seg is kv_seg
@@ -200,6 +216,9 @@ def chunked_attention(
         if kv_seg is not None:
             # pad keys get a sentinel id no real query carries
             kv_seg = jnp.pad(kv_seg, ((0, 0), (0, pad)), constant_values=-2)
+        if kv_positions is not None:
+            kv_positions = jnp.pad(kv_positions, ((0, 0), (0, pad)),
+                                   constant_values=M.POS_PAD)
     sk_p = k.shape[2]
     n_chunks = sk_p // chunk_size
 
@@ -213,6 +232,11 @@ def chunked_attention(
         sc_seg = kv_seg.reshape(b, n_chunks, chunk_size).transpose(1, 0, 2)
     else:
         sc_seg = None
+    if kv_positions is not None:
+        sc_pos = kv_positions.reshape(
+            b, n_chunks, chunk_size).transpose(1, 0, 2)
+    else:
+        sc_pos = None
 
     qf = q.astype(jnp.float32)
     q_pos = jnp.arange(sq) + q_offset
@@ -223,21 +247,33 @@ def chunked_attention(
     # Masking with the soft sentinel (masks.NEG_INF_SOFT; exp underflows to
     # exactly 0 in fp32) lets us drop two score-sized selects per chunk.
     # Self-packed segments keep the diagonal valid, so they ride the same
-    # path.
+    # path. Traced positions cannot prove the diagonal, so they take the
+    # guarded path.
     fast = (causal and mc is None and window is None and q_offset >= 0
-            and (q_seg is None or self_seg))
+            and (q_seg is None or self_seg) and q_positions is None)
 
     def body(state: SoftmaxState, inputs):
         (ci, kb, vb), rest = inputs[:3], inputs[3:]
-        mb = rest[0] if mc is not None else None
-        sb = rest[-1] if sc_seg is not None else None
+        ri = 0
+        mb = pb = sb = None
+        if mc is not None:
+            mb = rest[ri]; ri += 1
+        if sc_seg is not None:
+            sb = rest[ri]; ri += 1
+        if sc_pos is not None:
+            pb = rest[ri]; ri += 1
         kb = repeat_kv(kb, n_rep)
         vb = repeat_kv(vb, n_rep)
         s = jnp.einsum("bhqd,bhkd->bhqk", qf, kb.astype(jnp.float32)) * scale
-        k_pos = ci * chunk_size + jnp.arange(chunk_size)
+        if pb is not None:
+            qp = q_positions[:, None, :, None]
+            kp = pb[:, None, None, :]
+        else:
+            k_pos = ci * chunk_size + jnp.arange(chunk_size)
+            qp, kp = q_pos[:, None], k_pos[None, :]
         neg = jnp.float32(M.NEG_INF_SOFT if fast else NEG_INF)
         ok = M.element_mask(
-            q_pos[:, None], k_pos[None, :], causal=causal, window=window,
+            qp, kp, causal=causal, window=window,
             kv_valid=mb[:, None, None, :] if mb is not None else None,
             q_seg=q_seg[:, None, :, None] if sb is not None else None,
             kv_seg=sb[:, None, None, :] if sb is not None else None)
@@ -277,6 +313,8 @@ def chunked_attention(
         xs = xs + (mc,)
     if sc_seg is not None:
         xs = xs + (sc_seg,)
+    if sc_pos is not None:
+        xs = xs + (sc_pos,)
     state, _ = jax.lax.scan(body, state0, xs,
                             unroll=n_chunks if unroll else 1)
     out, _ = finalize(state, dtype=q.dtype)

@@ -435,10 +435,12 @@ def autotune_tiles(sq: int, sk: int, head_dim: int, *, dtype,
 
 def mask_class_of(*, causal: bool = False, window: int | None = None,
                   has_kv_mask: bool = False, has_segments: bool = False,
-                  has_sparse: bool = False) -> str:
+                  has_sparse: bool = False,
+                  has_positions: bool = False) -> str:
     parts = [p for p, on in [("causal", causal), ("win", window is not None),
                              ("seg", has_segments), ("kvm", has_kv_mask),
-                             ("sparse", has_sparse)] if on]
+                             ("sparse", has_sparse),
+                             ("pos", has_positions)] if on]
     return "+".join(parts) or "dense"
 
 

@@ -1,14 +1,22 @@
-"""Serving launcher: continuous-batching engine over the paged KV cache.
+"""Serving launcher: continuous-batching scheduler over the paged KV cache.
 
     PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b \
         --slots 8 --requests 12 --page-size 16 --pages 24
+    # chunked prefill: a long prompt no longer head-of-line blocks decode
+    PYTHONPATH=src python -m repro.launch.serve --capacity 512 \
+        --long-prompt 300 --chunk-size 64 --token-budget 80
 
 Reduced configs on CPU; on a TPU slice the same engine runs with the
 production mesh + `make_sharded_serve_steps` (sharded, donated decode).
 ``--dense`` selects the fixed-slot baseline cache; by default the engine
 pages (families with recurrent state fall back to dense automatically).
-Each step prints batch occupancy and page-pool utilization so scheduler
-behaviour (admission waves, preemption, reclamation) is visible live."""
+``--chunk-size`` splits prompt prefills into fixed-size chunks the
+scheduler interleaves with decode under ``--token-budget`` total tokens
+per step (DESIGN.md §10); ``--temperature``/``--top-p`` switch decode from
+greedy to sampling (per-request keys, preemption-safe). Each step prints
+batch occupancy, page-pool utilization, and the step's prefill/decode
+token split so scheduler behaviour (admission waves, chunk interleaving,
+preemption, reclamation) is visible live."""
 
 from __future__ import annotations
 
@@ -46,6 +54,21 @@ def main():
     ap.add_argument("--pages", type=int, default=None,
                     help="page pool size (default: slots*capacity/page_size,"
                          " the dense engine's HBM budget)")
+    ap.add_argument("--chunk-size", type=int, default=None,
+                    help="prefill chunk length (paged mode): long prompts "
+                         "prefill this many tokens per step, interleaved "
+                         "with decode instead of head-of-line blocking it "
+                         "(default: atomic prefill)")
+    ap.add_argument("--token-budget", type=int, default=None,
+                    help="max tokens one step may process (decode lanes + "
+                         "prefill chunks; default: slots + chunk-size)")
+    ap.add_argument("--long-prompt", type=int, default=None,
+                    help="also submit one prompt of this many tokens (shows "
+                         "chunked-prefill interleaving live)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="decode temperature (0 = greedy); per-request PRNG "
+                         "keys persist across preemption")
+    ap.add_argument("--top-p", type=float, default=1.0)
     args = ap.parse_args()
 
     tuning.configure_tuning(sram_budget=args.sram_budget,
@@ -56,16 +79,25 @@ def main():
     eng = ServingEngine(model, params, num_slots=args.slots,
                         capacity=args.capacity,
                         paged=False if args.dense else None,
-                        page_size=args.page_size, num_pages=args.pages)
+                        page_size=args.page_size, num_pages=args.pages,
+                        chunk_size=args.chunk_size,
+                        token_budget=args.token_budget)
     rng = np.random.default_rng(0)
     t0 = time.perf_counter()
+    if args.long_prompt:
+        eng.submit(list(rng.integers(1, cfg.vocab_size,
+                                     size=args.long_prompt)),
+                   max_new_tokens=4, temperature=args.temperature,
+                   top_p=args.top_p)
     for _ in range(args.requests):
         plen = int(rng.integers(3, 16))
         eng.submit(list(rng.integers(1, cfg.vocab_size, size=plen)),
-                   max_new_tokens=int(rng.integers(4, args.max_new)))
+                   max_new_tokens=int(rng.integers(4, args.max_new)),
+                   temperature=args.temperature, top_p=args.top_p)
 
     mode = "paged" if eng.paged else "dense"
-    print(f"arch={cfg.name} mode={mode} lanes={args.slots} "
+    chunked = (f" chunk={args.chunk_size}" if args.chunk_size else "")
+    print(f"arch={cfg.name} mode={mode}{chunked} lanes={args.slots} "
           f"cache={eng.cache_bytes()/1e6:.2f} MB"
           + (f" pool={eng.kv.num_pages}x{eng.kv.page_size}" if eng.paged
              else f" slots={args.slots}x{args.capacity}"))

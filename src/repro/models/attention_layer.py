@@ -239,6 +239,47 @@ def paged_kv_cache_specs():
             "v": P(None, "kv_seq", None, None)}
 
 
+def chunk_prefill_attention_step(params, cfg: ModelConfig, x, pool,
+                                 dest_page, dest_off, src_page, src_off,
+                                 q_seg, kv_seg, q_pos, kv_pos,
+                                 *, spec: AttentionSpec | None = None):
+    """Packed chunked-prefill attention against the shared page pool
+    (DESIGN.md §10).
+
+    x: (1, S, d_model) — the NEXT prefill chunks of several sequences
+    packed into one varlen call (q_seg isolates them). The new K/V rows
+    are scattered straight into pool pages at ``(dest_page, dest_off)``
+    (logical positions ``hist_i + r``, pages grown chunk-by-chunk), then
+    each segment's FULL logical prefix ``[0, hist_i + C_i)`` — history
+    written by earlier chunks plus the rows just scattered — is gathered
+    back as the kv side at ``(src_page, src_off)``. The causal term runs
+    on the traced logical positions (``q_pos``: hist_i + r; ``kv_pos``:
+    0..hist_i+C_i — the per-segment q_offset), so a chunk's queries attend
+    all prior KV of their own sequence and themselves causally: chunked
+    prefill is EXACT attention over the same prefix the atomic prefill
+    sees. RoPE uses the same logical positions, making the K rows written
+    here bit-compatible with atomic-prefill and decode-step writes.
+    Returns (out, new_pool).
+    """
+    q, k, v = _project_qkv(params, cfg, x, x, q_pos, q_pos)
+
+    def _scat(c, new):  # c: (hkv, P, ps, hd); new: (1, hkv, S, hd)
+        return c.at[:, dest_page, dest_off, :].set(new[0].astype(c.dtype),
+                                                   mode="drop")
+
+    pool = {"k": _scat(pool["k"], k), "v": _scat(pool["v"], v)}
+
+    def _gath(c):  # (hkv, P, ps, hd) -> (1, hkv, Sk, hd)
+        return c[:, src_page, src_off, :][None]
+
+    spec = spec or attn_spec_from_config(cfg)
+    o = attention(q, _gath(pool["k"]), _gath(pool["v"]), spec,
+                  q_segment_ids=q_seg, kv_segment_ids=kv_seg,
+                  q_positions=q_pos, kv_positions=kv_pos,
+                  deterministic=True)
+    return _merge_heads(o) @ params["wo"], pool
+
+
 def paged_decode_attention_step(params, cfg: ModelConfig, x, pool,
                                 page_table, kv_len,
                                 *, spec: AttentionSpec | None = None):

@@ -232,6 +232,34 @@ class Model:
             params["blocks"], cfg, x, x.shape[1], segment_ids=seg)
         return caches, self._logits(params, h)
 
+    def prefill_chunk_paged(self, params, batch, caches):
+        """Prefill the NEXT chunk of several sequences, packed, against the
+        shared page pool (the chunked-prefill model step, DESIGN.md §10).
+
+        batch: {"tokens": (1, S), "q_segment_ids": (1, S),
+                "q_positions": (1, S)  — logical positions hist_i + r,
+                "kv_segment_ids"/"kv_positions": (1, Sk) for the gathered
+                prefixes, "dest_page"/"dest_off": (S,) scatter destinations,
+                "src_page"/"src_off": (Sk,) gather sources}.
+        ``caches`` is the engine's paged pool pytree (donated by the jit).
+        Each layer scatters the chunk's K/V rows into the pool, gathers the
+        segment's full logical prefix back, and attends with the traced
+        per-segment q_offset — so every chunk is exact attention over all
+        prior KV, and the pool after the final chunk is identical to an
+        atomic prefill's. Returns (new_caches, logits (1, S, V)): the
+        caller samples each finishing segment's last-token logits.
+        """
+        cfg = self.cfg
+        assert self.supports_paged_decode(), cfg.family
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)
+        h, caches = tfm.apply_stack_chunk_prefill(
+            params["blocks"], cfg, x, caches,
+            batch["dest_page"], batch["dest_off"],
+            batch["src_page"], batch["src_off"],
+            batch["q_segment_ids"], batch["kv_segment_ids"],
+            batch["q_positions"], batch["kv_positions"])
+        return caches, self._logits(params, h)
+
     def decode_step(self, params, state, token):
         """token: (B,) i32. Returns (new_state, logits (B, 1, V)).
 

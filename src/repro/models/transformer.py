@@ -321,6 +321,57 @@ def apply_block_decode_paged(params: Params, cfg: ModelConfig, x, cache,
     return x, {"kv": kv}
 
 
+def apply_block_chunk_prefill(params: Params, cfg: ModelConfig, x, cache,
+                              dest_page, dest_off, src_page, src_off,
+                              q_seg, kv_seg, q_pos, kv_pos):
+    """One dense/moe block for a packed batch of prefill CHUNKS against the
+    page pool (scatter new rows, attend each segment's gathered prefix)."""
+    h = apply_norm(params["attn_norm"], x, cfg.norm_type)
+    a, kv = attn_mod.chunk_prefill_attention_step(
+        params["attn"], cfg, h, cache["kv"], dest_page, dest_off,
+        src_page, src_off, q_seg, kv_seg, q_pos, kv_pos)
+    x = x + a
+    if "moe" in params:
+        h = apply_norm(params["mlp_norm"], x, cfg.norm_type)
+        y, _ = moe_mod.apply_moe(params["moe"], cfg, h)
+        x = x + y
+    elif "mlp" in params:
+        h = apply_norm(params["mlp_norm"], x, cfg.norm_type)
+        x = x + apply_mlp(params["mlp"], h, cfg.mlp_type)
+    return x, {"kv": kv}
+
+
+def apply_stack_chunk_prefill(params: Params, cfg: ModelConfig, x, caches,
+                              dest_page, dest_off, src_page, src_off,
+                              q_seg, kv_seg, q_pos, kv_pos):
+    """Packed prefill chunks through all layers, threading per-layer pools.
+    The scatter/gather index maps are layer-invariant (one logical sequence
+    maps to the same pages in every layer's pool)."""
+    block = functools.partial(
+        apply_block_chunk_prefill, cfg=cfg, dest_page=dest_page,
+        dest_off=dest_off, src_page=src_page, src_off=src_off,
+        q_seg=q_seg, kv_seg=kv_seg, q_pos=q_pos, kv_pos=kv_pos)
+    if not cfg.scan_layers:
+        outs = []
+        L = jax.tree.leaves(caches)[0].shape[0]
+        for l in range(L):
+            p_l = jax.tree.map(lambda p: p[l], params) \
+                if not isinstance(params, list) else params[l]
+            c_l = jax.tree.map(lambda c: c[l], caches)
+            x, nc = block(p_l, x=x, cache=c_l)
+            outs.append(nc)
+        new_caches = jax.tree.map(lambda *cs: jnp.stack(cs), *outs)
+        return x, new_caches
+
+    def body(x, inp):
+        p_l, cache_l = inp
+        x, new_cache = block(p_l, x=x, cache=cache_l)
+        return x, new_cache
+
+    x, new_caches = jax.lax.scan(body, x, (params, caches))
+    return x, new_caches
+
+
 def apply_stack_decode_paged(params: Params, cfg: ModelConfig, x, caches,
                              page_table, kv_len):
     """Scan a single token through all layers, threading per-layer pools.

@@ -1,2 +1,5 @@
 from repro.serve.engine import Request, ServingEngine  # noqa: F401
 from repro.serve.kv_cache import PagedKVCache  # noqa: F401
+from repro.serve.sampling import SamplingParams  # noqa: F401
+from repro.serve.scheduler import (ChunkScheduler, ChunkTask,  # noqa: F401
+                                   SchedulerConfig, StepPlan)

@@ -1,47 +1,58 @@
-"""Serving engine: continuous (iteration-level) batching, with a PAGED
-KV cache as the default decode state — the Orca/vLLM scheduling pattern on
-top of the paper's linear-memory attention.
+"""Serving engine: a thin EXECUTOR for the continuous-batching scheduler
+(serve/scheduler.py), over a PAGED KV cache by default.
 
 Why this is the paper's payoff at serving time: the decode step's attention
 reads O(kv_len) cache bytes per token (no N x N materialization), so a
 sequence's memory footprint is exactly its cache length — FlashAttention's
 linear memory is what makes large decode batches fit at all (paper §4.3,
-Fig. 3 right). The paged cache (serve/kv_cache.py, DESIGN.md §6) finishes
-the thought: cache memory is allocated in mask-IR kv blocks ("pages"), so a
-request holds ``ceil(len/page_size)`` pages instead of a fixed capacity
-slot, and admission is bound by the free-page budget instead of slot count.
+Fig. 3 right). The paged cache (serve/kv_cache.py, DESIGN.md §6) allocates
+that memory in mask-IR kv blocks ("pages"), and FlashAttention's tiling
+makes a long-prompt prefill cheap PER CHUNK — a query chunk attends to all
+prior KV in one call via the mask IR's traced positions (per-segment
+q_offset, DESIGN.md §10) — which is what the scheduler exploits to
+interleave chunked prefill with decode.
 
-Mechanics (paged mode, the default for dense/moe text decoders):
-  * the decode batch has B lanes (rows); all KV bytes live in a shared
-    page pool — rows are free, pages are the resource;
-  * admission drains the queue while rows AND pages last; PACKED PREFILL
-    (DESIGN.md §6) runs the drained requests as ONE (1, ΣLᵢ) segment-masked
-    call whose K/V rows are scattered *straight into pool pages* by a
-    single jitted scatter (trace keyed on the bucketed packed length only —
-    the dense path's per-(slot, length) insert-retrace family is gone);
-  * each decode step appends one page per sequence crossing a page
-    boundary; when the pool is exhausted the YOUNGEST sequence is
-    preempted — its pages reclaimed, the request requeued at the queue
-    front (prompt + generated so far), token-identical under greedy
-    decoding when it resumes;
-  * pages are reclaimed the moment a request finishes (EOS / budget) and
-    reused immediately (the free list is FIFO, so churn fragments the
-    pool — which page-table indirection makes costless).
+Division of labour (DESIGN.md §10):
+
+  * **ChunkScheduler** owns every policy decision — admission (FIFO under
+    lane + free-page budgets), per-step chunk emission under a token
+    budget, partial-prompt page growth, preemption at chunk boundaries,
+    capacity finishes, fairness. It is model-free and unit-tested without
+    jax (tests/test_scheduler.py).
+  * **ServingEngine** executes the returned ``StepPlan``: at most one
+    packed zero-offset prefill call (chunks starting at position 0 — pure
+    packed self-attention, the historical path), one packed suffix-chunk
+    call (``Model.prefill_chunk_paged``: scatter the chunks' K/V rows into
+    pages, attend each segment's gathered prefix with traced positions),
+    and one batched decode step per scheduler step. It also owns the
+    device state (pool upload, host kv_len mirror) and the Request
+    bookkeeping (EOS, token budgets, preemption requeue-vs-finish).
+
+Chunked prefill (``chunk_size=...``, paged mode only) is what stops a 32k
+prompt from head-of-line blocking decode: the prompt prefills
+``chunk_size`` tokens per step while every running sequence keeps decoding
+one token per step, and the two interleave inside one step loop under
+``token_budget`` total tokens. ``chunk_size=None`` (default) is atomic
+prefill — the historical behaviour, and exactly the degenerate chunking
+whose one chunk covers the whole prompt; greedy outputs are
+token-identical across ALL chunk sizes (tests/test_chunked_prefill.py).
+
+Sampling (serve/sampling.py): ``submit(..., temperature=, top_p=, seed=)``
+— the sampling key is a pure function of (seed, position), so
+preempt->resume is token-identical under sampling too, not just greedy.
 
 Dense mode (``paged=False``, and automatically for SSM/hybrid/enc-dec/
-frontend families whose recurrent state cannot be paged) keeps the original
-fixed-slot cache and is retained as the exactness baseline — the paged
-engine is token-identical to it (tests/test_paged_kv.py) and
-``benchmarks/bench_serve_throughput.py`` measures the capacity win.
+frontend families whose recurrent state cannot be paged) keeps the
+fixed-slot cache and atomic prefill, driven through the same scheduler
+(no page accounting) — it remains the exactness baseline.
 
 ``prefill_calls`` / ``decode_calls`` count model invocations;
-``preemptions`` / ``peak_active`` / ``kv.utilization()`` expose the paged
-scheduler's behaviour (printed by launch/serve.py per step).
+``preemptions`` / ``peak_active`` / ``kv.utilization()`` expose scheduler
+behaviour (printed by launch/serve.py per step).
 """
 
 from __future__ import annotations
 
-import collections
 import dataclasses
 import itertools
 from typing import Any
@@ -51,11 +62,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import masks
-from repro.core.masks import SEG_PAD_Q
+from repro.core.masks import POS_PAD, SEG_PAD_KV, SEG_PAD_Q
 from repro.kernels import tuning
 from repro.models.attention_layer import attn_spec_from_config
 from repro.models.model_zoo import Model
 from repro.serve import kv_cache as kvc
+from repro.serve import sampling
+from repro.serve.scheduler import ChunkScheduler, ChunkTask, SchedulerConfig
 
 
 @dataclasses.dataclass
@@ -63,29 +76,34 @@ class Request:
     rid: int
     prompt: list[int]
     max_new_tokens: int
+    params: sampling.SamplingParams = dataclasses.field(
+        default_factory=sampling.SamplingParams)
     output: list[int] = dataclasses.field(default_factory=list)
     done: bool = False
 
     @property
     def resume_tokens(self) -> list[int]:
         """Prefill input: the prompt plus anything generated before a
-        preemption. Greedy decoding of this prefix reproduces the original
-        continuation token-identically, so preempt-and-requeue is exact."""
+        preemption. Re-running this prefix reproduces the continuation
+        token-identically — greedy trivially, sampling because the key of
+        the i-th generated token depends only on (seed, i)."""
         return self.prompt + self.output
 
 
 class ServingEngine:
     def __init__(self, model: Model, params, *, num_slots: int,
                  capacity: int, eos_id: int | None = None,
-                 greedy: bool = True, packed_prefill: bool = True,
+                 packed_prefill: bool = True,
                  prefill_bucket: int = 64, paged: bool | None = None,
-                 page_size: int = 16, num_pages: int | None = None):
+                 page_size: int = 16, num_pages: int | None = None,
+                 chunk_size: int | None = None,
+                 token_budget: int | None = None,
+                 chunk_kv_bucket: int | None = None):
         self.model = model
         self.params = params
         self.B = num_slots
         self.capacity = capacity
         self.eos_id = eos_id
-        assert greedy, "only greedy decoding implemented"
         self.packed_prefill = packed_prefill and model.supports_packed_prefill()
         self.prefill_bucket = prefill_bucket
         self.prefill_calls = 0
@@ -109,15 +127,18 @@ class ServingEngine:
                 f"paged decode needs a per-token KV cache; family "
                 f"{model.cfg.family!r} (hybrid={model.cfg.hybrid}) carries "
                 f"recurrent/encoder state that cannot be paged")
+        if chunk_size is not None and not self.paged:
+            raise ValueError(
+                "chunked prefill appends to paged KV state; the dense slot "
+                "cache only supports atomic prefill (chunk_size=None)")
 
+        self.requests: dict[int, Request] = {}
         self.slot_req: list[Request | None] = [None] * num_slots
-        self.queue: collections.deque[Request] = collections.deque()
         self.finished: list[Request] = []
         self.next_token = np.zeros((num_slots,), np.int32)
         self._rid = itertools.count()
-        self._admit_t: list[int] = [0] * num_slots       # admission order
-        self._admit_counter = itertools.count(1)
         self._decode = jax.jit(model.decode_step, donate_argnums=(1,))
+        self._sample = jax.jit(sampling.sample_tokens)
 
         if self.paged:
             if capacity % page_size:
@@ -139,10 +160,25 @@ class ServingEngine:
             self._scatter = jax.jit(kvc.scatter_packed_segments,
                                     donate_argnums=(0,))
             self._prefill_packed = jax.jit(model.prefill_packed)
+            self._prefill_chunk = jax.jit(model.prefill_chunk_paged,
+                                          donate_argnums=(2,))
+            # kv-side gather width bucket for suffix chunks: coarse enough
+            # to bound the jit-trace family over a long prompt's prefill.
+            self.chunk_kv_bucket = chunk_kv_bucket or max(
+                prefill_bucket, 2 * (chunk_size or 0))
+            self.scheduler = ChunkScheduler(
+                SchedulerConfig(num_lanes=num_slots, capacity=capacity,
+                                page_size=page_size, chunk_size=chunk_size,
+                                token_budget=token_budget),
+                kv=self.kv)
         else:
+            if token_budget is not None:
+                raise ValueError("token_budget requires chunked (paged) mode")
             self.state = model.init_decode_state(num_slots, capacity)
             if model.supports_packed_prefill():
                 self._prefill_packed = jax.jit(model.prefill_packed)
+            self.scheduler = ChunkScheduler(
+                SchedulerConfig(num_lanes=num_slots, capacity=capacity))
 
             def _insert(state, slot_state, slot, kv_len_new, slot_sizes=None):
                 def ins(big, small):
@@ -197,7 +233,9 @@ class ServingEngine:
                     page_size=page_size if self.paged else None)
 
     # ----------------------------------------------------------------- admit
-    def submit(self, prompt: list[int], max_new_tokens: int) -> int:
+    def submit(self, prompt: list[int], max_new_tokens: int, *,
+               temperature: float = 0.0, top_p: float = 1.0,
+               seed: int | None = None) -> int:
         rid = next(self._rid)
         if len(prompt) + 1 > self.capacity:
             # both modes: a longer prompt would fail asynchronously during
@@ -218,8 +256,18 @@ class ServingEngine:
                     f"request needs up to {worst} pages but the pool has "
                     f"{self.kv.num_pages}; enlarge num_pages or shorten "
                     f"the request")
-        self.queue.append(Request(rid, list(prompt), max_new_tokens))
+        sp = sampling.SamplingParams(
+            temperature=temperature, top_p=top_p,
+            seed=rid if seed is None else seed)
+        req = Request(rid, list(prompt), max_new_tokens, params=sp)
+        self.requests[rid] = req
+        self.scheduler.submit(rid, len(prompt))
         return rid
+
+    @property
+    def queue(self):
+        """Pending (not yet admitted) requests, in service order."""
+        return [self.requests[rid] for rid, _ in self.scheduler.queue]
 
     def _bucketed(self, length: int) -> int:
         """Pad a prefill length to the bucket multiple (capped at capacity)
@@ -227,42 +275,218 @@ class ServingEngine:
         bucket = max(1, min(self.prefill_bucket, self.capacity))
         return min(length + (-length) % bucket, self.capacity)
 
-    def _packed_batch(self, reqs: list[Request]):
-        """Tokens + segment ids for a packed prefill of ``reqs`` (resume
-        prompts), padded to the prefill bucket."""
-        lengths = [len(r.resume_tokens) for r in reqs]
+    def _packed_batch(self, reqs: list[Request], lengths: list[int]):
+        """Tokens + segment ids for a packed prefill of each request's
+        FIRST ``lengths[i]`` resume tokens, padded to the prefill bucket.
+        (Atomic mode passes the full resume length; a chunked first chunk
+        passes ``chunk_size``.)"""
         offsets = np.concatenate([[0], np.cumsum(lengths)])
         total = int(offsets[-1])
         padded = total + (-total) % self.prefill_bucket
         toks = np.zeros((1, padded), np.int32)
         segs = np.full((1, padded), SEG_PAD_Q, np.int32)
-        for i, r in enumerate(reqs):
-            toks[0, offsets[i]:offsets[i + 1]] = r.resume_tokens
+        for i, (r, n) in enumerate(zip(reqs, lengths)):
+            toks[0, offsets[i]:offsets[i + 1]] = r.resume_tokens[:n]
             segs[0, offsets[i]:offsets[i + 1]] = i
-        return toks, segs, offsets, lengths
+        return toks, segs, offsets
 
-    def _start_or_finish(self, slot: int, req: Request, first: int) -> None:
-        """Common post-prefill bookkeeping for both prefill paths."""
-        req.output.append(first)
-        # the prefill-produced token can already terminate the request
-        if ((self.eos_id is not None and first == self.eos_id)
+    # ----------------------------------------------------------- sampling
+    def _sample_rows(self, logits_rows,
+                     reqs: list[Request | None]) -> np.ndarray:
+        """Sample one token per row with each request's persisted sampling
+        state; counts index the position so preempt->resume replays
+        identically. ONE code path for prefill-emitted and decoded tokens
+        (``None`` rows — idle decode lanes — sample greedy and are
+        discarded by the caller)."""
+        seeds = np.asarray([r.params.seed if r else 0 for r in reqs],
+                           np.uint32)
+        counts = np.asarray([len(r.output) if r else 0 for r in reqs],
+                            np.uint32)
+        temps = np.asarray([r.params.temperature if r else 0.0 for r in reqs],
+                           np.float32)
+        tops = np.asarray([r.params.top_p if r else 1.0 for r in reqs],
+                          np.float32)
+        return np.asarray(self._sample(logits_rows, jnp.asarray(seeds),
+                                       jnp.asarray(counts),
+                                       jnp.asarray(temps),
+                                       jnp.asarray(tops)), np.int32)
+
+    # ------------------------------------------------------------- bookkeeping
+    def _finish(self, lane: int, req: Request) -> None:
+        req.done = True
+        self.finished.append(req)
+        self.scheduler.finish(req.rid)      # frees lane + pages
+        self.slot_req[lane] = None
+        if self.paged:
+            self._kv_len_h[lane] = 0
+            self._paged_dirty = True
+
+    def _post_prefill(self, lane: int, req: Request, tok: int) -> None:
+        """The final chunk's logits produced the first generated token."""
+        req.output.append(tok)
+        if ((self.eos_id is not None and tok == self.eos_id)
                 or len(req.output) >= req.max_new_tokens):
+            self._finish(lane, req)
+            return
+        self.next_token[lane] = tok
+
+    def _clear_lane(self, rid: int, lane: int) -> None:
+        """Clear an evicted sequence's lane — only if the lane still holds
+        it: a request evicted in the same plan it was admitted was never
+        placed, and a prepass-freed lane may have been handed to a new
+        admission already."""
+        if self.slot_req[lane] is self.requests[rid]:
+            self.slot_req[lane] = None
+            if self.paged:
+                self._kv_len_h[lane] = 0
+
+    def _sync_evictions(self, plan) -> None:
+        """Translate scheduler evictions into Request outcomes. The
+        scheduler already released pages and lanes (and recorded each
+        victim's lane in the plan — eviction and admission can touch the
+        same lane within one plan); the engine decides requeue vs finish
+        (it knows the generated prefix)."""
+        for rid, lane in plan.finished_capacity:
+            req = self.requests[rid]
+            self._clear_lane(rid, lane)
             req.done = True
             self.finished.append(req)
-            if self.paged:
-                self.kv.release(req.rid)
-            return
-        self.next_token[slot] = first
-        self.slot_req[slot] = req
-        self._admit_t[slot] = next(self._admit_counter)
+        for rid, lane in plan.preempted:
+            req = self.requests[rid]
+            self._clear_lane(rid, lane)
+            if len(req.resume_tokens) > self.capacity:
+                # already at per-sequence capacity: a resumed prefill could
+                # not decode further — finish instead of requeueing an
+                # over-capacity resume prompt.
+                req.done = True
+                self.finished.append(req)
+                continue
+            self.scheduler.resubmit_front(rid, len(req.resume_tokens))
+            self.preemptions += 1
+        if plan.dirty and self.paged:
+            self._paged_dirty = True
 
-    # -------------------------------------------------- dense-mode admission
-    def _admit_one(self, slot: int, req: Request) -> None:
-        """Sequential path: one batch-1 prefill call + state insert. For
-        packed-capable families the prompt is padded to the prefill bucket
-        (one trace per bucket); families with recurrent state (SSM/hybrid/
-        enc-dec) prefill unpadded — padding would run the recurrence past
-        the real tokens."""
+    # ----------------------------------------- executor: zero-offset prefill
+    def _exec_zero_paged(self, tasks: list[ChunkTask]) -> None:
+        """Chunks starting at logical position 0 attend nothing before
+        themselves, so they run as ONE packed self-attention prefill (the
+        historical path) scattered straight into pool pages."""
+        reqs = [self.requests[t.rid] for t in tasks]
+        lengths = [t.length for t in tasks]
+        toks, segs, offsets = self._packed_batch(reqs, lengths)
+        caches, logits = self._prefill_packed(
+            self.params, {"tokens": jnp.asarray(toks),
+                          "segment_ids": jnp.asarray(segs)})
+        self.prefill_calls += 1
+        self._record_layout_stats(segs)
+        tables = [self.kv.table(t.rid) for t in tasks]
+        total = toks.shape[1]
+        dest_page, dest_off = kvc.packed_destinations(
+            tables, offsets, lengths, self.page_size, total,
+            self.kv.num_pages)
+        self.state["caches"] = self._scatter(
+            self.state["caches"], caches, jnp.asarray(dest_page),
+            jnp.asarray(dest_off))
+        self._paged_dirty = True
+        for i, t in enumerate(tasks):
+            self._kv_len_h[t.lane] = t.length
+        self._emit_first_tokens(tasks, logits, offsets)
+
+    def _emit_first_tokens(self, tasks, logits, offsets) -> None:
+        """Sample the first generated token of every task whose chunk
+        completes its prefill (the chunk's last-row logits)."""
+        lasts = [(i, t) for i, t in enumerate(tasks) if t.last]
+        if not lasts:
+            return
+        rows = jnp.stack([logits[0, int(offsets[i]) + tasks[i].length - 1]
+                          for i, _ in lasts])
+        toks = self._sample_rows(rows, [self.requests[t.rid]
+                                        for _, t in lasts])
+        for (_, t), tok in zip(lasts, toks):
+            self._post_prefill(t.lane, self.requests[t.rid], int(tok))
+
+    # -------------------------------------------- executor: suffix chunks
+    def _kv_bucketed(self, width: int) -> int:
+        """Round the packed kv gather width UP to the bucket multiple —
+        never capped: several segments' prefixes can sum past one
+        sequence's capacity, and an uncapped round-up is what bounds the
+        jit-trace family (POS_PAD rows self-mask, so padding is free)."""
+        b = max(1, self.chunk_kv_bucket)
+        return width + (-width) % b
+
+    def _exec_suffix_paged(self, tasks: list[ChunkTask]) -> None:
+        """Chunks with history run as ONE packed varlen call against the
+        page pool: scatter each chunk's K/V rows into its sequence's pages,
+        gather each sequence's full logical prefix back as the kv side, and
+        attend with traced per-segment positions (q_offset = chunk start).
+        """
+        reqs = [self.requests[t.rid] for t in tasks]
+        lengths = [t.length for t in tasks]
+        starts = [t.start for t in tasks]
+        q_off = np.concatenate([[0], np.cumsum(lengths)])
+        total_q = int(q_off[-1])
+        Sq = total_q + (-total_q) % self.prefill_bucket
+        toks = np.zeros((1, Sq), np.int32)
+        qseg = np.full((1, Sq), SEG_PAD_Q, np.int32)
+        qpos = np.full((1, Sq), POS_PAD, np.int32)
+        for i, (r, st, n) in enumerate(zip(reqs, starts, lengths)):
+            sl = slice(int(q_off[i]), int(q_off[i + 1]))
+            toks[0, sl] = r.resume_tokens[st:st + n]
+            qseg[0, sl] = i
+            qpos[0, sl] = np.arange(st, st + n)
+
+        spans = [st + n for st, n in zip(starts, lengths)]
+        k_off = np.concatenate([[0], np.cumsum(spans)])
+        total_k = int(k_off[-1])
+        Sk = self._kv_bucketed(total_k)
+        kseg = np.full((1, Sk), SEG_PAD_KV, np.int32)
+        kpos = np.full((1, Sk), POS_PAD, np.int32)
+        for i, sp in enumerate(spans):
+            sl = slice(int(k_off[i]), int(k_off[i + 1]))
+            kseg[0, sl] = i
+            kpos[0, sl] = np.arange(sp)
+
+        tables = [self.kv.table(t.rid) for t in tasks]
+        dest_page, dest_off = kvc.chunk_destinations(
+            tables, starts, q_off, lengths, self.page_size, Sq,
+            self.kv.num_pages)
+        src_page, src_off = kvc.gather_sources(
+            tables, k_off, spans, self.page_size, Sk)
+
+        batch = {"tokens": jnp.asarray(toks),
+                 "q_segment_ids": jnp.asarray(qseg),
+                 "q_positions": jnp.asarray(qpos),
+                 "kv_segment_ids": jnp.asarray(kseg),
+                 "kv_positions": jnp.asarray(kpos),
+                 "dest_page": jnp.asarray(dest_page),
+                 "dest_off": jnp.asarray(dest_off),
+                 "src_page": jnp.asarray(src_page),
+                 "src_off": jnp.asarray(src_off)}
+        caches, logits = self._prefill_chunk(self.params, batch,
+                                             self.state["caches"])
+        self.state["caches"] = caches
+        self.prefill_calls += 1
+        self._paged_dirty = True
+        for t in tasks:
+            self._kv_len_h[t.lane] = t.start + t.length
+        self._emit_first_tokens(tasks, logits, q_off)
+
+    # --------------------------------------------- executor: dense prefill
+    def _exec_dense(self, tasks: list[ChunkTask]) -> None:
+        """Dense mode is atomic-only: every task covers its whole prompt."""
+        reqs = [self.requests[t.rid] for t in tasks]
+        if (self.packed_prefill and len(tasks) > 1):
+            self._admit_packed([t.lane for t in tasks], tasks, reqs)
+            return
+        for t, req in zip(tasks, reqs):
+            self._admit_one(t.lane, t, req)
+
+    def _admit_one(self, slot: int, task: ChunkTask, req: Request) -> None:
+        """Sequential dense path: one batch-1 prefill call + state insert.
+        For packed-capable families the prompt is padded to the prefill
+        bucket (one trace per bucket); families with recurrent state (SSM/
+        hybrid/enc-dec) prefill unpadded — padding would run the recurrence
+        past the real tokens."""
         toks = req.resume_tokens
         L = len(toks)
         if self.model.supports_packed_prefill():
@@ -277,69 +501,32 @@ class ServingEngine:
             self.prefill_calls += 1
             self.state = self._insert_segment(self.state, caches, slot,
                                               0, padded, L)
-            self._start_or_finish(slot, req, int(jnp.argmax(logits[0, L - 1])))
+            tok = self._sample_rows(logits[0, L - 1][None], [req])[0]
+            self._post_prefill(slot, req, int(tok))
             return
         slot_state, logits = self.model.prefill(
             self.params, {"tokens": jnp.asarray([toks], jnp.int32)},
             self.capacity)
         self.prefill_calls += 1
         self.state = self._insert(self.state, slot_state, slot, L)
-        self._start_or_finish(slot, req, int(jnp.argmax(logits[0, -1])))
+        tok = self._sample_rows(logits[0, -1][None], [req])[0]
+        self._post_prefill(slot, req, int(tok))
 
-    def _admit_packed(self, slots: list[int], reqs: list[Request]) -> None:
-        """Packed path: ONE (1, ΣLᵢ) prefill for all drained requests."""
-        toks, segs, offsets, lengths = self._packed_batch(reqs)
+    def _admit_packed(self, slots: list[int], tasks: list[ChunkTask],
+                      reqs: list[Request]) -> None:
+        """Packed dense path: ONE (1, ΣLᵢ) prefill for all drained requests."""
+        lengths = [len(r.resume_tokens) for r in reqs]
+        toks, segs, offsets = self._packed_batch(reqs, lengths)
         caches, logits = self._prefill_packed(
             self.params, {"tokens": jnp.asarray(toks),
                           "segment_ids": jnp.asarray(segs)})
         self.prefill_calls += 1
         self._record_layout_stats(segs)
-        lasts = np.asarray(
-            jnp.argmax(logits[0, jnp.asarray(offsets[1:] - 1)], axis=-1),
-            np.int32)
         for i, (slot, req) in enumerate(zip(slots, reqs)):
             self.state = self._insert_segment(
                 self.state, caches, slot, int(offsets[i]), lengths[i],
                 lengths[i])
-            self._start_or_finish(slot, req, int(lasts[i]))
-
-    # -------------------------------------------------- paged-mode admission
-    def _place_paged(self, rows: list[int], reqs: list[Request],
-                     caches, offsets, lengths, lasts) -> None:
-        """Allocate pages, scatter the packed K/V rows into them (ONE jitted
-        scatter per admitted batch), and start or finish each request."""
-        tables = []
-        for req, length in zip(reqs, lengths):
-            ok = self.kv.alloc(req.rid, self.kv.pages_for(length))
-            assert ok, "admission reserved a page budget that vanished"
-            tables.append(self.kv.table(req.rid))
-        total = jax.tree.leaves(caches)[0].shape[3]
-        dest_page, dest_off = kvc.packed_destinations(
-            tables, offsets, lengths, self.page_size, total,
-            self.kv.num_pages)
-        self.state["caches"] = self._scatter(
-            self.state["caches"], caches, jnp.asarray(dest_page),
-            jnp.asarray(dest_off))
-        self._paged_dirty = True
-        for row, req, length, first in zip(rows, reqs, lengths, lasts):
-            self._kv_len_h[row] = length
-            self._start_or_finish(row, req, int(first))
-            if req.done:
-                self._kv_len_h[row] = 0    # pages already released
-
-    def _admit_packed_paged(self, rows: list[int], reqs: list[Request]) -> None:
-        """One bucketed (1, ΣLᵢ) prefill scattered into pages — also the
-        sequential paged path with a single-request batch."""
-        toks, segs, offsets, lengths = self._packed_batch(reqs)
-        caches, logits = self._prefill_packed(
-            self.params, {"tokens": jnp.asarray(toks),
-                          "segment_ids": jnp.asarray(segs)})
-        self.prefill_calls += 1
-        self._record_layout_stats(segs)
-        lasts = np.asarray(
-            jnp.argmax(logits[0, jnp.asarray(offsets[1:] - 1)], axis=-1),
-            np.int32)
-        self._place_paged(rows, reqs, caches, offsets, lengths, lasts)
+        self._emit_first_tokens(tasks, logits, offsets)
 
     def _record_layout_stats(self, segs: np.ndarray) -> None:
         """Compile the packed call's causal+segment layout and count the
@@ -370,158 +557,91 @@ class ServingEngine:
         self.blocks_total += total
         self.last_prefill_layout_density = 1.0 - skipped / total
 
-    def _admit(self) -> None:
-        free = [s for s in range(self.B) if self.slot_req[s] is None]
-        if self.paged:
-            take: list[Request] = []
-            # reserve a page for every ACTIVE row whose next token crosses
-            # a page boundary: admitting into those pages would trigger an
-            # immediate preempt of the request we just paid a prefill for
-            # (admit -> prefill -> preempt thrash).
-            reserved = sum(
-                1 for r in range(self.B)
-                if self.slot_req[r] is not None
-                and (int(self._kv_len_h[r]) // self.page_size
-                     >= len(self.kv.table(self.slot_req[r].rid))))
-            budget = self.kv.free_pages - reserved
-            while len(take) < len(free) and self.queue:
-                # +1 for the first decoded token, capped at capacity: a
-                # resume prompt of exactly `capacity` tokens still admits
-                # (its prefill emits one token, then the prepass finishes
-                # it at the capacity boundary).
-                need = self.kv.pages_for(
-                    min(len(self.queue[0].resume_tokens) + 1, self.capacity))
-                if need > budget:
-                    break  # head-of-line: keep arrival order
-                budget -= need
-                take.append(self.queue.popleft())
-            if not take:
-                return
-            rows = free[:len(take)]
-            if self.packed_prefill and len(take) > 1:
-                self._admit_packed_paged(rows, take)
-            else:
-                for row, req in zip(rows, take):
-                    self._admit_packed_paged([row], [req])
+    # ------------------------------------------------------ executor: decode
+    def _exec_decode(self, decode_lanes: list[int]) -> None:
+        lanes = [l for l in decode_lanes if self.slot_req[l] is not None]
+        if not lanes:
             return
-        n = min(len(free), len(self.queue))
-        if n == 0:
-            return
-        reqs = [self.queue.popleft() for _ in range(n)]
-        if self.packed_prefill and n > 1:
-            self._admit_packed(free[:n], reqs)
-        else:
-            for slot, req in zip(free, reqs):
-                self._admit_one(slot, req)
-
-    # ------------------------------------------------------- paged scheduling
-    def _preempt(self, row: int) -> None:
-        """Reclaim a sequence's pages and requeue it at the queue FRONT with
-        its progress kept (resume_tokens); greedy decoding makes the resumed
-        output token-identical."""
-        req = self.slot_req[row]
-        self.kv.release(req.rid)
-        self.slot_req[row] = None
-        self._kv_len_h[row] = 0
-        self._paged_dirty = True
-        if len(req.resume_tokens) > self.capacity:
-            # already at per-sequence capacity: a resumed prefill could not
-            # decode further (the prepass would capacity-finish it one step
-            # later) and its resume prompt would not even pass submit-time
-            # validation — finish it here instead of requeueing.
-            req.done = True
-            self.finished.append(req)
-            return
-        self.queue.appendleft(req)
-        self.preemptions += 1
-
-    def _youngest_active(self) -> int:
-        rows = [r for r in range(self.B) if self.slot_req[r] is not None]
-        return max(rows, key=lambda r: self._admit_t[r])
-
-    def _paged_prepass(self) -> None:
-        """Before a decode step, make sure every active sequence has a page
-        for its next token; preempt the youngest sequence when the pool is
-        exhausted (oldest-first service guarantees progress)."""
-        rows = sorted((r for r in range(self.B)
-                       if self.slot_req[r] is not None),
-                      key=lambda r: self._admit_t[r])
-        for row in rows:
-            req = self.slot_req[row]
-            if req is None:
-                continue  # preempted as a victim earlier in this pass
-            lp = int(self._kv_len_h[row]) // self.page_size
-            if lp < len(self.kv.table(req.rid)):
-                continue
-            if lp >= self.pages_per_seq:
-                # per-sequence capacity exhausted: the dense engine would
-                # silently overrun its slot here; finish the request instead.
-                req.done = True
-                self.finished.append(req)
-                self.kv.release(req.rid)
-                self.slot_req[row] = None
-                self._kv_len_h[row] = 0
-                self._paged_dirty = True
-                continue
-            while not self.kv.alloc(req.rid, 1):
-                victim = self._youngest_active()
-                self._preempt(victim)
-                if victim == row:
-                    break
-            else:
-                self._paged_dirty = True   # table gained a page
-
-    # ------------------------------------------------------------------ step
-    def step(self) -> None:
-        self._admit()
-        if self.paged:
-            self._paged_prepass()
-        active = [s for s, r in enumerate(self.slot_req) if r is not None]
-        self.last_step_stats = {
-            "active": len(active),
-            "occupancy": len(active) / self.B,
-            "pool_utilization": (self.kv.utilization() if self.paged
-                                 else None),
-            "queued": len(self.queue),
-        }
-        if not active:
-            return  # e.g. every admitted request finished at prefill
-        self.peak_active = max(self.peak_active, len(active))
         if self.paged and self._paged_dirty:
             # upload the host allocator's view only when it changed
-            # (admission, page append, finish, preemption). On event-free
-            # steps — most steps, for page_size >> 1 — the device table is
-            # already current and decode_step's own kv_len+1 matches the
-            # host mirror's increment below.
-            row_rids = [r.rid if r is not None else None
-                        for r in self.slot_req]
+            # (admission, chunk scatter, page append, finish, preemption).
+            # On event-free steps — most steps, for page_size >> 1 — the
+            # device table is already current and decode_step's own
+            # kv_len+1 matches the host mirror's increment below. Lanes
+            # still PREFILLING get -1 rows: the decode scatter drops their
+            # writes and the mask IR classifies their pages SKIP, so a
+            # mid-prefill sequence is untouchable by the decode call — its
+            # pages are reached only through the chunk path's explicit
+            # scatter/gather indices.
+            lane_set = set(lanes)
+            row_rids = [
+                (self.slot_req[l].rid
+                 if l in lane_set and self.slot_req[l] is not None else None)
+                for l in range(self.B)]
             self.state["page_table"] = jnp.asarray(
                 self.kv.table_array(row_rids, self.pages_per_seq))
             self.state["kv_len"] = jnp.asarray(self._kv_len_h, jnp.int32)
             self._paged_dirty = False
         tok = jnp.asarray(self.next_token)
+        reqs_by_lane = [self.slot_req[l] for l in range(self.B)]
         self.state, logits = self._decode(self.params, self.state, tok)
         self.decode_calls += 1
-        nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1), np.int32)
-        for slot, req in enumerate(self.slot_req):
-            if req is None:
-                continue
-            t = int(nxt[slot])
+        nxt = self._sample_rows(logits[:, 0], reqs_by_lane)
+        for lane in lanes:
+            req = self.slot_req[lane]
+            t = int(nxt[lane])
             req.output.append(t)
-            self.next_token[slot] = t
+            self.next_token[lane] = t
+            self.scheduler.token_appended(req.rid)
             if self.paged:
-                self._kv_len_h[slot] += 1
+                self._kv_len_h[lane] += 1
             hit_eos = self.eos_id is not None and t == self.eos_id
             if len(req.output) >= req.max_new_tokens or hit_eos:
-                req.done = True
-                self.finished.append(req)
-                self.slot_req[slot] = None
-                if self.paged:
-                    self.kv.release(req.rid)
-                    self._kv_len_h[slot] = 0
-                    self._paged_dirty = True
+                self._finish(lane, req)
+
+    # ------------------------------------------------------------------ step
+    def step(self) -> None:
+        plan = self.scheduler.plan_step()
+        # evictions FIRST (they clear lanes the admissions below may
+        # reuse — a prepass eviction frees a lane before admission runs),
+        # and a request both admitted and starve-evicted within this plan
+        # is requeued by _sync_evictions and must never be placed.
+        self._sync_evictions(plan)
+        evicted = ({rid for rid, _ in plan.preempted}
+                   | {rid for rid, _ in plan.finished_capacity})
+        for rid, lane in plan.admitted:
+            if rid not in evicted:
+                self.slot_req[lane] = self.requests[rid]
+
+        zero = [t for t in plan.prefill if t.start == 0]
+        suffix = [t for t in plan.prefill if t.start > 0]
+        if self.paged:
+            if zero:
+                if self.packed_prefill and len(zero) > 1:
+                    self._exec_zero_paged(zero)
+                else:
+                    for t in zero:
+                        self._exec_zero_paged([t])
+            if suffix:
+                self._exec_suffix_paged(suffix)
+        elif zero:
+            self._exec_dense(zero)
+
+        active = sum(r is not None for r in self.slot_req)
+        self.peak_active = max(self.peak_active, active)
+        self.last_step_stats = {
+            "active": active,
+            "occupancy": active / self.B,
+            "pool_utilization": (self.kv.utilization() if self.paged
+                                 else None),
+            "prefill_tokens": sum(t.length for t in plan.prefill),
+            "decode_tokens": len(plan.decode_lanes),
+            "deferred_chunks": plan.deferred_chunks,
+            "queued": len(self.scheduler.queue),
+        }
+        self._exec_decode(plan.decode_lanes)
         # post-decode queue depth (finish/reclaim just happened)
-        self.last_step_stats["queued"] = len(self.queue)
+        self.last_step_stats["queued"] = len(self.scheduler.queue)
 
     def run(self, max_steps: int = 10_000, on_step=None) -> list[Request]:
         """Drive the engine to drain. ``on_step(engine)`` is called after
@@ -529,7 +649,7 @@ class ServingEngine:
         (``last_step_stats``, pool utilization), instead of each caller
         hand-rolling the drain loop."""
         for _ in range(max_steps):
-            if not self.queue and all(r is None for r in self.slot_req):
+            if self.scheduler.idle():
                 break
             self.step()
             if on_step is not None:
@@ -548,8 +668,12 @@ class ServingEngine:
             s = e.last_step_stats
             util = (f" pool {s['pool_utilization']:.0%}"
                     if s["pool_utilization"] is not None else "")
+            work = ""
+            if s.get("prefill_tokens"):
+                work = (f" prefill {s['prefill_tokens']}t"
+                        f"+decode {s['decode_tokens']}t")
             print(f"  step {next(counter):>3}: batch {s['active']}/{e.B} "
-                  f"({s['occupancy']:.0%}){util} queued {s['queued']}")
+                  f"({s['occupancy']:.0%}){util}{work} queued {s['queued']}")
 
         return show
 

@@ -36,7 +36,8 @@ import jax
 import numpy as np
 
 __all__ = ["PagedKVCache", "scatter_packed_segments",
-           "packed_destinations", "pages_for"]
+           "packed_destinations", "chunk_destinations", "gather_sources",
+           "pages_for"]
 
 
 def pages_for(n_tokens: int, page_size: int) -> int:
@@ -124,23 +125,53 @@ class PagedKVCache:
 # Packed prefill -> pages: ONE traced scatter
 # ---------------------------------------------------------------------------
 
+def chunk_destinations(tables: list[list[int]], starts: list[int],
+                       offsets, lengths: list[int], page_size: int,
+                       total: int, num_pages: int
+                       ) -> tuple[np.ndarray, np.ndarray]:
+    """Map every packed CHUNK row to its (physical page, in-page offset)
+    destination: chunk i occupies its sequence's LOGICAL positions
+    ``[starts[i], starts[i] + lengths[i])`` (partial-prompt page growth —
+    the sequence's table already covers those positions). Rows outside any
+    chunk (bucket padding) map to page ``num_pages`` — out of bounds,
+    dropped by the scatter. Host numpy, data to one jitted scatter whose
+    trace depends only on the bucketed packed length."""
+    dest_page = np.full((total,), num_pages, np.int32)
+    dest_off = np.zeros((total,), np.int32)
+    for table, st, o, n in zip(tables, starts, offsets, lengths):
+        pos = np.arange(st, st + n)
+        dest_page[o:o + n] = np.asarray(table, np.int32)[pos // page_size]
+        dest_off[o:o + n] = pos % page_size
+    return dest_page, dest_off
+
+
 def packed_destinations(tables: list[list[int]], offsets: np.ndarray,
                         lengths: list[int], page_size: int, total: int,
                         num_pages: int) -> tuple[np.ndarray, np.ndarray]:
     """Map every packed-token position to its (physical page, in-page
-    offset) destination. Positions outside any segment (bucket padding)
-    map to page ``num_pages`` — out of bounds, dropped by the scatter.
-    Host numpy: the result is data to a single jitted scatter whose trace
-    depends only on the (bucketed) packed length, not on the packing
-    layout — this is what kills the dense engine's per-(slot, length)
+    offset) destination — the whole-prompt special case of
+    ``chunk_destinations`` (every chunk starts at logical position 0).
+    This is what kills the dense engine's per-(slot, length)
     ``_insert_segment`` retrace family."""
-    dest_page = np.full((total,), num_pages, np.int32)
-    dest_off = np.zeros((total,), np.int32)
-    for table, o, n in zip(tables, offsets, lengths):
+    return chunk_destinations(tables, [0] * len(tables), offsets, lengths,
+                              page_size, total, num_pages)
+
+
+def gather_sources(tables: list[list[int]], kv_offsets, spans: list[int],
+                   page_size: int, total: int
+                   ) -> tuple[np.ndarray, np.ndarray]:
+    """Map every packed KV-GATHER row to its (physical page, in-page
+    offset) source: segment i's rows cover its sequence's logical prefix
+    ``[0, spans[i])`` — the chunked-prefill kv side (history + the chunk
+    just scattered). Padding rows read (0, 0); they are masked by the
+    POS_PAD kv position sentinel (causally unreachable), never attended."""
+    src_page = np.zeros((total,), np.int32)
+    src_off = np.zeros((total,), np.int32)
+    for table, o, n in zip(tables, kv_offsets, spans):
         pos = np.arange(n)
-        dest_page[o:o + n] = np.asarray(table, np.int32)[pos // page_size]
-        dest_off[o:o + n] = pos % page_size
-    return dest_page, dest_off
+        src_page[o:o + n] = np.asarray(table, np.int32)[pos // page_size]
+        src_off[o:o + n] = pos % page_size
+    return src_page, src_off
 
 
 def scatter_packed_segments(pool_caches, packed_caches, dest_page, dest_off):
