@@ -177,6 +177,56 @@ def decode_attention(
     return o.reshape(b, hq, sq, d).astype(q.dtype)
 
 
+def paged_prefill_attention(
+    q: jax.Array,            # (b, hq, sq, d) — the suffix chunk's queries
+    k_pool: jax.Array,       # (hkv, num_pages, page_size, d) — shared pool
+    v_pool: jax.Array,
+    page_list: jax.Array,    # (b, T) int32; negative = dead (never read)
+    spec: AttentionSpec,
+    *,
+    q_segment_ids: jax.Array,    # (b, sq)
+    kv_segment_ids: jax.Array,   # (b, T*page_size), SEG_PAD_KV on dead rows
+    q_positions: jax.Array,      # (b, sq) logical positions
+    kv_positions: jax.Array,     # (b, T*page_size), POS_PAD on dead rows
+    scale: float | None = None,
+) -> jax.Array:
+    """Chunked-prefill attention over the PAGED prefix, in place.
+
+    The Pallas path (``impl`` in {pallas, block_sparse}) hands the page
+    list to ``flash_prefill_paged``: the kv BlockSpec index_map resolves
+    physical pages from the scalar-prefetched table, so the kernel attends
+    the pool directly — one page DMA per kv block, SKIP pages never read,
+    and zero per-layer ``gather_sources`` copies on the serving hot path.
+
+    Every other impl is the XLA parity oracle: gather the pages into the
+    logical (b, hkv, T*page_size, d) view (clamped to page 0 on dead
+    entries) and reuse ``attention`` verbatim. Dead rows carry the
+    SEG_PAD_KV / POS_PAD sentinels in ``kv_segment_ids``/``kv_positions``,
+    so the shared fused mask kills them on both paths — validity is one
+    definition, not two.
+    """
+    if spec.impl in ("pallas", "block_sparse"):
+        return kops.flash_prefill_paged(
+            q, k_pool, v_pool, page_list,
+            q_positions=q_positions, kv_positions=kv_positions,
+            q_segment_ids=q_segment_ids, kv_segment_ids=kv_segment_ids,
+            causal=spec.causal, window=spec.window, scale=scale,
+            block_q=spec.block_q, variant=spec.variant)
+    hkv, num_pages, page_size, d = k_pool.shape
+    b, T = page_list.shape
+    safe = jnp.clip(page_list, 0, num_pages - 1)
+
+    def gather(pool):
+        pages = pool[:, safe]                    # (hkv, b, T, page_size, d)
+        return pages.transpose(1, 0, 2, 3, 4).reshape(
+            b, hkv, T * page_size, d)
+
+    return attention(
+        q, gather(k_pool), gather(v_pool), spec,
+        q_segment_ids=q_segment_ids, kv_segment_ids=kv_segment_ids,
+        q_positions=q_positions, kv_positions=kv_positions, scale=scale)
+
+
 def paged_decode_attention(
     q: jax.Array,            # (b, hq, 1, d)
     k_pool: jax.Array,       # (hkv, num_pages, page_size, d) — shared pool

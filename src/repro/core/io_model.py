@@ -148,6 +148,56 @@ def flash_hbm_bytes_tiled(n_q: int, n_k: int, d: int, heads: int, batch: int,
     return float(total * bh * elt)
 
 
+def prefill_order_hbm_bytes(n_q: int, n_k: int, d: int, heads_q: int,
+                            heads_kv: int, batch: int, block_q: int,
+                            block_k: int, elt: int = 2,
+                            density: float = 1.0) -> dict[str, float]:
+    """Head-aware forward HBM bytes for BOTH loop orders of one attention
+    call — the cost surface the loop-order chooser compares.
+
+    * ``q_major``: the default grid ``(b, hq, nq, nk)``. Per q head: q read
+      and o/m/l written once, K/V re-streamed once per q block. With GQA the
+      same kv head is additionally re-streamed by each of its ``hq/hkv``
+      query heads: 2·N_k·d·T_r·h_q total kv bytes.
+    * ``kv_major``: the resident-q transposed order, grid ``(b, hkv, 1, nk)``
+      — the whole (grouped) query block stays in VMEM across the kv sweep,
+      so K/V are read exactly ONCE per kv head while q/o traffic is
+      unchanged. Strictly cheaper whenever ``hq·T_r > hkv``; the catch is
+      the working set (see ``kv_major_working_set_bytes``), which is why it
+      only wins at short-N_q/long-N_k (suffix-chunk) shapes.
+    """
+    t_r = int(np.ceil(n_q / block_q))
+    q_side = 3 * n_q * d * heads_q                 # q read + o written, m/l ~0
+    q_major = q_side + 2 * n_k * d * t_r * density * heads_q
+    kv_major = q_side + 2 * n_k * d * density * heads_kv
+    return {"q_major": float(q_major * batch * elt),
+            "kv_major": float(kv_major * batch * elt)}
+
+
+def gather_hbm_bytes(span: int, d: int, heads_kv: int, elt: int = 2,
+                     layers: int = 1) -> float:
+    """HBM cost of materializing a paged prefix contiguously before
+    attending (the pre-PR-6 chunked-prefill path): per layer, read K and V
+    from the pool and write them back packed — 4·span·d·h_kv elements.
+    The in-place paged kernel charges zero of this; adding it to the
+    q_major total is what makes ``prefill_order_hbm_bytes`` prove the
+    in-place win on the serving shapes."""
+    return float(4 * span * d * heads_kv * elt * layers)
+
+
+def kv_major_working_set_bytes(n_q_group: int, block_k: int, d: int,
+                               in_elt: int = 4, acc_elt: int = 4,
+                               lanes: int = LANES) -> int:
+    """VMEM residency of one kv-major forward grid step: the ENTIRE grouped
+    query block (``n_q_group = (hq/hkv) · N_q`` rows) plus its f32
+    accumulator and m/l scratch stay resident across the kv sweep, with one
+    (B_k x d) k/v tile streaming through. This is the feasibility gate the
+    chooser applies before selecting kv-major."""
+    return attention_working_set_bytes(n_q_group, block_k, d, in_elt=in_elt,
+                                       acc_elt=acc_elt, backward=False,
+                                       lanes=lanes)
+
+
 def attention_working_set_bytes(block_q: int, block_k: int, d: int,
                                 in_elt: int = 4, acc_elt: int = 4,
                                 backward: bool = True,

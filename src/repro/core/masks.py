@@ -418,6 +418,21 @@ def paged_block_layout(kv_len: jnp.ndarray, page_table: jnp.ndarray,
     return jnp.where(page_table < 0, BLOCK_SKIP, lay)
 
 
+def paged_prefill_block_layout(layout: jnp.ndarray,
+                               page_list: jnp.ndarray) -> jnp.ndarray:
+    """Force dead page slots SKIP across every q row of a compiled
+    multi-row prefill layout.
+
+    ``layout`` is the (b, nq, T) result of ``compile_block_layout`` on the
+    page-aligned packed kv view (block_k == page_size); ``page_list`` is
+    the (b, T) physical-page indirection with negative entries marking
+    slots no segment occupies. Position/segment sentinels already classify
+    those columns SKIP in practice, but the page list is the allocation
+    truth: forcing them here makes "the kernel never DMAs an unbacked
+    page" a property of the layout rather than of sentinel discipline."""
+    return jnp.where((page_list < 0)[:, None, :], BLOCK_SKIP, layout)
+
+
 def position_block_layout(q_positions: jnp.ndarray,
                           kv_positions: jnp.ndarray,
                           block_q: int, block_k: int, *,

@@ -152,7 +152,7 @@ def _layout_branches(blk, step, *, causal, window, kv_valid_len,
 def _fwd_kernel(seed_ref, q_ref, k_ref, v_ref, layout_ref, kvm_ref, qseg_ref,
                 kseg_ref, qpos_ref, kpos_ref, o_ref, m_ref, l_ref,
                 acc_sc, m_sc, l_sc, *,
-                scale, causal, window, q_offset, kv_valid_len, dropout_p,
+                causal, window, q_offset, kv_valid_len, dropout_p,
                 num_heads, q_len, k_len, variant):
     b, h = pl.program_id(0), pl.program_id(1)
     qi, ki = pl.program_id(2), pl.program_id(3)
@@ -170,8 +170,10 @@ def _fwd_kernel(seed_ref, q_ref, k_ref, v_ref, layout_ref, kvm_ref, qseg_ref,
         q = q_ref[0, 0].astype(jnp.float32)
         k = k_ref[0, 0].astype(jnp.float32)
         v = v_ref[0, 0].astype(jnp.float32)
+        # scale is folded into q ONCE before the grid (FA-2 non-matmul
+        # hoist) — no per-tile multiply on the S tile here.
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                                preferred_element_type=jnp.float32) * scale
+                                preferred_element_type=jnp.float32)
 
         q0 = qi * bq + q_offset
         k0 = ki * bk
@@ -267,9 +269,10 @@ def flash_attention_forward(
         raise ValueError("kv_valid_len cannot combine with q/kv_positions")
     dq_len, dk_len = dropout_dims if dropout_dims is not None else (sq, sk)
     seed_arr = jnp.asarray(dropout_seed, jnp.uint32).reshape(1)
+    q = q * scale  # FA-2 hoist: one multiply at the XLA level, not per tile
 
     kernel = functools.partial(
-        _fwd_kernel, scale=scale, causal=causal, window=window,
+        _fwd_kernel, causal=causal, window=window,
         q_offset=q_offset, kv_valid_len=kv_valid_len, dropout_p=dropout_p,
         num_heads=hq, q_len=dq_len, k_len=dk_len, variant=variant)
 
@@ -361,11 +364,13 @@ def _split_opts(rest, has_kvm, has_seg, has_pos=False):
 # backward: dq kernel (grid over q blocks, kv innermost)
 # ---------------------------------------------------------------------------
 
-def _recompute_p(q, k, m_row, l_row, scale, ok):
-    """Recompute P tile = diag(l)^-1 exp(S - m) (Alg. 4 line 13). ``ok`` is
-    the tile's fused element mask (None on FULL blocks — no masking)."""
+def _recompute_p(q, k, m_row, l_row, ok):
+    """Recompute P tile = diag(l)^-1 exp(S - m) (Alg. 4 line 13) from the
+    PRE-SCALED q (scale is folded into q by the wrappers, matching the
+    forward — no per-tile multiply). ``ok`` is the tile's fused element
+    mask (None on FULL blocks — no masking)."""
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                            preferred_element_type=jnp.float32) * scale
+                            preferred_element_type=jnp.float32)
     if ok is not None:
         s = jnp.where(ok, s, NEG_INF)
     m_safe = jnp.where(l_row == 0.0, 0.0, m_row)
@@ -402,7 +407,7 @@ def _dq_kernel(seed_ref, q_ref, k_ref, v_ref, do_ref, m_ref, l_ref, dd_ref,
                             kvm_ref=kvm_ref, qseg_ref=qseg_ref,
                             kseg_ref=kseg_ref, qpos_ref=qpos_ref,
                             kpos_ref=kpos_ref, geometry=(mode == "geo_data"))
-        p = _recompute_p(q, k, m_row, l_row, scale, ok)
+        p = _recompute_p(q, k, m_row, l_row, ok)
         dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
                                  preferred_element_type=jnp.float32)
         if dropout_p > 0.0:
@@ -410,7 +415,7 @@ def _dq_kernel(seed_ref, q_ref, k_ref, v_ref, do_ref, m_ref, l_ref, dd_ref,
                                  num_heads, q_len, k_len, dropout_p)
             dp = jnp.where(keep, dp / (1.0 - dropout_p), 0.0)
         ds = p * (dp - dd[:, None])
-        dq_sc[...] += scale * jax.lax.dot_general(
+        dq_sc[...] += jax.lax.dot_general(
             ds, k, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
 
     _layout_branches(_layout_block(layout_ref), _step, causal=causal,
@@ -419,7 +424,9 @@ def _dq_kernel(seed_ref, q_ref, k_ref, v_ref, do_ref, m_ref, l_ref, dd_ref,
 
     @pl.when(ki == nk - 1)
     def _finalize():
-        dq_ref[0, 0] = dq_sc[...].astype(dq_ref.dtype)
+        # chain rule for the folded scale: the kernel consumed q' = scale·q,
+        # so dq = scale · dq' — ONE multiply at finalize, not per kv step.
+        dq_ref[0, 0] = (scale * dq_sc[...]).astype(dq_ref.dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -429,7 +436,7 @@ def _dq_kernel(seed_ref, q_ref, k_ref, v_ref, do_ref, m_ref, l_ref, dd_ref,
 def _dkv_kernel(seed_ref, q_ref, k_ref, v_ref, do_ref, m_ref, l_ref, dd_ref,
                 layout_ref, kvm_ref, qseg_ref, kseg_ref, qpos_ref, kpos_ref,
                 dk_ref, dv_ref, dk_sc, dv_sc, *,
-                scale, causal, window, q_offset, kv_valid_len, dropout_p,
+                causal, window, q_offset, kv_valid_len, dropout_p,
                 num_heads, q_len, k_len):
     b, h = pl.program_id(0), pl.program_id(1)
     ki, qi = pl.program_id(2), pl.program_id(3)
@@ -455,7 +462,7 @@ def _dkv_kernel(seed_ref, q_ref, k_ref, v_ref, do_ref, m_ref, l_ref, dd_ref,
                             kvm_ref=kvm_ref, qseg_ref=qseg_ref,
                             kseg_ref=kseg_ref, qpos_ref=qpos_ref,
                             kpos_ref=kpos_ref, geometry=(mode == "geo_data"))
-        p = _recompute_p(q, k, m_row, l_row, scale, ok)
+        p = _recompute_p(q, k, m_row, l_row, ok)
         if dropout_p > 0.0:
             keep = _dropout_keep(seed_ref[0], b, h, qi * bq, ki * bk, bq, bk,
                                  num_heads, q_len, k_len, dropout_p)
@@ -472,8 +479,10 @@ def _dkv_kernel(seed_ref, q_ref, k_ref, v_ref, do_ref, m_ref, l_ref, dd_ref,
                                  preferred_element_type=jnp.float32)
         if z is not None:
             dp = dp * z
+        # q arrives PRE-SCALED (q' = scale·q), so dS^T q' == scale·dS^T q —
+        # the Alg. 4 line-18 scale is already inside the operand.
         ds = p * (dp - dd[:, None])
-        dk_sc[...] += scale * jax.lax.dot_general(
+        dk_sc[...] += jax.lax.dot_general(
             ds, q, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
 
     _layout_branches(_layout_block(layout_ref), _step, causal=causal,
@@ -514,7 +523,12 @@ def flash_attention_backward(
     # the XLA level (fuses with surrounding ops).
     dd = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32), axis=-1)
 
-    common = dict(scale=scale, causal=causal, window=window, q_offset=q_offset,
+    # Same folded scale as the forward: both kernels recompute P from the
+    # pre-scaled q; the dq kernel applies the chain-rule scale at finalize
+    # and the dkv kernel needs none (dK = dS^T q' is already scaled).
+    q = q * scale
+
+    common = dict(causal=causal, window=window, q_offset=q_offset,
                   kv_valid_len=kv_valid_len, dropout_p=dropout_p,
                   num_heads=hq, q_len=dq_len, k_len=dk_len)
 
@@ -544,7 +558,7 @@ def flash_attention_backward(
             args.append(kv_positions)
 
     # ---- dq kernel ----
-    dq_kernel = functools.partial(_dq_kernel, **common)
+    dq_kernel = functools.partial(_dq_kernel, scale=scale, **common)
     in_specs = [
         pl.BlockSpec((1,), lambda b, h, qi, ki: (0,)),
         pl.BlockSpec((1, 1, block_q, d), lambda b, h, qi, ki: (b, h, qi, 0)),
@@ -621,3 +635,300 @@ def flash_attention_backward(
         dk = dk_p
         dv = dv_p
     return dq, dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+# ---------------------------------------------------------------------------
+# kv-major loop order: the resident-q transposed grid (FA-2 repartitioning)
+# ---------------------------------------------------------------------------
+
+def kv_major_column_layout(block_layout):
+    """Reduce a ``(.., nq, nk)`` block layout over the q-block axis to the
+    per-kv-COLUMN classes the resident-q kv-major grid consumes.
+
+    The kv-major forward keeps the entire (grouped) query block in VMEM and
+    walks kv blocks in the innermost grid axis, so each grid step sees one
+    kv column spanning every q row at once. A column is SKIP only if every
+    q block skipped it (no row attends → never DMA'd), FULL only if every
+    q block was FULL (no element term can fire anywhere in the column), and
+    PARTIAL otherwise — the fused element mask re-establishes exactness on
+    the mixed columns. PARTIAL_DATA folds into PARTIAL: the kv-major path
+    is only dispatched without a sparse override, so its geometry terms are
+    provably true wherever the compiler had relaxed them.
+    """
+    skip = block_layout == M.BLOCK_SKIP
+    full = block_layout == M.BLOCK_FULL
+    col = jnp.where(jnp.all(skip, axis=-2), M.BLOCK_SKIP,
+                    jnp.where(jnp.all(full, axis=-2), M.BLOCK_FULL,
+                              M.BLOCK_PARTIAL)).astype(jnp.int32)
+    return col[None, :] if block_layout.ndim == 2 else col[:, None, :]
+
+
+# ---------------------------------------------------------------------------
+# paged prefill: attend the paged KV prefix IN PLACE (no gather)
+# ---------------------------------------------------------------------------
+#
+# The kv BlockSpec index_map resolves the physical page from a
+# scalar-prefetched page list — `tab[b, ki]` — so each grid step DMAs
+# exactly ONE pool page, and SKIP columns (unallocated slots, pages wholly
+# behind the causal frontier of every query row) are never read at all.
+# Masking is position-based (DESIGN.md §10): the serving layer provides
+# per-row logical positions/segment ids for the page-aligned packed kv
+# view, with POS_PAD/SEG_PAD sentinels on dead rows, so causal masking
+# against the paged prefix is exact without any q_offset arithmetic.
+
+def flash_prefill_paged_forward(
+    q: jax.Array,             # (b, hq, sq, d) — sq % block_q == 0
+    k_pool: jax.Array,        # (hkv, num_pages, page_size, d) shared pool
+    v_pool: jax.Array,
+    page_list: jax.Array,     # (b, T) int32 physical pages; negative = dead
+    block_layout: jax.Array,  # (b, nq, T) compiled classes (paged-aware)
+    *,
+    scale: float, causal: bool, window: int | None,
+    q_segment_ids: jax.Array | None = None,
+    kv_segment_ids: jax.Array | None = None,
+    q_positions: jax.Array | None = None,
+    kv_positions: jax.Array | None = None,
+    block_q: int, variant: str = "fa2",
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (o, m, l) — the same residuals as the contiguous forward,
+    computed directly against pool pages. Reuses ``_fwd_kernel`` verbatim:
+    only the kv BlockSpecs change (page indirection instead of a
+    contiguous slice), which is the whole point — the loop body, the
+    online-softmax state, and the layout-branch dispatch are untouched."""
+    b, hq, sq, d = q.shape
+    hkv, num_pages, ps, _ = k_pool.shape
+    n_rep = hq // hkv
+    T = page_list.shape[1]
+    nq = sq // block_q
+    q = q * scale  # folded scale, as in the contiguous forward
+    seed_arr = jnp.zeros((1,), jnp.uint32)  # serving path: dropout_p == 0
+    table = jnp.maximum(page_list, 0).astype(jnp.int32)
+
+    kernel = functools.partial(
+        _fwd_kernel, causal=causal, window=window, q_offset=0,
+        kv_valid_len=None, dropout_p=0.0, num_heads=hq, q_len=sq,
+        k_len=T * ps, variant=variant)
+
+    has_seg = q_segment_ids is not None
+    has_pos = q_positions is not None
+
+    in_specs = [
+        pl.BlockSpec((1,), lambda b, h, qi, ki, tab: (0,)),
+        pl.BlockSpec((1, 1, block_q, d),
+                     lambda b, h, qi, ki, tab: (b, h, qi, 0)),
+        pl.BlockSpec((1, 1, ps, d),
+                     lambda b, h, qi, ki, tab: (h // n_rep, tab[b, ki], 0, 0)),
+        pl.BlockSpec((1, 1, ps, d),
+                     lambda b, h, qi, ki, tab: (h // n_rep, tab[b, ki], 0, 0)),
+        pl.BlockSpec((1, 1, 1), lambda b, h, qi, ki, tab: (b, qi, ki)),
+    ]
+    args = [seed_arr, q, k_pool, v_pool, block_layout]
+    if has_seg:
+        in_specs.append(
+            pl.BlockSpec((1, block_q), lambda b, h, qi, ki, tab: (b, qi)))
+        args.append(q_segment_ids)
+        in_specs.append(
+            pl.BlockSpec((1, ps), lambda b, h, qi, ki, tab: (b, ki)))
+        args.append(kv_segment_ids)
+    if has_pos:
+        in_specs.append(
+            pl.BlockSpec((1, block_q), lambda b, h, qi, ki, tab: (b, qi)))
+        args.append(q_positions)
+        in_specs.append(
+            pl.BlockSpec((1, ps), lambda b, h, qi, ki, tab: (b, ki)))
+        args.append(kv_positions)
+
+    def wrapped(tab_ref, seed_ref, q_ref, k_ref, v_ref, layout_ref, *rest):
+        del tab_ref  # consumed by the index_maps only
+        kvm_ref, qseg_ref, kseg_ref, qpos_ref, kpos_ref, rest = _split_opts(
+            rest, False, has_seg, has_pos)
+        return kernel(seed_ref, q_ref, k_ref, v_ref, layout_ref, kvm_ref,
+                      qseg_ref, kseg_ref, qpos_ref, kpos_ref, *rest)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, hq, nq, T),
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((1, 1, block_q, d),
+                         lambda b, h, qi, ki, tab: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, block_q), lambda b, h, qi, ki, tab: (b, h, qi)),
+            pl.BlockSpec((1, 1, block_q), lambda b, h, qi, ki, tab: (b, h, qi)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_q, d), jnp.float32),
+            pltpu.VMEM((block_q, LANES), jnp.float32),
+            pltpu.VMEM((block_q, LANES), jnp.float32),
+        ],
+    )
+    o, m, l = pl.pallas_call(
+        wrapped,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hq, sq, d), q.dtype),
+            jax.ShapeDtypeStruct((b, hq, sq), jnp.float32),
+            jax.ShapeDtypeStruct((b, hq, sq), jnp.float32),
+        ],
+        interpret=interpret,
+    )(table, *args)
+    return o, m, l
+
+
+def flash_prefill_paged_backward(
+    q, k_pool, v_pool, page_list, o, do, m, l, block_layout,
+    *,
+    scale: float, causal: bool, window: int | None,
+    q_segment_ids=None, kv_segment_ids=None,
+    q_positions=None, kv_positions=None,
+    block_q: int, interpret: bool = True,
+):
+    """dq/dkv pair for the paged prefill (trainable use). The dq kernel
+    reads pool pages through the same scalar-prefetched indirection as the
+    forward; the dkv kernel cannot scatter through BlockSpecs without
+    atomics, so it emits gradients in the PACKED page-aligned layout
+    (grid (b, hq, T, nq), out block = one page worth of rows), which one
+    XLA scatter-add folds back into pool coordinates — dead slots
+    (negative pages) are dropped."""
+    b, hq, sq, d = q.shape
+    hkv, num_pages, ps, _ = k_pool.shape
+    n_rep = hq // hkv
+    T = page_list.shape[1]
+    nq = sq // block_q
+    has_seg = q_segment_ids is not None
+    has_pos = q_positions is not None
+    seed_arr = jnp.zeros((1,), jnp.uint32)
+    table = jnp.maximum(page_list, 0).astype(jnp.int32)
+
+    dd = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32), axis=-1)
+    q = q * scale  # folded scale (see flash_attention_backward)
+
+    common = dict(causal=causal, window=window, q_offset=0, kv_valid_len=None,
+                  dropout_p=0.0, num_heads=hq, q_len=sq, k_len=T * ps)
+
+    def _route_paged(kernel):
+        def wrapped(tab_ref, *refs):
+            del tab_ref
+            fixed = refs[:9]
+            kvm_ref, qseg_ref, kseg_ref, qpos_ref, kpos_ref, rest = \
+                _split_opts(refs[9:], False, has_seg, has_pos)
+            return kernel(*fixed, kvm_ref, qseg_ref, kseg_ref, qpos_ref,
+                          kpos_ref, *rest)
+        return wrapped
+
+    # ---- dq: q-major grid, kv pages indirected ----
+    in_specs = [
+        pl.BlockSpec((1,), lambda b, h, qi, ki, tab: (0,)),
+        pl.BlockSpec((1, 1, block_q, d),
+                     lambda b, h, qi, ki, tab: (b, h, qi, 0)),
+        pl.BlockSpec((1, 1, ps, d),
+                     lambda b, h, qi, ki, tab: (h // n_rep, tab[b, ki], 0, 0)),
+        pl.BlockSpec((1, 1, ps, d),
+                     lambda b, h, qi, ki, tab: (h // n_rep, tab[b, ki], 0, 0)),
+        pl.BlockSpec((1, 1, block_q, d),
+                     lambda b, h, qi, ki, tab: (b, h, qi, 0)),
+        pl.BlockSpec((1, 1, block_q), lambda b, h, qi, ki, tab: (b, h, qi)),
+        pl.BlockSpec((1, 1, block_q), lambda b, h, qi, ki, tab: (b, h, qi)),
+        pl.BlockSpec((1, 1, block_q), lambda b, h, qi, ki, tab: (b, h, qi)),
+        pl.BlockSpec((1, 1, 1), lambda b, h, qi, ki, tab: (b, qi, ki)),
+    ]
+    args = [seed_arr, q, k_pool, v_pool, do, m, l, dd, block_layout]
+    if has_seg:
+        in_specs.append(
+            pl.BlockSpec((1, block_q), lambda b, h, qi, ki, tab: (b, qi)))
+        args.append(q_segment_ids)
+        in_specs.append(
+            pl.BlockSpec((1, ps), lambda b, h, qi, ki, tab: (b, ki)))
+        args.append(kv_segment_ids)
+    if has_pos:
+        in_specs.append(
+            pl.BlockSpec((1, block_q), lambda b, h, qi, ki, tab: (b, qi)))
+        args.append(q_positions)
+        in_specs.append(
+            pl.BlockSpec((1, ps), lambda b, h, qi, ki, tab: (b, ki)))
+        args.append(kv_positions)
+
+    dq = pl.pallas_call(
+        _route_paged(functools.partial(_dq_kernel, scale=scale, **common)),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(b, hq, nq, T),
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec((1, 1, block_q, d),
+                                   lambda b, h, qi, ki, tab: (b, h, qi, 0)),
+            scratch_shapes=[pltpu.VMEM((block_q, d), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, hq, sq, d), q.dtype),
+        interpret=interpret,
+    )(table, *args)
+
+    # ---- dkv: kv-major grid over page slots, packed outputs ----
+    in_specs = [
+        pl.BlockSpec((1,), lambda b, h, ki, qi, tab: (0,)),
+        pl.BlockSpec((1, 1, block_q, d),
+                     lambda b, h, ki, qi, tab: (b, h, qi, 0)),
+        pl.BlockSpec((1, 1, ps, d),
+                     lambda b, h, ki, qi, tab: (h // n_rep, tab[b, ki], 0, 0)),
+        pl.BlockSpec((1, 1, ps, d),
+                     lambda b, h, ki, qi, tab: (h // n_rep, tab[b, ki], 0, 0)),
+        pl.BlockSpec((1, 1, block_q, d),
+                     lambda b, h, ki, qi, tab: (b, h, qi, 0)),
+        pl.BlockSpec((1, 1, block_q), lambda b, h, ki, qi, tab: (b, h, qi)),
+        pl.BlockSpec((1, 1, block_q), lambda b, h, ki, qi, tab: (b, h, qi)),
+        pl.BlockSpec((1, 1, block_q), lambda b, h, ki, qi, tab: (b, h, qi)),
+        pl.BlockSpec((1, 1, 1), lambda b, h, ki, qi, tab: (b, qi, ki)),
+    ]
+    args = [seed_arr, q, k_pool, v_pool, do, m, l, dd, block_layout]
+    if has_seg:
+        in_specs.append(
+            pl.BlockSpec((1, block_q), lambda b, h, ki, qi, tab: (b, qi)))
+        args.append(q_segment_ids)
+        in_specs.append(
+            pl.BlockSpec((1, ps), lambda b, h, ki, qi, tab: (b, ki)))
+        args.append(kv_segment_ids)
+    if has_pos:
+        in_specs.append(
+            pl.BlockSpec((1, block_q), lambda b, h, ki, qi, tab: (b, qi)))
+        args.append(q_positions)
+        in_specs.append(
+            pl.BlockSpec((1, ps), lambda b, h, ki, qi, tab: (b, ki)))
+        args.append(kv_positions)
+
+    dk_pk, dv_pk = pl.pallas_call(
+        _route_paged(functools.partial(_dkv_kernel, **common)),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(b, hq, T, nq),
+            in_specs=in_specs,
+            out_specs=[
+                pl.BlockSpec((1, 1, ps, d),
+                             lambda b, h, ki, qi, tab: (b, h, ki, 0)),
+                pl.BlockSpec((1, 1, ps, d),
+                             lambda b, h, ki, qi, tab: (b, h, ki, 0)),
+            ],
+            scratch_shapes=[
+                pltpu.VMEM((ps, d), jnp.float32),
+                pltpu.VMEM((ps, d), jnp.float32),
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hq, T * ps, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, hq, T * ps, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(table, *args)
+
+    if n_rep > 1:  # GQA group-sum in the packed layout
+        dk_pk = dk_pk.reshape(b, hkv, n_rep, T * ps, d).sum(axis=2)
+        dv_pk = dv_pk.reshape(b, hkv, n_rep, T * ps, d).sum(axis=2)
+    # packed -> pool: one scatter-add; dead slots route to page index
+    # num_pages, dropped. Duplicate pages across batch rows accumulate.
+    pages = jnp.where(page_list >= 0, page_list,
+                      num_pages).astype(jnp.int32)             # (b, T)
+    src_k = dk_pk.reshape(b, hkv, T, ps, d).transpose(1, 0, 2, 3, 4)
+    src_v = dv_pk.reshape(b, hkv, T, ps, d).transpose(1, 0, 2, 3, 4)
+    dk_pool = jnp.zeros(k_pool.shape, jnp.float32).at[:, pages].add(
+        src_k, mode="drop")
+    dv_pool = jnp.zeros(v_pool.shape, jnp.float32).at[:, pages].add(
+        src_v, mode="drop")
+    return dq, dk_pool.astype(k_pool.dtype), dv_pool.astype(v_pool.dtype)

@@ -28,7 +28,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.masks import (MaskSpec, POS_PAD, SEG_PAD_KV, SEG_PAD_Q,
-                              compile_block_layout, resolve_segment_ids)
+                              compile_block_layout, paged_prefill_block_layout,
+                              resolve_segment_ids)
 from repro.kernels import flash_attention as fa
 from repro.kernels import ref as ref_mod
 from repro.kernels import tuning
@@ -130,6 +131,7 @@ def flash_attention(
     kv_segment_ids: jax.Array | None = None,  # (b, sk) explicit kv-side ids
     q_positions: jax.Array | None = None,     # (b, sq) logical positions
     kv_positions: jax.Array | None = None,    # (b, sk) logical positions
+    kv_major: bool | None = None,      # None = loop order resolved via tuning
     interpret: bool | None = None,
 ) -> jax.Array:
     """Differentiable FlashAttention (Pallas). Pads seq dims to block
@@ -182,9 +184,11 @@ def flash_attention(
         nq_s, nk_s = np.asarray(block_layout).shape
         block_q = -(-sq // nq_s) if block_q is None else block_q
         block_k = -(-sk // nk_s) if block_k is None else block_k
+    explicit_kvm = kv_major
     if block_q is None or block_k is None:
         tiles = tuning.resolve_tiles(
             block_q, block_k, sq=sq, sk=sk, head_dim=d, dtype=q.dtype,
+            heads_q=hq, heads_kv=hkv,
             mask_class=tuning.mask_class_of(
                 causal=causal, window=window,
                 has_kv_mask=kv_mask is not None,
@@ -192,8 +196,33 @@ def flash_attention(
                 has_sparse=block_layout is not None,
                 has_positions=q_positions is not None))
         block_q, block_k = tiles.block_q, tiles.block_k
+        if kv_major is None:
+            kv_major = tiles.kv_major
     block_q = tuning.round_block(block_q, sq)
     block_k = tuning.round_block(block_k, sk)
+
+    # kv-major loop order (FA-2 work repartitioning): the whole query-head
+    # GROUP rides one resident VMEM block while kv streams innermost — K/V
+    # are read once per kv head instead of once per (q head, q block). Not
+    # legal with dropout (the counter hash is per-(q,k) buffer coordinate)
+    # or with an Alg. 5 sparse override (whose PARTIAL_DATA semantics the
+    # column reduction cannot preserve) — the tuner's choice silently falls
+    # back on such calls; an EXPLICIT ``kv_major=True`` raises instead.
+    use_kvm = bool(kv_major)
+    if use_kvm and (dropout_p > 0.0 or block_layout is not None):
+        if explicit_kvm is True:
+            raise ValueError(
+                "kv_major=True is incompatible with dropout and sparse "
+                "block layouts")
+        use_kvm = False
+    if use_kvm and (causal or window is not None) and q_positions is None:
+        # the resident group flattens (rep, row) coordinates, so geometry
+        # must be position-based: synthesize the identity positions the
+        # q-major iota path would have derived.
+        q_positions = jnp.broadcast_to(
+            jnp.arange(sq, dtype=jnp.int32) + q_offset, (b, sq))
+        kv_positions = jnp.broadcast_to(
+            jnp.arange(sk, dtype=jnp.int32), (b, sk))
 
     qp, qpad = _pad_to(q, 2, block_q)
     kp, kpad = _pad_to(k, 2, block_k)
@@ -229,10 +258,189 @@ def flash_attention(
                                   block_q, block_k).as_array()
 
     seed = jnp.asarray(dropout_seed, jnp.uint32)
+    if use_kvm:
+        # Re-layout the call for the transposed loop order: flatten each kv
+        # head's query GROUP (n_rep reps x sq rows) into ONE resident block
+        # (block_q = R, nq = 1) so the kv axis becomes the innermost — and
+        # only — streaming axis. The per-q-block layout reduces to per-kv
+        # COLUMN classes; positions/segment rows tile across the group so
+        # the fused element mask stays exact. The merge order over kv
+        # blocks is unchanged, so o/m/l (and hence the reused q-major
+        # backward) agree with the q-major forward to accumulator order.
+        sq_p, sk_p = qp.shape[2], kp.shape[2]
+        n_rep = hq // hkv
+        r_rows = n_rep * sq_p
+
+        def _tile_rows(x):
+            return None if x is None else jnp.tile(x, (1, n_rep))
+
+        o = _flash_core(qp.reshape(b, hkv, r_rows, d), kp, vp, kvm,
+                        _tile_rows(q_seg), kv_seg, _tile_rows(q_positions),
+                        kv_positions, fa.kv_major_column_layout(layout),
+                        seed, scale, causal, window, spec.q_offset,
+                        spec.kv_valid_len, 0.0, r_rows, block_k, variant,
+                        (r_rows, sk_p), interpret)
+        return o.reshape(b, hq, sq_p, d)[:, :, :sq]
     o = _flash_core(qp, kp, vp, kvm, q_seg, kv_seg, q_positions,
                     kv_positions, layout, seed, scale,
                     causal, window, spec.q_offset, spec.kv_valid_len,
                     dropout_p, block_q, block_k, variant, (sq, sk), interpret)
+    return o[:, :, :sq]
+
+
+# ---------------------------------------------------------------------------
+# paged prefill: differentiable in-place attention against the page pool
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(9, 10, 11, 12, 13, 14))
+def _paged_core(q, k_pool, v_pool, page_list, q_seg, kv_seg, q_pos, kv_pos,
+                block_layout, scale, causal, window, block_q, variant,
+                interpret):
+    o, _, _ = fa.flash_prefill_paged_forward(
+        q, k_pool, v_pool, page_list, block_layout, scale=scale,
+        causal=causal, window=window, q_segment_ids=q_seg,
+        kv_segment_ids=kv_seg, q_positions=q_pos, kv_positions=kv_pos,
+        block_q=block_q, variant=variant, interpret=interpret)
+    return o
+
+
+def _paged_core_fwd(q, k_pool, v_pool, page_list, q_seg, kv_seg, q_pos,
+                    kv_pos, block_layout, scale, causal, window, block_q,
+                    variant, interpret):
+    o, m, l = fa.flash_prefill_paged_forward(
+        q, k_pool, v_pool, page_list, block_layout, scale=scale,
+        causal=causal, window=window, q_segment_ids=q_seg,
+        kv_segment_ids=kv_seg, q_positions=q_pos, kv_positions=kv_pos,
+        block_q=block_q, variant=variant, interpret=interpret)
+    return o, (q, k_pool, v_pool, page_list, q_seg, kv_seg, q_pos, kv_pos,
+               block_layout, o, m, l)
+
+
+def _paged_core_bwd(scale, causal, window, block_q, variant, interpret,
+                    res, do):
+    (q, k_pool, v_pool, page_list, q_seg, kv_seg, q_pos, kv_pos,
+     block_layout, o, m, l) = res
+    dq, dk_pool, dv_pool = fa.flash_prefill_paged_backward(
+        q, k_pool, v_pool, page_list, o, do, m, l, block_layout,
+        scale=scale, causal=causal, window=window,
+        q_segment_ids=q_seg, kv_segment_ids=kv_seg,
+        q_positions=q_pos, kv_positions=kv_pos,
+        block_q=block_q, interpret=interpret)
+
+    def _zero_tangent(x):
+        return None if x is None else np.zeros(x.shape, jax.dtypes.float0)
+
+    return (dq, dk_pool, dv_pool, _zero_tangent(page_list),
+            _zero_tangent(q_seg), _zero_tangent(kv_seg),
+            _zero_tangent(q_pos), _zero_tangent(kv_pos),
+            _zero_tangent(block_layout))
+
+
+_paged_core.defvjp(_paged_core_fwd, _paged_core_bwd)
+
+
+def flash_prefill_paged(
+    q: jax.Array,             # (b, hq, sq, d)
+    k_pool: jax.Array,        # (hkv, num_pages, page_size, d) shared pool
+    v_pool: jax.Array,
+    page_list: jax.Array,     # (b, T) int32; negative = dead slot (SKIP)
+    *,
+    q_positions: jax.Array,   # (b, sq) logical positions (DESIGN.md §10)
+    kv_positions: jax.Array,  # (b, T*page_size); POS_PAD on dead rows
+    q_segment_ids: jax.Array | None = None,   # (b, sq)
+    kv_segment_ids: jax.Array | None = None,  # (b, T*page_size)
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+    block_q: int | None = None,        # None = resolve via kernels.tuning
+    variant: str = "fa2",
+    kv_major: bool | None = None,      # None = loop order resolved via tuning
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Differentiable FlashAttention over a PAGED kv prefix, read in place.
+
+    The kv side is the page-aligned packed view of ``page_list``: logical
+    row ``t*page_size + r`` is row ``r`` of physical page ``page_list[b, t]``
+    — no gather ever materializes it. Causal/window masking compares the
+    caller's LOGICAL positions (per-segment chunked prefill: chunk queries
+    at ``hist + i`` against prefix keys at ``0..hist+C``), so positions are
+    REQUIRED; dead kv rows (unallocated slots, alignment tails) must carry
+    ``masks.POS_PAD`` (and ``SEG_PAD_KV`` when segment ids are used), which
+    the layout compiler turns into SKIP pages the kernel never DMAs.
+    Differentiable in (q, k_pool, v_pool); pool gradients come back
+    pool-shaped with zeros on untouched pages."""
+    b, hq, sq, d = q.shape
+    hkv, num_pages, ps, _ = k_pool.shape
+    if hq % hkv != 0:
+        raise ValueError(f"q heads {hq} not a multiple of kv heads {hkv}")
+    page_list = jnp.asarray(page_list, jnp.int32)
+    if page_list.ndim != 2 or page_list.shape[0] != b:
+        raise ValueError(f"page_list must be (batch, T), got "
+                         f"{page_list.shape}")
+    T = page_list.shape[1]
+    sk = T * ps
+    if kv_positions.shape != (b, sk):
+        raise ValueError(
+            f"kv_positions must be (batch, T*page_size)=({b}, {sk}), got "
+            f"{kv_positions.shape}")
+    if (q_segment_ids is None) != (kv_segment_ids is None):
+        raise ValueError("segment ids must be passed together")
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    if interpret is None:
+        interpret = default_interpret()
+    has_seg = q_segment_ids is not None
+
+    explicit_kvm = kv_major
+    if block_q is None:
+        tiles = tuning.resolve_tiles(
+            block_q, ps, sq=sq, sk=sk, head_dim=d, dtype=q.dtype,
+            heads_q=hq, heads_kv=hkv,
+            mask_class=tuning.mask_class_of(
+                causal=causal, window=window, has_kv_mask=False,
+                has_segments=has_seg, has_sparse=False, has_positions=True))
+        block_q = tiles.block_q
+        if kv_major is None:
+            kv_major = tiles.kv_major
+    block_q = tuning.round_block(block_q, sq)
+    use_kvm = bool(kv_major)
+
+    qp, qpad = _pad_to(q, 2, block_q)
+    q_positions = jnp.pad(jnp.asarray(q_positions, jnp.int32),
+                          ((0, 0), (0, qpad)), constant_values=POS_PAD)
+    kv_positions = jnp.asarray(kv_positions, jnp.int32)
+    if has_seg:
+        q_segment_ids = jnp.pad(jnp.asarray(q_segment_ids, jnp.int32),
+                                ((0, 0), (0, qpad)),
+                                constant_values=SEG_PAD_Q)
+        kv_segment_ids = jnp.asarray(kv_segment_ids, jnp.int32)
+
+    spec = MaskSpec(causal=causal, window=window, q_offset=0,
+                    q_segment_ids=q_segment_ids,
+                    kv_segment_ids=kv_segment_ids,
+                    q_positions=q_positions, kv_positions=kv_positions)
+    layout = compile_block_layout(spec, qp.shape[2], sk,
+                                  block_q, ps).as_array()
+    layout = paged_prefill_block_layout(layout, page_list)
+
+    if use_kvm:
+        # same resident-group re-layout as the contiguous kv-major path
+        sq_p = qp.shape[2]
+        n_rep = hq // hkv
+        r_rows = n_rep * sq_p
+
+        def _tile_rows(x):
+            return None if x is None else jnp.tile(x, (1, n_rep))
+
+        o = _paged_core(qp.reshape(b, hkv, r_rows, d), k_pool, v_pool,
+                        page_list, _tile_rows(q_segment_ids), kv_segment_ids,
+                        _tile_rows(q_positions), kv_positions,
+                        fa.kv_major_column_layout(layout),
+                        scale, causal, window, r_rows, variant, interpret)
+        return o.reshape(b, hq, sq_p, d)[:, :, :sq]
+    o = _paged_core(qp, k_pool, v_pool, page_list, q_segment_ids,
+                    kv_segment_ids, q_positions, kv_positions, layout,
+                    scale, causal, window, block_q, variant, interpret)
     return o[:, :, :sq]
 
 

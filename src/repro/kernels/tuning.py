@@ -235,11 +235,48 @@ def choose_decode_geometry(capacity: int, head_dim: int, *,
     return blk, splits
 
 
+def kv_major_fits(sq: int, block_k: int, head_dim: int, *,
+                  heads_q: int = 1, heads_kv: int = 1, elt: int = 4,
+                  backward: bool = True,
+                  budget: int | None = None) -> bool:
+    """Can the resident-q kv-major order run this shape at all? The whole
+    grouped query block (``(hq/hkv)·sq`` rows) must fit the budget — for
+    the forward alone, and for the reused backward kernels too when the
+    call is trainable (they run with ``block_q = R``)."""
+    budget = sram_budget() if budget is None else budget
+    r_rows = max(1, heads_q // max(heads_kv, 1)) * sq
+    if io_model.kv_major_working_set_bytes(
+            r_rows, block_k, head_dim, in_elt=elt) > budget:
+        return False
+    if backward and io_model.attention_working_set_bytes(
+            r_rows, block_k, head_dim, in_elt=elt,
+            backward=True) > budget:
+        return False
+    return True
+
+
+def _choose_kv_major(sq: int, sk: int, head_dim: int, bq: int, bk: int, *,
+                     heads_q: int, heads_kv: int, elt: int,
+                     backward: bool, budget: int) -> bool:
+    """Loop-order decision: kv-major iff the two-order cost surface says it
+    moves strictly fewer HBM bytes AND the resident group fits."""
+    if heads_q < 1 or heads_kv < 1 or heads_q % heads_kv:
+        return False
+    costs = io_model.prefill_order_hbm_bytes(
+        sq, sk, head_dim, heads_q, heads_kv, 1, bq, bk, elt=elt)
+    if costs["kv_major"] >= costs["q_major"]:
+        return False
+    return kv_major_fits(sq, bk, head_dim, heads_q=heads_q,
+                         heads_kv=heads_kv, elt=elt, backward=backward,
+                         budget=budget)
+
+
 @functools.lru_cache(maxsize=512)
 def _analytic_choice(sq: int, sk: int, head_dim: int, elt: int,
                      backward: bool, budget: int,
                      fixed_bq: int | None, fixed_bk: int | None,
-                     decode_capacity: int | None) -> TileConfig:
+                     decode_capacity: int | None,
+                     heads_q: int = 1, heads_kv: int = 1) -> TileConfig:
     bq_cands = [fixed_bq] if fixed_bq is not None else _aligned_candidates(sq)
     bk_cands = [fixed_bk] if fixed_bk is not None else _aligned_candidates(sk)
     best: tuple | None = None
@@ -259,12 +296,25 @@ def _analytic_choice(sq: int, sk: int, head_dim: int, elt: int,
             if best is None or key > best[:4]:
                 best = key + (bq, bk)
     bq, bk = best[4], best[5]
+    # Loop-order decision: kv-major holds the WHOLE grouped q side
+    # resident, so its kv tile is chosen independently of the q-major
+    # optimum above — the largest candidate that still fits beside the
+    # resident group (the HBM cost of kv-major is tile-size-invariant:
+    # K/V stream exactly once either way).
+    kvm = False
+    for kbk in sorted(bk_cands, reverse=True):
+        if _choose_kv_major(sq, sk, head_dim, bq, kbk, heads_q=heads_q,
+                            heads_kv=heads_kv, elt=elt, backward=backward,
+                            budget=budget):
+            kvm, bk = True, kbk
+            break
     dec_blk = dec_splits = None
     if decode_capacity is not None:
         dec_blk, dec_splits = choose_decode_geometry(
             decode_capacity, head_dim, elt=elt, budget=budget)
     return TileConfig(block_q=bq, block_k=bk, decode_block_k=dec_blk,
-                      num_decode_splits=dec_splits, source="analytic")
+                      num_decode_splits=dec_splits, kv_major=kvm,
+                      source="analytic")
 
 
 def choose_tile_config(sq: int, sk: int, head_dim: int, *,
@@ -272,14 +322,20 @@ def choose_tile_config(sq: int, sk: int, head_dim: int, *,
                        sram_budget_bytes: int | None = None,
                        decode_capacity: int | None = None,
                        block_q: int | None = None,
-                       block_k: int | None = None) -> TileConfig:
+                       block_k: int | None = None,
+                       heads_q: int = 1, heads_kv: int = 1) -> TileConfig:
     """Analytic tile choice (see module docstring). Explicit ``block_q`` /
-    ``block_k`` pin that axis and the chooser fills the rest."""
+    ``block_k`` pin that axis and the chooser fills the rest. ``heads_q`` /
+    ``heads_kv`` feed the LOOP-ORDER decision: with them the chooser costs
+    both grid orders (``io_model.prefill_order_hbm_bytes``) and sets
+    ``kv_major`` when the transposed resident-group order strictly wins
+    and fits — the short-N_q/long-N_k serving shapes."""
     budget = (sram_budget() if sram_budget_bytes is None
               else int(sram_budget_bytes))
     return _analytic_choice(int(sq), int(sk), int(head_dim),
                             _elt_bytes(dtype), bool(backward), budget,
-                            block_q, block_k, decode_capacity)
+                            block_q, block_k, decode_capacity,
+                            int(heads_q), int(heads_kv))
 
 
 # ---------------------------------------------------------------------------
@@ -353,26 +409,28 @@ def _device_kind() -> str:
 
 
 def _time_candidates(sq: int, sk: int, head_dim: int, dtype,
-                     candidates: list[tuple[int, int]], *,
-                     causal: bool, iters: int = 3) -> tuple[int, int, float]:
-    """Time the forward call per candidate on-device, return the winner.
-    Candidates are explicit, so the timed calls never re-enter resolution."""
+                     candidates: list[tuple[int, int, bool]], *,
+                     causal: bool, heads_q: int = 2, heads_kv: int = 2,
+                     iters: int = 3) -> tuple[int, int, bool, float]:
+    """Time the forward call per ``(block_q, block_k, kv_major)`` candidate
+    on-device, return the winner. Candidates are explicit, so the timed
+    calls never re-enter resolution."""
     import time
 
     import jax
-    import jax.numpy as jnp
+    import jax.numpy as jnp  # noqa: F401 — dtype strings resolve through jnp
 
     from repro.kernels import ops
 
     ks = jax.random.split(jax.random.PRNGKey(0), 3)
-    shape = (1, 2, sq, head_dim)
-    q = jax.random.normal(ks[0], shape, dtype)
-    k = jax.random.normal(ks[1], (1, 2, sk, head_dim), dtype)
-    v = jax.random.normal(ks[2], (1, 2, sk, head_dim), dtype)
-    best: tuple[float, int, int] | None = None
-    for bq, bk in candidates:
+    q = jax.random.normal(ks[0], (1, heads_q, sq, head_dim), dtype)
+    k = jax.random.normal(ks[1], (1, heads_kv, sk, head_dim), dtype)
+    v = jax.random.normal(ks[2], (1, heads_kv, sk, head_dim), dtype)
+    best: tuple[float, int, int, bool] | None = None
+    for bq, bk, kvm in candidates:
         fn = jax.jit(functools.partial(ops.flash_attention, causal=causal,
-                                       block_q=bq, block_k=bk))
+                                       block_q=bq, block_k=bk,
+                                       kv_major=kvm))
         jax.block_until_ready(fn(q, k, v))          # compile outside timing
         ts = []
         for _ in range(iters):
@@ -381,50 +439,166 @@ def _time_candidates(sq: int, sk: int, head_dim: int, dtype,
             ts.append(time.perf_counter() - t0)
         t = min(ts)
         if best is None or t < best[0]:
-            best = (t, bq, bk)
-    return best[1], best[2], best[0] * 1e6
+            best = (t, bq, bk, kvm)
+    return best[1], best[2], best[3], best[0] * 1e6
 
 
 def autotune_tiles(sq: int, sk: int, head_dim: int, *, dtype,
                    mask_class: str, backward: bool = True,
                    max_candidates: int = 4,
                    block_q: int | None = None,
-                   block_k: int | None = None) -> TileConfig:
+                   block_k: int | None = None,
+                   heads_q: int = 1, heads_kv: int = 1) -> TileConfig:
     """Empirical resolution: cache lookup, else time the analytic chooser's
     top fitting candidates and persist the winner. A pinned ``block_q`` /
     ``block_k`` axis CONSTRAINS the candidate list (only combinations that
     honor the pin are timed) and is part of the cache key — a pinned call
-    never reuses, or pollutes, the unpinned entry."""
+    never reuses, or pollutes, the unpinned entry. The loop order is part
+    of the decision: when the two-order cost model says kv-major can win
+    the shape, a kv-major candidate is timed against the q-major ones and
+    the winning order is persisted in the entry's ``kv_major`` field (the
+    head-group ratio joins the key — the order decision is meaningless
+    across different grouping)."""
     bucket = seq_bucket(max(sq, sk))
     key = cache_key(_device_kind(), dtype, head_dim, bucket, mask_class)
     if block_q is not None:
         key += f"|bq={block_q}"
     if block_k is not None:
         key += f"|bk={block_k}"
+    n_rep = max(1, heads_q // max(heads_kv, 1))
+    if n_rep > 1:
+        key += f"|g={n_rep}"
     cache = autotune_cache()
     hit = cache.get(key)
     if hit is not None:
         return hit
     analytic = choose_tile_config(bucket, bucket, head_dim, dtype=dtype,
                                   backward=backward,
-                                  block_q=block_q, block_k=block_k)
+                                  block_q=block_q, block_k=block_k,
+                                  heads_q=heads_q, heads_kv=heads_kv)
     budget = sram_budget()
     elt = _elt_bytes(dtype)
-    cands: list[tuple[int, int]] = [(analytic.block_q, analytic.block_k)]
+    cands: list[tuple[int, int, bool]] = [
+        (analytic.block_q, analytic.block_k, analytic.kv_major)]
     bq_cands = [block_q] if block_q is not None else _aligned_candidates(bucket)
     bk_cands = [block_k] if block_k is not None else _aligned_candidates(bucket)
     for bq in bq_cands:
         for bk in bk_cands:
             ws = io_model.attention_working_set_bytes(
                 bq, bk, head_dim, in_elt=elt, backward=backward)
-            if ws <= budget and (bq, bk) not in cands:
-                cands.append((bq, bk))
-    bq, bk, t_us = _time_candidates(
+            if ws <= budget and (bq, bk, False) not in cands:
+                cands.append((bq, bk, False))
+    cands = cands[:max_candidates]
+    if not analytic.kv_major and kv_major_fits(
+            bucket, analytic.block_k, head_dim, heads_q=heads_q,
+            heads_kv=heads_kv, elt=elt, backward=backward, budget=budget):
+        # let the clock referee the loop order even when the byte model
+        # called it for q-major — the timed winner is what persists.
+        cands.append((analytic.block_q, analytic.block_k, True))
+    bq, bk, kvm, t_us = _time_candidates(
         sq=bucket, sk=bucket, head_dim=head_dim, dtype=dtype,
-        candidates=cands[:max_candidates],
-        causal="causal" in mask_class)
+        candidates=cands, causal="causal" in mask_class,
+        heads_q=max(heads_q, 1), heads_kv=max(heads_kv, 1))
     cfg = dataclasses.replace(analytic, block_q=bq, block_k=bk,
-                              source="autotuned")
+                              kv_major=kvm, source="autotuned")
+    cache.put(key, cfg, t_us)
+    return cfg
+
+
+def _time_decode_candidates(capacity: int, head_dim: int, dtype,
+                            candidates: list[tuple[int, int]], *,
+                            page_size: int | None = None,
+                            iters: int = 3) -> tuple[int, int, float]:
+    """Time the decode kernel per ``(block_k, num_splits)`` candidate —
+    contiguous (``flash_decode``) or paged (``flash_decode_paged``)."""
+    import time
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import flash_decode as fd
+
+    hq = hkv = 2
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (1, hq, 1, head_dim), dtype)
+    kv_len = jnp.asarray([capacity], jnp.int32)
+    if page_size is None:
+        kc = jax.random.normal(ks[1], (1, hkv, capacity, head_dim), dtype)
+        vc = jax.random.normal(ks[2], (1, hkv, capacity, head_dim), dtype)
+
+        def _make(blk, splits):
+            fn = jax.jit(functools.partial(fd.flash_decode, block_k=blk,
+                                           num_splits=splits))
+            return fn, (q, kc, vc, kv_len)
+    else:
+        pages = max(1, capacity // page_size)
+        kp = jax.random.normal(ks[1], (hkv, pages, page_size, head_dim),
+                               dtype)
+        vp = jax.random.normal(ks[2], (hkv, pages, page_size, head_dim),
+                               dtype)
+        table = jnp.arange(pages, dtype=jnp.int32)[None]
+
+        def _make(blk, splits):
+            fn = jax.jit(functools.partial(fd.flash_decode_paged,
+                                           num_splits=splits))
+            return fn, (q, kp, vp, table, kv_len)
+
+    best: tuple[float, int, int] | None = None
+    for blk, splits in candidates:
+        fn, call_args = _make(blk, splits)
+        jax.block_until_ready(fn(*call_args))       # compile outside timing
+        ts = []
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(*call_args))
+            ts.append(time.perf_counter() - t0)
+        t = min(ts)
+        if best is None or t < best[0]:
+            best = (t, blk, splits)
+    return best[1], best[2], best[0] * 1e6
+
+
+def autotune_decode_geometry(capacity: int, head_dim: int, *, dtype,
+                             page_size: int | None = None,
+                             target_splits: int = TARGET_DECODE_SPLITS,
+                             max_candidates: int = 4) -> TileConfig:
+    """Empirical decode resolution: time ``(decode_block_k, num_splits)``
+    candidates and persist the winner — the ROADMAP "Autotune coverage"
+    item. Keyed by EXACT capacity (not the pow-2 bucket): split validity is
+    a divisibility property of the real grid, so a bucket-timed entry could
+    hand a neighboring capacity an invalid geometry. For a paged cache the
+    block is pinned to the page (allocation-unit invariant) and only the
+    split count is searched."""
+    kind = f"paged{page_size}" if page_size is not None else "contig"
+    key = (f"decode|{_device_kind()}|{_dtype_name(dtype)}|{head_dim}|"
+           f"{capacity}|{kind}")
+    cache = autotune_cache()
+    hit = cache.get(key)
+    if hit is not None and hit.decode_block_k is not None:
+        return hit
+    cands: list[tuple[int, int]] = []
+    if page_size is not None:
+        pages = max(1, capacity // page_size)
+        for s in _divisors_desc(pages):
+            if s <= 2 * target_splits:
+                cands.append((page_size, s))
+    else:
+        blk, splits = choose_decode_geometry(capacity, head_dim,
+                                             elt=_elt_bytes(dtype),
+                                             target_splits=target_splits)
+        cands.append((blk, splits))
+        for b2 in _divisors_desc(capacity):
+            if b2 % SUBLANES or b2 == capacity:
+                continue
+            nk = capacity // b2
+            s2 = next(s for s in _divisors_desc(nk) if s <= target_splits)
+            if (b2, s2) not in cands:
+                cands.append((b2, s2))
+    blk, splits, t_us = _time_decode_candidates(
+        capacity, head_dim, dtype, cands[:max_candidates],
+        page_size=page_size)
+    cfg = TileConfig(block_q=1, block_k=blk, decode_block_k=blk,
+                     num_decode_splits=splits, source="autotuned")
     cache.put(key, cfg, t_us)
     return cfg
 
@@ -447,13 +621,17 @@ def mask_class_of(*, causal: bool = False, window: int | None = None,
 def resolve_tiles(block_q: int | None, block_k: int | None, *,
                   sq: int, sk: int, head_dim: int, dtype: Any,
                   mask_class: str = "dense",
-                  backward: bool = True) -> TileConfig:
+                  backward: bool = True,
+                  heads_q: int = 1, heads_kv: int = 1) -> TileConfig:
     """THE audited decision point for training/prefill tiles.
 
     Explicit (non-``None``) values pass through untouched; ``None`` means
     auto — empirical when autotuning is enabled, analytic otherwise. The
     caller still owes ``round_block`` against its true (possibly ragged)
     sequence lengths: resolution works on the padded geometry.
+    ``heads_q``/``heads_kv`` inform the loop-order (``kv_major``) decision;
+    a call that pins both blocks has opted out of resolution entirely, so
+    its config keeps the default q-major order.
     """
     if block_q is not None and block_k is not None:
         return TileConfig(block_q=int(block_q), block_k=int(block_k),
@@ -461,10 +639,12 @@ def resolve_tiles(block_q: int | None, block_k: int | None, *,
     if autotune_enabled():
         return autotune_tiles(sq, sk, head_dim, dtype=dtype,
                               mask_class=mask_class, backward=backward,
-                              block_q=block_q, block_k=block_k)
+                              block_q=block_q, block_k=block_k,
+                              heads_q=heads_q, heads_kv=heads_kv)
     return choose_tile_config(sq, sk, head_dim, dtype=dtype,
                               backward=backward,
-                              block_q=block_q, block_k=block_k)
+                              block_q=block_q, block_k=block_k,
+                              heads_q=heads_q, heads_kv=heads_kv)
 
 
 def resolve_decode_geometry(capacity: int, block_k: int | None,
@@ -484,6 +664,14 @@ def resolve_decode_geometry(capacity: int, block_k: int | None,
     """
     from repro.kernels.flash_decode import (validate_decode_geometry,
                                             validate_paged_decode_geometry)
+
+    if block_k is None and num_splits is None and autotune_enabled():
+        # Fully-auto geometry with the autotuner on: serve the timed winner.
+        # The timed candidates pass explicit geometry, so no re-entry here.
+        cfg = autotune_decode_geometry(capacity, head_dim, dtype=dtype,
+                                       page_size=page_size,
+                                       target_splits=target_splits)
+        block_k, num_splits = cfg.decode_block_k, cfg.num_decode_splits
 
     if page_size is not None:
         if block_k is not None and int(block_k) != int(page_size):
@@ -548,7 +736,12 @@ def _main() -> None:
           f"block_k={cfg.block_k} source={cfg.source} "
           f"hbm_vs_128x128={chosen / fixed:.3f} cache_hit={hit} "
           f"(hits={cache.hits} misses={cache.misses}) path={cache.path}")
-    if args.expect_hit and not hit:
+    dec = autotune_decode_geometry(seq, args.head_dim, dtype=jnp.float32)
+    dec_hit = dec.source == "cache"
+    print(f"autotune decode cap={seq} d={args.head_dim}: "
+          f"block_k={dec.decode_block_k} splits={dec.num_decode_splits} "
+          f"source={dec.source} cache_hit={dec_hit}")
+    if args.expect_hit and not (hit and dec_hit):
         raise SystemExit("expected a cache hit but resolution re-tuned")
 
 

@@ -16,7 +16,8 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.core.attention import (AttentionSpec, attention, decode_attention,
-                                  paged_decode_attention)
+                                  paged_decode_attention,
+                                  paged_prefill_attention)
 from repro.core.masks import segment_relative_positions
 from repro.models.layers import apply_rope, dense_init, rms_normalize
 
@@ -240,26 +241,27 @@ def paged_kv_cache_specs():
 
 
 def chunk_prefill_attention_step(params, cfg: ModelConfig, x, pool,
-                                 dest_page, dest_off, src_page, src_off,
+                                 dest_page, dest_off, page_list,
                                  q_seg, kv_seg, q_pos, kv_pos,
                                  *, spec: AttentionSpec | None = None):
-    """Packed chunked-prefill attention against the shared page pool
-    (DESIGN.md §10).
+    """Packed chunked-prefill attention against the shared page pool,
+    IN PLACE (DESIGN.md §10, §11).
 
     x: (1, S, d_model) — the NEXT prefill chunks of several sequences
     packed into one varlen call (q_seg isolates them). The new K/V rows
     are scattered straight into pool pages at ``(dest_page, dest_off)``
-    (logical positions ``hist_i + r``, pages grown chunk-by-chunk), then
-    each segment's FULL logical prefix ``[0, hist_i + C_i)`` — history
-    written by earlier chunks plus the rows just scattered — is gathered
-    back as the kv side at ``(src_page, src_off)``. The causal term runs
-    on the traced logical positions (``q_pos``: hist_i + r; ``kv_pos``:
-    0..hist_i+C_i — the per-segment q_offset), so a chunk's queries attend
-    all prior KV of their own sequence and themselves causally: chunked
-    prefill is EXACT attention over the same prefix the atomic prefill
-    sees. RoPE uses the same logical positions, making the K rows written
-    here bit-compatible with atomic-prefill and decode-step writes.
-    Returns (out, new_pool).
+    (logical positions ``hist_i + r``, pages grown chunk-by-chunk); the kv
+    side — each segment's FULL logical prefix ``[0, hist_i + C_i)``,
+    history written by earlier chunks plus the rows just scattered — is
+    then attended THROUGH ``page_list`` (``kv_cache.paged_prefix_lists``):
+    no per-layer gather copy ever materializes the prefix. The causal term
+    runs on the traced logical positions (``q_pos``: hist_i + r;
+    ``kv_pos``: 0..hist_i+C_i — the per-segment q_offset), so a chunk's
+    queries attend all prior KV of their own sequence and themselves
+    causally: chunked prefill is EXACT attention over the same prefix the
+    atomic prefill sees. RoPE uses the same logical positions, making the
+    K rows written here bit-compatible with atomic-prefill and decode-step
+    writes. Returns (out, new_pool).
     """
     q, k, v = _project_qkv(params, cfg, x, x, q_pos, q_pos)
 
@@ -268,15 +270,10 @@ def chunk_prefill_attention_step(params, cfg: ModelConfig, x, pool,
                                                    mode="drop")
 
     pool = {"k": _scat(pool["k"], k), "v": _scat(pool["v"], v)}
-
-    def _gath(c):  # (hkv, P, ps, hd) -> (1, hkv, Sk, hd)
-        return c[:, src_page, src_off, :][None]
-
     spec = spec or attn_spec_from_config(cfg)
-    o = attention(q, _gath(pool["k"]), _gath(pool["v"]), spec,
-                  q_segment_ids=q_seg, kv_segment_ids=kv_seg,
-                  q_positions=q_pos, kv_positions=kv_pos,
-                  deterministic=True)
+    o = paged_prefill_attention(q, pool["k"], pool["v"], page_list, spec,
+                                q_segment_ids=q_seg, kv_segment_ids=kv_seg,
+                                q_positions=q_pos, kv_positions=kv_pos)
     return _merge_heads(o) @ params["wo"], pool
 
 

@@ -238,14 +238,15 @@ class Model:
 
         batch: {"tokens": (1, S), "q_segment_ids": (1, S),
                 "q_positions": (1, S)  — logical positions hist_i + r,
-                "kv_segment_ids"/"kv_positions": (1, Sk) for the gathered
+                "kv_segment_ids"/"kv_positions": (1, Sk) for the in-place
                 prefixes, "dest_page"/"dest_off": (S,) scatter destinations,
-                "src_page"/"src_off": (Sk,) gather sources}.
+                "page_list": (1, Sk // page_size) kv-side page indices}.
         ``caches`` is the engine's paged pool pytree (donated by the jit).
-        Each layer scatters the chunk's K/V rows into the pool, gathers the
-        segment's full logical prefix back, and attends with the traced
-        per-segment q_offset — so every chunk is exact attention over all
-        prior KV, and the pool after the final chunk is identical to an
+        Each layer scatters the chunk's K/V rows into the pool, then
+        attends the segment's full logical prefix IN PLACE through
+        ``page_list`` with the traced per-segment q_offset — so every
+        chunk is exact attention over all prior KV with zero gather
+        copies, and the pool after the final chunk is identical to an
         atomic prefill's. Returns (new_caches, logits (1, S, V)): the
         caller samples each finishing segment's last-token logits.
         """
@@ -254,8 +255,7 @@ class Model:
         x = jnp.take(params["embed"], batch["tokens"], axis=0)
         h, caches = tfm.apply_stack_chunk_prefill(
             params["blocks"], cfg, x, caches,
-            batch["dest_page"], batch["dest_off"],
-            batch["src_page"], batch["src_off"],
+            batch["dest_page"], batch["dest_off"], batch["page_list"],
             batch["q_segment_ids"], batch["kv_segment_ids"],
             batch["q_positions"], batch["kv_positions"])
         return caches, self._logits(params, h)

@@ -322,14 +322,15 @@ def apply_block_decode_paged(params: Params, cfg: ModelConfig, x, cache,
 
 
 def apply_block_chunk_prefill(params: Params, cfg: ModelConfig, x, cache,
-                              dest_page, dest_off, src_page, src_off,
+                              dest_page, dest_off, page_list,
                               q_seg, kv_seg, q_pos, kv_pos):
     """One dense/moe block for a packed batch of prefill CHUNKS against the
-    page pool (scatter new rows, attend each segment's gathered prefix)."""
+    page pool (scatter new rows, attend each segment's prefix in place
+    through the page list — no per-layer gather)."""
     h = apply_norm(params["attn_norm"], x, cfg.norm_type)
     a, kv = attn_mod.chunk_prefill_attention_step(
         params["attn"], cfg, h, cache["kv"], dest_page, dest_off,
-        src_page, src_off, q_seg, kv_seg, q_pos, kv_pos)
+        page_list, q_seg, kv_seg, q_pos, kv_pos)
     x = x + a
     if "moe" in params:
         h = apply_norm(params["mlp_norm"], x, cfg.norm_type)
@@ -342,14 +343,14 @@ def apply_block_chunk_prefill(params: Params, cfg: ModelConfig, x, cache,
 
 
 def apply_stack_chunk_prefill(params: Params, cfg: ModelConfig, x, caches,
-                              dest_page, dest_off, src_page, src_off,
+                              dest_page, dest_off, page_list,
                               q_seg, kv_seg, q_pos, kv_pos):
     """Packed prefill chunks through all layers, threading per-layer pools.
-    The scatter/gather index maps are layer-invariant (one logical sequence
-    maps to the same pages in every layer's pool)."""
+    The scatter map and kv page list are layer-invariant (one logical
+    sequence maps to the same pages in every layer's pool)."""
     block = functools.partial(
         apply_block_chunk_prefill, cfg=cfg, dest_page=dest_page,
-        dest_off=dest_off, src_page=src_page, src_off=src_off,
+        dest_off=dest_off, page_list=page_list,
         q_seg=q_seg, kv_seg=kv_seg, q_pos=q_pos, kv_pos=kv_pos)
     if not cfg.scan_layers:
         outs = []

@@ -61,8 +61,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import masks
-from repro.core.masks import POS_PAD, SEG_PAD_KV, SEG_PAD_Q
+from repro.core import io_model, masks
+from repro.core.masks import POS_PAD, SEG_PAD_Q
 from repro.kernels import tuning
 from repro.models.attention_layer import attn_spec_from_config
 from repro.models.model_zoo import Model
@@ -162,10 +162,17 @@ class ServingEngine:
             self._prefill_packed = jax.jit(model.prefill_packed)
             self._prefill_chunk = jax.jit(model.prefill_chunk_paged,
                                           donate_argnums=(2,))
-            # kv-side gather width bucket for suffix chunks: coarse enough
-            # to bound the jit-trace family over a long prompt's prefill.
-            self.chunk_kv_bucket = chunk_kv_bucket or max(
-                prefill_bucket, 2 * (chunk_size or 0))
+            # kv-side width bucket for suffix chunks: coarse enough to
+            # bound the jit-trace family over a long prompt's prefill, and
+            # rounded UP to a page multiple — the in-place kv side is a
+            # page LIST, so its packed width must be whole pages.
+            ckb = chunk_kv_bucket or max(prefill_bucket,
+                                         2 * (chunk_size or 0))
+            self.chunk_kv_bucket = ckb + (-ckb) % page_size
+            # hot-path IO the in-place kv side no longer pays: the bytes
+            # the per-layer prefix gather (read pages + write packed rows,
+            # K and V) would have moved for the same chunk steps.
+            self.prefill_gather_bytes_eliminated = 0
             self.scheduler = ChunkScheduler(
                 SchedulerConfig(num_lanes=num_slots, capacity=capacity,
                                 page_size=page_size, chunk_size=chunk_size,
@@ -417,8 +424,12 @@ class ServingEngine:
     def _exec_suffix_paged(self, tasks: list[ChunkTask]) -> None:
         """Chunks with history run as ONE packed varlen call against the
         page pool: scatter each chunk's K/V rows into its sequence's pages,
-        gather each sequence's full logical prefix back as the kv side, and
-        attend with traced per-segment positions (q_offset = chunk start).
+        then attend each sequence's full logical prefix IN PLACE through a
+        page list (``kv_cache.paged_prefix_lists``) with traced per-segment
+        positions (q_offset = chunk start). No ``gather_sources`` copy runs
+        per layer — the kernel's kv BlockSpec resolves physical pages from
+        the scalar-prefetched list, so zero prefix KV bytes move on the hot
+        path (counted in ``prefill_gather_bytes_eliminated``).
         """
         reqs = [self.requests[t.rid] for t in tasks]
         lengths = [t.length for t in tasks]
@@ -436,32 +447,32 @@ class ServingEngine:
             qpos[0, sl] = np.arange(st, st + n)
 
         spans = [st + n for st, n in zip(starts, lengths)]
-        k_off = np.concatenate([[0], np.cumsum(spans)])
-        total_k = int(k_off[-1])
-        Sk = self._kv_bucketed(total_k)
-        kseg = np.full((1, Sk), SEG_PAD_KV, np.int32)
-        kpos = np.full((1, Sk), POS_PAD, np.int32)
-        for i, sp in enumerate(spans):
-            sl = slice(int(k_off[i]), int(k_off[i + 1]))
-            kseg[0, sl] = i
-            kpos[0, sl] = np.arange(sp)
-
         tables = [self.kv.table(t.rid) for t in tasks]
         dest_page, dest_off = kvc.chunk_destinations(
             tables, starts, q_off, lengths, self.page_size, Sq,
             self.kv.num_pages)
-        src_page, src_off = kvc.gather_sources(
-            tables, k_off, spans, self.page_size, Sk)
+        # page-aligned kv packing: segment i's prefix occupies its own
+        # whole page slots, so the packed width is pages * page_size,
+        # bucketed (the bucket is a page multiple by construction).
+        pages_needed = sum(kvc.pages_for(sp, self.page_size) for sp in spans)
+        Sk = self._kv_bucketed(pages_needed * self.page_size)
+        page_list, kseg, kpos = kvc.paged_prefix_lists(
+            tables, spans, self.page_size, Sk // self.page_size)
+        cfg = self.model.cfg
+        self.prefill_gather_bytes_eliminated += int(sum(
+            io_model.gather_hbm_bytes(sp, cfg.head_dim, cfg.num_kv_heads,
+                                      elt=tuning._elt_bytes(cfg.dtype),
+                                      layers=cfg.num_layers)
+            for sp in spans))
 
         batch = {"tokens": jnp.asarray(toks),
                  "q_segment_ids": jnp.asarray(qseg),
                  "q_positions": jnp.asarray(qpos),
-                 "kv_segment_ids": jnp.asarray(kseg),
-                 "kv_positions": jnp.asarray(kpos),
+                 "kv_segment_ids": jnp.asarray(kseg[None]),
+                 "kv_positions": jnp.asarray(kpos[None]),
                  "dest_page": jnp.asarray(dest_page),
                  "dest_off": jnp.asarray(dest_off),
-                 "src_page": jnp.asarray(src_page),
-                 "src_off": jnp.asarray(src_off)}
+                 "page_list": jnp.asarray(page_list[None])}
         caches, logits = self._prefill_chunk(self.params, batch,
                                              self.state["caches"])
         self.state["caches"] = caches

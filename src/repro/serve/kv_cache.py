@@ -35,8 +35,10 @@ import collections
 import jax
 import numpy as np
 
+from repro.core import masks
+
 __all__ = ["PagedKVCache", "scatter_packed_segments",
-           "packed_destinations", "chunk_destinations", "gather_sources",
+           "packed_destinations", "chunk_destinations", "paged_prefix_lists",
            "pages_for"]
 
 
@@ -157,21 +159,44 @@ def packed_destinations(tables: list[list[int]], offsets: np.ndarray,
                               page_size, total, num_pages)
 
 
-def gather_sources(tables: list[list[int]], kv_offsets, spans: list[int],
-                   page_size: int, total: int
-                   ) -> tuple[np.ndarray, np.ndarray]:
-    """Map every packed KV-GATHER row to its (physical page, in-page
-    offset) source: segment i's rows cover its sequence's logical prefix
-    ``[0, spans[i])`` — the chunked-prefill kv side (history + the chunk
-    just scattered). Padding rows read (0, 0); they are masked by the
-    POS_PAD kv position sentinel (causally unreachable), never attended."""
-    src_page = np.zeros((total,), np.int32)
-    src_off = np.zeros((total,), np.int32)
-    for table, o, n in zip(tables, kv_offsets, spans):
-        pos = np.arange(n)
-        src_page[o:o + n] = np.asarray(table, np.int32)[pos // page_size]
-        src_off[o:o + n] = pos % page_size
-    return src_page, src_off
+def paged_prefix_lists(tables: list[list[int]], spans: list[int],
+                       page_size: int, total_pages: int
+                       ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Build the chunked-prefill KV side WITHOUT gathering: segment i's
+    logical prefix ``[0, spans[i])`` (history + the chunk just scattered)
+    stays in the pool, and the kernel reads it through this page list —
+    segment i's ``pages_for(spans[i])`` physical pages packed back-to-back
+    in PAGE-ALIGNED slots. Returns:
+
+      * ``page_list`` (total_pages,) int32 — physical page per kv block;
+        ``-1`` on unused slots (the kernel's index_map never reads them:
+        ``masks.paged_prefill_block_layout`` forces those columns SKIP);
+      * ``kv_seg``  (total_pages*page_size,) int32 — segment id per logical
+        kv row, ``SEG_PAD_KV`` on dead rows (last-page tails + unused
+        slots) so the fused mask kills them on every impl;
+      * ``kv_pos``  (same shape) int32 — position within the segment,
+        ``POS_PAD`` on dead rows (causally unreachable).
+
+    This replaces the per-layer ``gather_sources`` row copy: the host emits
+    page indices once per chunk step; zero KV bytes move per layer."""
+    page_list = np.full((total_pages,), -1, np.int32)
+    rows = total_pages * page_size
+    kv_seg = np.full((rows,), masks.SEG_PAD_KV, np.int32)
+    kv_pos = np.full((rows,), masks.POS_PAD, np.int32)
+    slot = 0
+    for seg, (table, span) in enumerate(zip(tables, spans)):
+        n_pages = pages_for(span, page_size)
+        if slot + n_pages > total_pages:
+            raise ValueError(
+                f"paged_prefix_lists: segment {seg} needs {n_pages} page "
+                f"slots at offset {slot} but only {total_pages} exist — "
+                f"bucket the packed kv length in page multiples")
+        page_list[slot:slot + n_pages] = np.asarray(table, np.int32)[:n_pages]
+        r0 = slot * page_size
+        kv_seg[r0:r0 + span] = seg
+        kv_pos[r0:r0 + span] = np.arange(span)
+        slot += n_pages
+    return page_list, kv_seg, kv_pos
 
 
 def scatter_packed_segments(pool_caches, packed_caches, dest_page, dest_off):

@@ -16,9 +16,12 @@ import numpy as np
 import pytest
 
 from repro.core.attention import (AttentionSpec, decode_attention,
-                                  paged_decode_attention)
+                                  paged_decode_attention,
+                                  paged_prefill_attention)
+from repro.core import masks
 from repro.kernels.flash_decode import flash_decode, flash_decode_paged
 from repro.kernels.ops import flash_attention
+from repro.serve import kv_cache as kvc
 
 # accumulator-order tolerance only: measured max deviation across block
 # configs is ~1e-6 on O(1) values; anything past 1e-4 is a real bug.
@@ -87,6 +90,105 @@ class TestTrainingTileInvariance:
         pinned = dataclasses.replace(auto, block_q=32, block_k=64)
         np.testing.assert_allclose(attention(q, k, v, auto),
                                    attention(q, k, v, pinned), **INV)
+
+
+class TestLoopOrderInvariance:
+    """The forward LOOP ORDER (q-major vs kv-major) and the kv ADDRESSING
+    (gather-based vs paged-in-place prefill) are tuner/engine decisions —
+    so, like tile sizes, they must be observationally pure: outputs AND
+    gradients agree to fp32 accumulator tolerance."""
+
+    @pytest.mark.parametrize("kvm", [False, True])
+    def test_kv_major_fwd_and_grads(self, kvm):
+        """Short-q / long-k causal GQA suffix — the shape kv-major exists
+        for (K/V read once per kv head instead of once per q tile row)."""
+        q, k, v = _qkv(7, 2, 4, 2, 256, 32)
+        q = q[:, :, :64]
+        fn = functools.partial(flash_attention, causal=True, kv_major=kvm)
+        ref = functools.partial(flash_attention, causal=True, kv_major=False)
+        for got, want in zip(_fwd_and_grads(fn, q, k, v),
+                             _fwd_and_grads(ref, q, k, v)):
+            np.testing.assert_allclose(got, want, **INV)
+
+    def test_kv_major_packed_segments(self):
+        """Packed multi-segment call: the kv-major column layout collapse
+        (any-PARTIAL column -> PARTIAL) must preserve segment isolation."""
+        q, k, v = _qkv(8, 2, 2, 2, 128, 16)
+        seg = jnp.asarray(
+            np.repeat([[0, 1, 2, 3], [0, 0, 1, 1]], 32, axis=1))
+        fn = functools.partial(flash_attention, causal=True,
+                               segment_ids=seg, kv_major=True)
+        ref = functools.partial(flash_attention, causal=True,
+                                segment_ids=seg, kv_major=False)
+        for got, want in zip(_fwd_and_grads(fn, q, k, v),
+                             _fwd_and_grads(ref, q, k, v)):
+            np.testing.assert_allclose(got, want, **INV)
+
+    def _paged_chunk_case(self):
+        """A packed 2-segment suffix chunk against a fragmented page pool,
+        with per-segment HISTORY (nonzero chunk starts) — the shape of a
+        forced-preemption resume, where a chunk re-enters mid-prompt and
+        must attend history written by a previous life of the sequence."""
+        hq, hkv, d, ps = 4, 2, 16, 16
+        spans = [48, 40]            # logical prefix per segment (history+chunk)
+        starts = [16, 24]           # chunk q rows resume at these positions
+        lengths = [sp - st for sp, st in zip(spans, starts)]
+        num_pages = 12
+        rng = np.random.default_rng(3)
+        n_pages = [kvc.pages_for(sp, ps) for sp in spans]
+        perm = rng.permutation(num_pages)
+        tables = [perm[:n_pages[0]].tolist(),
+                  perm[n_pages[0]:n_pages[0] + n_pages[1]].tolist()]
+        total_pages = 8             # bucketed past the 6 live page slots
+        page_list, kseg, kpos = kvc.paged_prefix_lists(
+            tables, spans, ps, total_pages)
+
+        sq = sum(lengths)
+        qseg = np.full((sq,), masks.SEG_PAD_Q, np.int32)
+        qpos = np.full((sq,), masks.POS_PAD, np.int32)
+        off = 0
+        for i, (st, n) in enumerate(zip(starts, lengths)):
+            qseg[off:off + n] = i
+            qpos[off:off + n] = np.arange(st, st + n)
+            off += n
+
+        ks = jax.random.split(jax.random.PRNGKey(9), 3)
+        q = jax.random.normal(ks[0], (1, hq, sq, d))
+        k_pool = jax.random.normal(ks[1], (hkv, num_pages, ps, d))
+        v_pool = jax.random.normal(ks[2], (hkv, num_pages, ps, d))
+        arrs = dict(page_list=jnp.asarray(page_list[None]),
+                    q_segment_ids=jnp.asarray(qseg[None]),
+                    kv_segment_ids=jnp.asarray(kseg[None]),
+                    q_positions=jnp.asarray(qpos[None]),
+                    kv_positions=jnp.asarray(kpos[None]))
+        return q, k_pool, v_pool, arrs
+
+    @pytest.mark.parametrize("kvm", [False, True])
+    def test_paged_in_place_matches_gather_fwd_and_grads(self, kvm):
+        """The Pallas in-place paged prefill (page-table BlockSpec
+        indirection) against the XLA gather oracle — same fused mask, two
+        addressing schemes, one function. Grads flow to q AND the pool."""
+        from repro.kernels import ops
+        q, k_pool, v_pool, arrs = self._paged_chunk_case()
+        common = dict(q_segment_ids=arrs["q_segment_ids"],
+                      kv_segment_ids=arrs["kv_segment_ids"],
+                      q_positions=arrs["q_positions"],
+                      kv_positions=arrs["kv_positions"])
+
+        def in_place(q, kp, vp):
+            return ops.flash_prefill_paged(q, kp, vp, arrs["page_list"],
+                                           causal=True, kv_major=kvm,
+                                           **common)
+
+        oracle_spec = AttentionSpec(impl="chunked", causal=True)
+
+        def oracle(q, kp, vp):
+            return paged_prefill_attention(q, kp, vp, arrs["page_list"],
+                                           oracle_spec, **common)
+
+        for got, want in zip(_fwd_and_grads(in_place, q, k_pool, v_pool),
+                             _fwd_and_grads(oracle, q, k_pool, v_pool)):
+            np.testing.assert_allclose(got, want, **INV)
 
 
 class TestDecodeGeometryInvariance:
