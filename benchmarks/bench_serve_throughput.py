@@ -27,8 +27,18 @@ gather-oracle engine is asserted, the eliminated per-layer gather bytes
 are reported (``prefill_gather_bytes_eliminated``), and the io_model
 two-order cost surface must pick kv-major for the suffix-chunk shape.
 
-Wired into ``benchmarks.run --smoke`` (scripts/ci.sh) so scheduler or
-page-table regressions fail CI rather than rotting silently.
+Part 3 (shared-prefix workload, DESIGN.md §12): every request carries the
+same long system prompt. One priming request publishes the prefix pages;
+a warm wave then maps them copy-on-write and prefills only its private
+suffix, against a cold engine (``prefix_cache=False``) running the
+identical workload. Asserted: outputs token-identical, warm-wave hit-rate
+>= 0.9, and the wave's time-to-first-token improves
+(``serve_prefix_hit_ttft_speedup``); the skipped prefill is credited in
+HBM bytes via io_model (``serve_prefix_hbm_bytes_saved``).
+
+Wired into ``benchmarks.run --smoke`` (scripts/ci.sh) so scheduler,
+page-table, or prefix-cache regressions fail CI rather than rotting
+silently.
 """
 
 from __future__ import annotations
@@ -190,6 +200,102 @@ def _mixed_workload(smoke: bool) -> list[tuple[str, float, str]]:
     ]
 
 
+def _shared_prefix_workload(smoke: bool) -> list[tuple[str, float, str]]:
+    """Every request shares one long system prompt: cold engine vs prefix
+    cache. A priming request publishes the prefix pages; the warm wave then
+    maps them read-only and prefills only its private suffix."""
+    prefix_len, chunk = (1024, 256) if smoke else (2048, 512)
+    page_size, n_warm = 64, 10
+    base_kw = dict(num_layers=1, d_model=64, num_heads=2, num_kv_heads=1,
+                   head_dim=32, d_ff=128, vocab_size=256, dtype="float32")
+    cfg = reduced_config("granite-3-2b", **base_kw)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(2)
+    shared = list(rng.integers(1, cfg.vocab_size, size=prefix_len))
+    # suffix-distinct requests: only the suffix differs, so only the suffix
+    # should prefill once the prefix pages are published. [0:lanes] are an
+    # untimed compile warm-up; the rest are the timed wave.
+    lanes = 4
+    suffixes = [list(rng.integers(1, cfg.vocab_size, size=16))
+                for _ in range(n_warm + lanes)]
+    max_new = 4 if smoke else 8
+    prefix_pages = prefix_len // page_size
+
+    def drive(prefix_cache: bool):
+        eng = ServingEngine(
+            model, params, num_slots=lanes, capacity=prefix_len + 128,
+            paged=True, page_size=page_size,
+            num_pages=prefix_pages * 4 + 32,
+            chunk_size=chunk, token_budget=chunk + 64,
+            chunk_kv_bucket=2048, prefix_cache=prefix_cache)
+        # prime: drain one request alone so its prefix pages are published
+        # (zero-ref but retained) before the wave — every warm request then
+        # hits. A full-lane untimed mini-wave then compiles the batched
+        # suffix-chunk shape the hits will use, so TTFT below measures
+        # scheduling, not XLA tracing. The cold engine runs the identical
+        # schedule for fairness.
+        eng.submit(shared + suffixes[0][:4], max_new_tokens=4)
+        eng.run()
+        for s in suffixes[:lanes]:
+            eng.submit(shared + s, max_new_tokens=max_new)
+        eng.run()
+        warmup_rids = {r.rid for r in eng.finished}
+        t0 = time.perf_counter()
+        for s in suffixes[lanes:]:
+            eng.submit(shared + s, max_new_tokens=max_new)
+        state = {"ttft": None}
+
+        def track(e):
+            wave_started = any(r.rid not in warmup_rids and r.output
+                               for r in e.finished) or any(
+                r is not None and r.rid not in warmup_rids and r.output
+                for r in e.slot_req)
+            if state["ttft"] is None and wave_started:
+                state["ttft"] = time.perf_counter() - t0
+        done = eng.run(on_step=track)  # cumulative: prime + warm-up + wave
+        state["dt"] = time.perf_counter() - t0
+        assert len(done) == n_warm + lanes + 1
+        outs = {r.rid: r.output for r in done}
+        state.update(hit_rate=eng.prefix_cache_hit_rate,
+                     hits=eng.prefix_hits, lookups=eng.prefix_lookups,
+                     pages_shared=eng.prefix_pages_shared,
+                     skipped=eng.prefill_tokens_skipped,
+                     hbm_saved=eng.prefill_hbm_bytes_saved)
+        return outs, state
+
+    outs_cold, cold = drive(prefix_cache=False)
+    outs_warm, warm = drive(prefix_cache=True)
+    assert outs_warm == outs_cold, \
+        "prefix-cache hits diverged from cold prefill"
+    # only the prime (published, nothing to hit) misses.
+    assert warm["hit_rate"] >= 0.9, f"hit-rate {warm['hit_rate']:.2f} < 0.9"
+    assert warm["hits"] == n_warm + lanes
+    assert warm["skipped"] == (n_warm + lanes) * prefix_len
+    assert warm["hbm_saved"] > 0
+    assert cold["lookups"] == 0, "cold engine touched the prefix index"
+    assert warm["ttft"] < cold["ttft"], (
+        f"warm wave TTFT {warm['ttft']:.3f}s did not beat cold "
+        f"{cold['ttft']:.3f}s despite skipping {warm['skipped']} tokens")
+
+    return [
+        ("serve_prefix_hit_rate", warm["hit_rate"],
+         f"{warm['hits']}/{warm['lookups']} admissions hit (only the "
+         f"priming request misses); {warm['pages_shared']} pages mapped "
+         f"copy-on-write"),
+        ("serve_prefix_hit_ttft_speedup", cold["ttft"] / warm["ttft"],
+         f"token-identical outputs; {n_warm}-request wave sharing a "
+         f"{prefix_len}-token prefix, chunk={chunk}: warm prefills only "
+         f"the 16-token suffix"),
+        ("serve_prefix_skipped_toks", float(warm["skipped"]),
+         f"prefill tokens never recomputed across the warm requests "
+         f"({prefix_pages} pages x {n_warm + lanes} hits)"),
+        ("serve_prefix_hbm_bytes_saved", float(warm["hbm_saved"]),
+         "io_model-priced HBM traffic the skipped prefill never moves "
+         "(KV writes + Q/O/dO-side streams + per-q-block KV restream)"),
+    ]
+
+
 def run(smoke: bool = False) -> list[tuple[str, float, str]]:
     cfg = reduced_config("granite-3-2b",
                          num_layers=2, d_model=128, num_heads=4,
@@ -237,6 +343,7 @@ def run(smoke: bool = False) -> list[tuple[str, float, str]]:
          f"token-identical outputs; equal HBM budget ({gb} bytes)"),
     ]
     rows += _mixed_workload(smoke)
+    rows += _shared_prefix_workload(smoke)
     return rows
 
 

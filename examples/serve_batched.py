@@ -2,6 +2,7 @@
 
     PYTHONPATH=src python examples/serve_batched.py [--dense]
         [--page-size 16] [--pages 16] [--chunk-size 16 [--token-budget 32]]
+        [--shared-prefix 32] [--no-prefix-cache]
 
 Submits a burst of mixed-length requests — plus, in chunked mode, one
 LONG prompt — against a page pool holding (at the default flags) the HBM
@@ -35,9 +36,21 @@ def main():
                     help="prefill chunk length (paged mode; enables the "
                          "long-prompt demo request)")
     ap.add_argument("--token-budget", type=int, default=None)
+    ap.add_argument("--prefix-cache", dest="prefix_cache",
+                    action="store_true", default=None,
+                    help="copy-on-write page sharing across requests "
+                         "(default: on in paged mode)")
+    ap.add_argument("--no-prefix-cache", dest="prefix_cache",
+                    action="store_false")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="prepend this many identical tokens to every "
+                         "prompt — later requests hit the prefix cache and "
+                         "skip that prefill (watch the summary hit-rate)")
     args = ap.parse_args()
     if args.chunk_size and args.dense:
         ap.error("--chunk-size requires the paged engine (drop --dense)")
+    if args.prefix_cache and args.dense:
+        ap.error("--prefix-cache requires the paged engine (drop --dense)")
 
     cfg = reduced_config("granite-3-2b", num_layers=4, d_model=128,
                          num_heads=4, num_kv_heads=2, head_dim=32,
@@ -47,13 +60,16 @@ def main():
     rng = np.random.default_rng(0)
 
     n_requests = 10
-    prompts = [list(rng.integers(1, cfg.vocab_size,
-                                 size=rng.integers(3, 12))) for _ in range(n_requests)]
+    shared = list(rng.integers(1, cfg.vocab_size, size=args.shared_prefix))
+    prompts = [shared + list(rng.integers(1, cfg.vocab_size,
+                                          size=rng.integers(3, 12)))
+               for _ in range(n_requests)]
     new_tokens = [int(rng.integers(4, 12)) for _ in range(n_requests)]
     if args.chunk_size:
         # one long prompt to demonstrate chunk/decode interleaving: it
         # prefills --chunk-size tokens per step while the shorts decode.
-        prompts.insert(0, list(rng.integers(1, cfg.vocab_size, size=40)))
+        prompts.insert(0, shared + list(rng.integers(1, cfg.vocab_size,
+                                                     size=40)))
         new_tokens.insert(0, 4)
 
     dense_slots, capacity = 4, 64
@@ -71,7 +87,8 @@ def main():
                             capacity=capacity, paged=True,
                             page_size=args.page_size, num_pages=args.pages,
                             chunk_size=args.chunk_size,
-                            token_budget=args.token_budget)
+                            token_budget=args.token_budget,
+                            prefix_cache=args.prefix_cache)
         chunked = (f", chunked prefill {args.chunk_size}t/step"
                    if args.chunk_size else "")
         print(f"paged: {args.pages} pages x {args.page_size} rows "
@@ -80,7 +97,14 @@ def main():
               f"lanes ({eng.cache_bytes()/1e6:.2f} MB pool){chunked}")
 
     t0 = time.perf_counter()
-    for p, n in zip(prompts, new_tokens):
+    burst = list(zip(prompts, new_tokens))
+    if args.shared_prefix and eng.paged and eng.prefix_cache:
+        # prime: drain the first request alone so its prefix pages are
+        # published before the burst — every later request then hits.
+        p, n = burst.pop(0)
+        eng.submit(p, max_new_tokens=n)
+        eng.run()
+    for p, n in burst:
         eng.submit(p, max_new_tokens=n)
     done = eng.run(on_step=ServingEngine.step_stats_printer())
     dt = time.perf_counter() - t0
@@ -89,6 +113,11 @@ def main():
              f"{eng.preemptions} preemptions" if eng.paged else "")
     print(f"{len(done)} requests: {total_tokens} tokens in {dt:.2f}s "
           f"({total_tokens/dt:.1f} tok/s on CPU{extra})")
+    if eng.paged and eng.prefix_cache:
+        print(f"prefix cache: hit-rate {eng.prefix_cache_hit_rate:.0%} "
+              f"({eng.prefix_hits}/{eng.prefix_lookups} admissions), "
+              f"{eng.prefix_pages_shared} pages shared, "
+              f"{eng.prefill_tokens_skipped} prefill tokens skipped")
 
     # verify token-exactness vs per-request greedy
     def greedy(prompt, n):

@@ -4,13 +4,16 @@
 # smoke pass so layout-compiler / harness regressions fail here instead of
 # rotting silently. The smoke set includes bench_serve_throughput, which
 # asserts the paged KV-cache engine beats the dense slot ceiling at equal
-# HBM with token-identical outputs (DESIGN.md §6.5), and the attention
-# sweep's autotune rows (chosen-config vs fixed-128/128 HBM bytes).
+# HBM with token-identical outputs (DESIGN.md §6.5), the shared-prefix
+# workload (prefix-cache hit-rate >= 0.9, warm TTFT beats cold,
+# token-identity — DESIGN.md §12), and the attention sweep's autotune rows
+# (chosen-config vs fixed-128/128 HBM bytes).
 #
 # The kernel autotuner (kernels/tuning.py) gets a write+read roundtrip
 # against a throwaway cache: the first --smoke run times candidates and
-# persists the winner; the second MUST be served from the cache
-# (--expect-hit exits nonzero otherwise).
+# persists the winner (forward, backward, and decode geometries); the
+# second MUST be served from the cache (--expect-hit exits nonzero
+# otherwise).
 set -euo pipefail
 
 cd "$(dirname "$0")/.."

@@ -185,6 +185,30 @@ def gather_hbm_bytes(span: int, d: int, heads_kv: int, elt: int = 2,
     return float(4 * span * d * heads_kv * elt * layers)
 
 
+def prefix_cache_hbm_bytes_saved(cached: int, d: int, heads_q: int,
+                                 heads_kv: int, elt: int = 2,
+                                 layers: int = 1,
+                                 block_q: int = 128) -> float:
+    """HBM traffic a prefix-cache hit avoids: the prefill that never runs.
+
+    A request mapping ``cached`` prompt rows from shared pages skips, per
+    layer, (a) writing those rows' K/V into the pool (``2·cached·d·h_kv``),
+    (b) the q-side traffic of attending them as queries (q read + o/m/l
+    written, ``3·cached·d·h_q``), and (c) re-streaming the causal prefix
+    under them — the q-major Theorem-2 term ``2·N_k·d·T_r·h_q`` with the
+    average causal prefix ``N_k = cached/2`` and ``T_r = ceil(cached/B_q)``
+    q-block sweeps (cf. ``prefill_order_hbm_bytes``). The suffix still
+    pays its own (smaller) cost; this prices only the skipped rows, so the
+    engine can credit a hit in the same units the tuner optimizes."""
+    if cached <= 0:
+        return 0.0
+    t_r = int(np.ceil(cached / block_q))
+    kv_writes = 2 * cached * d * heads_kv
+    q_side = 3 * cached * d * heads_q
+    kv_stream = 2 * (cached / 2) * d * t_r * heads_q
+    return float((kv_writes + q_side + kv_stream) * elt * layers)
+
+
 def kv_major_working_set_bytes(n_q_group: int, block_k: int, d: int,
                                in_elt: int = 4, acc_elt: int = 4,
                                lanes: int = LANES) -> int:

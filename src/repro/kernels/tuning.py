@@ -411,10 +411,15 @@ def _device_kind() -> str:
 def _time_candidates(sq: int, sk: int, head_dim: int, dtype,
                      candidates: list[tuple[int, int, bool]], *,
                      causal: bool, heads_q: int = 2, heads_kv: int = 2,
+                     backward: bool = False,
                      iters: int = 3) -> tuple[int, int, bool, float]:
-    """Time the forward call per ``(block_q, block_k, kv_major)`` candidate
-    on-device, return the winner. Candidates are explicit, so the timed
-    calls never re-enter resolution."""
+    """Time one call per ``(block_q, block_k, kv_major)`` candidate
+    on-device, return the winner. ``backward=True`` times the full
+    fwd+grad pipeline — the split dq (q-major grid) and dkv (kv-major
+    grid) kernels run under the same tile config as the forward, so the
+    winning tile is the one that wins the TRAINING step, not just the
+    forward. Candidates are explicit, so the timed calls never re-enter
+    resolution."""
     import time
 
     import jax
@@ -428,9 +433,14 @@ def _time_candidates(sq: int, sk: int, head_dim: int, dtype,
     v = jax.random.normal(ks[2], (1, heads_kv, sk, head_dim), dtype)
     best: tuple[float, int, int, bool] | None = None
     for bq, bk, kvm in candidates:
-        fn = jax.jit(functools.partial(ops.flash_attention, causal=causal,
-                                       block_q=bq, block_k=bk,
-                                       kv_major=kvm))
+        call = functools.partial(ops.flash_attention, causal=causal,
+                                 block_q=bq, block_k=bk, kv_major=kvm)
+        if backward:
+            fn = jax.jit(jax.grad(
+                lambda a, b, c, _call=call: _call(a, b, c).sum(),
+                argnums=(0, 1, 2)))
+        else:
+            fn = jax.jit(call)
         jax.block_until_ready(fn(q, k, v))          # compile outside timing
         ts = []
         for _ in range(iters):
@@ -458,7 +468,11 @@ def autotune_tiles(sq: int, sk: int, head_dim: int, *, dtype,
     the shape, a kv-major candidate is timed against the q-major ones and
     the winning order is persisted in the entry's ``kv_major`` field (the
     head-group ratio joins the key — the order decision is meaningless
-    across different grouping)."""
+    across different grouping). ``backward=True`` (trainable call sites)
+    times the fwd+grad pipeline — the split dq/dkv kernels share the
+    forward's tiles, and the bwd working set changes which tiles fit —
+    under its own ``|bwd`` key namespace, so inference and training
+    resolutions never serve each other's winner."""
     bucket = seq_bucket(max(sq, sk))
     key = cache_key(_device_kind(), dtype, head_dim, bucket, mask_class)
     if block_q is not None:
@@ -468,6 +482,8 @@ def autotune_tiles(sq: int, sk: int, head_dim: int, *, dtype,
     n_rep = max(1, heads_q // max(heads_kv, 1))
     if n_rep > 1:
         key += f"|g={n_rep}"
+    if backward:
+        key += "|bwd"
     cache = autotune_cache()
     hit = cache.get(key)
     if hit is not None:
@@ -498,7 +514,8 @@ def autotune_tiles(sq: int, sk: int, head_dim: int, *, dtype,
     bq, bk, kvm, t_us = _time_candidates(
         sq=bucket, sk=bucket, head_dim=head_dim, dtype=dtype,
         candidates=cands, causal="causal" in mask_class,
-        heads_q=max(heads_q, 1), heads_kv=max(heads_kv, 1))
+        heads_q=max(heads_q, 1), heads_kv=max(heads_kv, 1),
+        backward=backward)
     cfg = dataclasses.replace(analytic, block_q=bq, block_k=bk,
                               kv_major=kvm, source="autotuned")
     cache.put(key, cfg, t_us)
@@ -736,13 +753,19 @@ def _main() -> None:
           f"block_k={cfg.block_k} source={cfg.source} "
           f"hbm_vs_128x128={chosen / fixed:.3f} cache_hit={hit} "
           f"(hits={cache.hits} misses={cache.misses}) path={cache.path}")
+    bwd = autotune_tiles(seq, seq, args.head_dim, dtype=jnp.float32,
+                         mask_class="causal", backward=True)
+    bwd_hit = bwd.source == "cache"
+    print(f"autotune bwd seq={seq} d={args.head_dim}: block_q={bwd.block_q} "
+          f"block_k={bwd.block_k} source={bwd.source} cache_hit={bwd_hit}")
     dec = autotune_decode_geometry(seq, args.head_dim, dtype=jnp.float32)
     dec_hit = dec.source == "cache"
     print(f"autotune decode cap={seq} d={args.head_dim}: "
           f"block_k={dec.decode_block_k} splits={dec.num_decode_splits} "
           f"source={dec.source} cache_hit={dec_hit}")
-    if args.expect_hit and not (hit and dec_hit):
-        raise SystemExit("expected a cache hit but resolution re-tuned")
+    if args.expect_hit and not (hit and bwd_hit and dec_hit):
+        raise SystemExit("expected a cache hit but resolution re-tuned "
+                         f"(fwd={hit} bwd={bwd_hit} decode={dec_hit})")
 
 
 if __name__ == "__main__":

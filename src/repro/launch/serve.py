@@ -13,7 +13,12 @@ pages (families with recurrent state fall back to dense automatically).
 ``--chunk-size`` splits prompt prefills into fixed-size chunks the
 scheduler interleaves with decode under ``--token-budget`` total tokens
 per step (DESIGN.md §10); ``--temperature``/``--top-p`` switch decode from
-greedy to sampling (per-request keys, preemption-safe). Each step prints
+greedy to sampling (per-request keys, preemption-safe).
+``--shared-prefix N`` prepends the same N tokens to every prompt (the
+system-prompt workload): with the prefix cache on (default in paged mode;
+``--no-prefix-cache`` disables) later requests map those pages read-only
+and skip their prefill — the summary prints hit-rate, pages shared, and
+the HBM bytes saved (DESIGN.md §12). Each step prints
 batch occupancy, page-pool utilization, and the step's prefill/decode
 token split so scheduler behaviour (admission waves, chunk interleaving,
 preemption, reclamation) is visible live."""
@@ -69,6 +74,17 @@ def main():
                     help="decode temperature (0 = greedy); per-request PRNG "
                          "keys persist across preemption")
     ap.add_argument("--top-p", type=float, default=1.0)
+    ap.add_argument("--prefix-cache", dest="prefix_cache",
+                    action="store_true", default=None,
+                    help="share content-identical full prompt pages across "
+                         "requests copy-on-write (default: on in paged mode)")
+    ap.add_argument("--no-prefix-cache", dest="prefix_cache",
+                    action="store_false",
+                    help="disable prefix-cache page sharing")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="prepend this many identical tokens to every "
+                         "prompt (system-prompt workload: later requests "
+                         "hit the prefix cache and skip that prefill)")
     args = ap.parse_args()
 
     tuning.configure_tuning(sram_budget=args.sram_budget,
@@ -81,17 +97,19 @@ def main():
                         paged=False if args.dense else None,
                         page_size=args.page_size, num_pages=args.pages,
                         chunk_size=args.chunk_size,
-                        token_budget=args.token_budget)
+                        token_budget=args.token_budget,
+                        prefix_cache=args.prefix_cache)
     rng = np.random.default_rng(0)
+    shared = list(rng.integers(1, cfg.vocab_size, size=args.shared_prefix))
     t0 = time.perf_counter()
     if args.long_prompt:
-        eng.submit(list(rng.integers(1, cfg.vocab_size,
-                                     size=args.long_prompt)),
+        eng.submit(shared + list(rng.integers(1, cfg.vocab_size,
+                                              size=args.long_prompt)),
                    max_new_tokens=4, temperature=args.temperature,
                    top_p=args.top_p)
     for _ in range(args.requests):
         plen = int(rng.integers(3, 16))
-        eng.submit(list(rng.integers(1, cfg.vocab_size, size=plen)),
+        eng.submit(shared + list(rng.integers(1, cfg.vocab_size, size=plen)),
                    max_new_tokens=int(rng.integers(4, args.max_new)),
                    temperature=args.temperature, top_p=args.top_p)
 
@@ -108,6 +126,14 @@ def main():
              f"preemptions={eng.preemptions}" if eng.paged else "")
     print(f"{len(done)} requests, {tok} tokens in {dt:.2f}s "
           f"({tok/dt:.1f} tok/s{extra})")
+    if eng.paged and eng.prefix_cache:
+        print(f"prefix cache: hit-rate {eng.prefix_cache_hit_rate:.0%} "
+              f"({eng.prefix_hits}/{eng.prefix_lookups} admissions), "
+              f"{eng.prefix_pages_shared} pages shared, "
+              f"{eng.prefill_tokens_skipped} prefill tokens skipped, "
+              f"{eng.prefill_hbm_bytes_saved/1e6:.2f} MB HBM saved, "
+              f"{eng.kv.cached_pages} pages indexed "
+              f"({eng.kv.cache_evictions} evicted under pressure)")
     for r in done[:5]:
         print(f"  req{r.rid}: {len(r.output)} tokens {r.output[:8]}...")
 

@@ -46,9 +46,18 @@ frontend families whose recurrent state cannot be paged) keeps the
 fixed-slot cache and atomic prefill, driven through the same scheduler
 (no page accounting) — it remains the exactness baseline.
 
+Prefix caching (on by default in paged mode, ``prefix_cache=False`` to
+disable): ``submit`` stages the prompt's rolling content hash with the
+allocator, admission maps any indexed full-page prefix read-only into the
+new request's table (scheduler counts only suffix pages), and the chunk
+executors publish pages as their rows materialize — see kv_cache.py and
+DESIGN.md §12. A hit's skipped rows are credited in HBM bytes via
+``io_model.prefix_cache_hbm_bytes_saved``.
+
 ``prefill_calls`` / ``decode_calls`` count model invocations;
 ``preemptions`` / ``peak_active`` / ``kv.utilization()`` expose scheduler
-behaviour (printed by launch/serve.py per step).
+behaviour (printed by launch/serve.py per step); ``prefix_cache_hit_rate``
+/ ``prefill_tokens_skipped`` / ``prefill_hbm_bytes_saved`` the cache.
 """
 
 from __future__ import annotations
@@ -98,7 +107,8 @@ class ServingEngine:
                  page_size: int = 16, num_pages: int | None = None,
                  chunk_size: int | None = None,
                  token_budget: int | None = None,
-                 chunk_kv_bucket: int | None = None):
+                 chunk_kv_bucket: int | None = None,
+                 prefix_cache: bool | None = None):
         self.model = model
         self.params = params
         self.B = num_slots
@@ -131,6 +141,26 @@ class ServingEngine:
             raise ValueError(
                 "chunked prefill appends to paged KV state; the dense slot "
                 "cache only supports atomic prefill (chunk_size=None)")
+        if prefix_cache and not self.paged:
+            raise ValueError(
+                "prefix caching shares pool pages across page tables; the "
+                "dense slot cache has neither (prefix_cache=False)")
+        # Copy-on-write prefix caching (kv_cache.py / DESIGN.md §12): on by
+        # default in paged mode — a miss costs one index walk at admission.
+        self.prefix_cache = self.paged if prefix_cache is None \
+            else bool(prefix_cache)
+        cfg = model.cfg
+        # seeds every content-hash chain: pages must never collide across
+        # model weights / dtype / attention geometry identities.
+        self._model_key = (f"{cfg.name}|{cfg.family}|{cfg.dtype}"
+                           f"|L{cfg.num_layers}|hq{cfg.num_heads}"
+                           f"|hkv{cfg.num_kv_heads}|d{cfg.head_dim}"
+                           f"|V{cfg.vocab_size}")
+        self.prefix_lookups = 0            # admissions with lookup enabled
+        self.prefix_hits = 0               # admissions mapping >= 1 page
+        self.prefix_pages_shared = 0       # pages mapped from the index
+        self.prefill_tokens_skipped = 0    # prompt rows never prefilled
+        self.prefill_hbm_bytes_saved = 0   # io_model credit for those rows
 
         self.requests: dict[int, Request] = {}
         self.slot_req: list[Request | None] = [None] * num_slots
@@ -268,8 +298,23 @@ class ServingEngine:
             seed=rid if seed is None else seed)
         req = Request(rid, list(prompt), max_new_tokens, params=sp)
         self.requests[rid] = req
+        self._stage_prefix(req)
         self.scheduler.submit(rid, len(prompt))
         return rid
+
+    def _stage_prefix(self, req: Request) -> None:
+        """Hand the allocator the rolling content hash of the request's
+        resume tokens (full pages only), keyed by model identity. The
+        scheduler peeks/acquires these at admission; the executor publishes
+        them as the pages' rows materialize. Staging the full-page set is
+        safe — the scheduler clamps ACQUISITION below the last prompt
+        token, so the page a request writes is always private, while a
+        page-aligned prompt's final full page still becomes publishable
+        once this request finishes writing it."""
+        if not self.prefix_cache:
+            return
+        self.kv.stage_prefix(req.rid, kvc.prefix_page_keys(
+            self._model_key, req.resume_tokens, self.page_size))
 
     @property
     def queue(self):
@@ -319,9 +364,22 @@ class ServingEngine:
                                        jnp.asarray(tops)), np.int32)
 
     # ------------------------------------------------------------- bookkeeping
+    def _publish_prefix(self, req: Request, n_rows: int) -> None:
+        """Index req's fully-materialized pages (first ``n_rows`` KV rows
+        are written) under their staged content keys. Called at every
+        chunk boundary — not only at finish — so a request preempted
+        mid-stream has already published its prompt pages and its own
+        resume (or a sibling's admission) can hit them."""
+        if self.prefix_cache:
+            self.kv.publish_prefix(req.rid, n_rows // self.page_size)
+
     def _finish(self, lane: int, req: Request) -> None:
         req.done = True
         self.finished.append(req)
+        if self.paged:
+            # publish before release: zero-ref indexed pages are RETAINED
+            # (LRU) instead of freed — the pool doubles as the cache.
+            self._publish_prefix(req, int(self._kv_len_h[lane]))
         self.scheduler.finish(req.rid)      # frees lane + pages
         self.slot_req[lane] = None
         if self.paged:
@@ -368,6 +426,10 @@ class ServingEngine:
                 req.done = True
                 self.finished.append(req)
                 continue
+            self._stage_prefix(req)     # release dropped the staged keys;
+            # the resume chain's prompt pages hash identically, so a
+            # resumed request re-acquires its OWN retained pages (if LRU
+            # pressure spared them) and re-prefills only what was lost.
             self.scheduler.resubmit_front(rid, len(req.resume_tokens))
             self.preemptions += 1
         if plan.dirty and self.paged:
@@ -397,6 +459,7 @@ class ServingEngine:
         self._paged_dirty = True
         for i, t in enumerate(tasks):
             self._kv_len_h[t.lane] = t.length
+            self._publish_prefix(reqs[i], t.length)
         self._emit_first_tokens(tasks, logits, offsets)
 
     def _emit_first_tokens(self, tasks, logits, offsets) -> None:
@@ -478,8 +541,9 @@ class ServingEngine:
         self.state["caches"] = caches
         self.prefill_calls += 1
         self._paged_dirty = True
-        for t in tasks:
+        for t, r in zip(tasks, reqs):
             self._kv_len_h[t.lane] = t.start + t.length
+            self._publish_prefix(r, t.start + t.length)
         self._emit_first_tokens(tasks, logits, q_off)
 
     # --------------------------------------------- executor: dense prefill
@@ -623,6 +687,7 @@ class ServingEngine:
         for rid, lane in plan.admitted:
             if rid not in evicted:
                 self.slot_req[lane] = self.requests[rid]
+                self._record_prefix_hit(rid)
 
         zero = [t for t in plan.prefill if t.start == 0]
         suffix = [t for t in plan.prefill if t.start > 0]
@@ -668,6 +733,31 @@ class ServingEngine:
         return self.finished
 
     # --------------------------------------------------------- observability
+    def _record_prefix_hit(self, rid: int) -> None:
+        """Account one admission's prefix-cache outcome: rows the scheduler
+        mapped from shared pages are prefill that never runs, credited in
+        HBM bytes through the same Theorem-2 surface the tuner optimizes
+        (``io_model.prefix_cache_hbm_bytes_saved``)."""
+        if not self.prefix_cache:
+            return
+        self.prefix_lookups += 1
+        cached = self.scheduler.by_rid[rid].cached
+        if not cached:
+            return
+        self.prefix_hits += 1
+        self.prefix_pages_shared += cached // self.page_size
+        self.prefill_tokens_skipped += cached
+        cfg = self.model.cfg
+        self.prefill_hbm_bytes_saved += int(
+            io_model.prefix_cache_hbm_bytes_saved(
+                cached, cfg.head_dim, cfg.num_heads, cfg.num_kv_heads,
+                elt=tuning._elt_bytes(cfg.dtype), layers=cfg.num_layers))
+
+    @property
+    def prefix_cache_hit_rate(self) -> float:
+        """Fraction of admissions (lookups) that mapped >= 1 shared page."""
+        return self.prefix_hits / max(1, self.prefix_lookups)
+
     @staticmethod
     def step_stats_printer():
         """``run(on_step=...)`` callback printing per-step batch occupancy

@@ -20,17 +20,34 @@ sequence owns a *page table* mapping its logical kv blocks (positions
     a sequence's pages are scattered through the pool (fragmentation is
     free — the indirection already pays for it).
 
+Copy-on-write **prefix caching** (DESIGN.md §12) rides on the same
+allocator: at production scale most requests share a system prompt or
+few-shot prefix, and the most IO-efficient prefill is the one that never
+runs. Full pages whose token content is known are *published* into a
+content-hash index (a rolling hash chain over ``(model identity, page
+tokens)`` — see ``prefix_page_keys``); a later request whose prompt hashes
+to the same chain *acquires* those pages read-only into its own table
+(per-page refcounts) and prefills only the unseen suffix. Pages released
+by a finished or evicted request drop to refcount 0 but STAY indexed on an
+LRU list; the allocator reclaims them lazily, only when the free list
+runs dry — so the pool doubles as a prefix cache at zero reserved HBM.
+The copy-on-write rule is structural: only FULL pages are ever published
+or acquired, and the hit is clamped below the prompt's last token, so the
+partially-filled boundary page every request writes (suffix rows, then
+decode rows) is always private — a shared page is never written.
+
 This module owns the HOST side: the allocator (free list, per-sequence
-tables, utilization counters) plus the two pure device functions the
-engine jits — the packed-prefill page scatter and the destination-index
-builder. The device pool itself lives in the engine's decode state
-(``Model.init_paged_decode_state``) so it can be donated through the
-decode step.
+tables, refcounts, prefix index, utilization counters) plus the two pure
+device functions the engine jits — the packed-prefill page scatter and
+the destination-index builder. The device pool itself lives in the
+engine's decode state (``Model.init_paged_decode_state``) so it can be
+donated through the decode step.
 """
 
 from __future__ import annotations
 
 import collections
+import hashlib
 
 import jax
 import numpy as np
@@ -39,12 +56,39 @@ from repro.core import masks
 
 __all__ = ["PagedKVCache", "scatter_packed_segments",
            "packed_destinations", "chunk_destinations", "paged_prefix_lists",
-           "pages_for"]
+           "pages_for", "prefix_page_keys"]
 
 
 def pages_for(n_tokens: int, page_size: int) -> int:
     """Pages needed to hold n_tokens cache rows."""
     return -(-max(n_tokens, 0) // page_size)
+
+
+def prefix_page_keys(model_key: str, tokens, page_size: int,
+                     max_pages: int | None = None) -> list[str]:
+    """Rolling content-hash chain over the FULL pages of ``tokens``.
+
+    ``keys[i]`` identifies the KV content of page ``i`` — it hashes the
+    model identity and EVERY token in ``[0, (i+1)*page_size)`` (via the
+    chain), because a KV row at position p is a function of the whole
+    token prefix ``tokens[0..p]``, not of the page's own tokens alone.
+    Two requests therefore share page ``i`` iff their first ``(i+1)``
+    pages of tokens are identical under the same model — a chain-prefix
+    match is exactly the KV-identity condition. ``model_key`` seeds the
+    chain so caches can never collide across model / dtype / shape
+    identities even if an index were ever shared or serialized.
+    """
+    n_full = len(tokens) // page_size
+    if max_pages is not None:
+        n_full = min(n_full, max_pages)
+    keys: list[str] = []
+    h = hashlib.sha256(repr(model_key).encode()).digest()
+    for p in range(n_full):
+        page = np.asarray(tokens[p * page_size:(p + 1) * page_size],
+                          np.int64)
+        h = hashlib.sha256(h + page.tobytes()).digest()
+        keys.append(h.hex())
+    return keys
 
 
 class PagedKVCache:
@@ -55,6 +99,16 @@ class PagedKVCache:
     so sustained churn naturally produces non-contiguous (fragmented)
     tables — which the indirection makes costless, and which the tests
     exercise deliberately.
+
+    Prefix caching adds three structures on top (module docstring /
+    DESIGN.md §12): ``ref`` counts how many tables map each page; the
+    ``index`` maps a rolling content-hash key to the one physical page
+    holding that KV content; ``lru`` holds indexed pages whose refcount is
+    0 — still valid cache, reclaimed lazily (oldest first, deindexing)
+    only when the free list runs dry. A page is thus in exactly one of
+    three states: mapped (ref > 0), retained (ref == 0, on ``lru``), or
+    free. ``free_pages`` counts free + retained — both are allocatable —
+    so admission-budget math is unchanged for callers.
     """
 
     def __init__(self, num_pages: int, page_size: int):
@@ -66,19 +120,35 @@ class PagedKVCache:
         self.page_size = page_size
         self.free: collections.deque[int] = collections.deque(range(num_pages))
         self.tables: dict[int, list[int]] = {}       # rid -> physical pages
+        # --- prefix cache state
+        self.ref: dict[int, int] = {}                # page -> mapping count
+        self.index: dict[str, int] = {}              # content key -> page
+        self.page_key: dict[int, str] = {}           # page -> content key
+        self.lru: collections.OrderedDict[int, None] = collections.OrderedDict()
+        self.staged: dict[int, list[str]] = {}       # rid -> prompt page keys
         # observability
         self.alloc_events = 0
         self.free_events = 0
         self.peak_in_use = 0
+        self.shared_maps = 0          # pages mapped via a prefix hit
+        self.cache_evictions = 0      # retained pages reclaimed under pressure
 
     # ------------------------------------------------------------- accounting
     @property
     def used_pages(self) -> int:
-        return self.num_pages - len(self.free)
+        """Pages some live request maps (ref > 0)."""
+        return self.num_pages - self.free_pages
 
     @property
     def free_pages(self) -> int:
-        return len(self.free)
+        """Allocatable pages: truly free + zero-ref retained cache pages
+        (the LRU list is reclaimed on demand, so it IS budget)."""
+        return len(self.free) + len(self.lru)
+
+    @property
+    def cached_pages(self) -> int:
+        """Pages currently in the content index (mapped or retained)."""
+        return len(self.index)
 
     def utilization(self) -> float:
         return self.used_pages / self.num_pages
@@ -87,24 +157,130 @@ class PagedKVCache:
         return pages_for(n_tokens, self.page_size)
 
     # ------------------------------------------------------------- alloc/free
+    def _take_free_page(self) -> int:
+        """Pop an allocatable page: free list first; under pressure reclaim
+        the LRU-oldest retained page, dropping its index entry."""
+        if self.free:
+            return self.free.popleft()
+        page, _ = self.lru.popitem(last=False)
+        self._deindex(page)
+        self.cache_evictions += 1
+        return page
+
+    def _deindex(self, page: int) -> None:
+        key = self.page_key.pop(page, None)
+        if key is not None and self.index.get(key) == page:
+            del self.index[key]
+
     def alloc(self, rid: int, n_pages: int) -> bool:
-        """Extend rid's table by n_pages. All-or-nothing: returns False
-        (allocating nothing) when the pool cannot satisfy the request."""
-        if n_pages > len(self.free):
+        """Extend rid's table by n_pages of PRIVATE (ref=1, unindexed)
+        pages. All-or-nothing: returns False (allocating nothing) when the
+        pool cannot satisfy the request."""
+        if n_pages > self.free_pages:
             return False
         table = self.tables.setdefault(rid, [])
         for _ in range(n_pages):
-            table.append(self.free.popleft())
+            page = self._take_free_page()
+            self.ref[page] = 1
+            table.append(page)
         self.alloc_events += n_pages
         self.peak_in_use = max(self.peak_in_use, self.used_pages)
         return True
 
     def release(self, rid: int) -> int:
-        """Reclaim all of rid's pages (EOS / finish / preemption)."""
+        """Drop all of rid's page mappings (EOS / finish / preemption).
+
+        Each page's refcount falls by one; only pages nobody else maps
+        actually leave the used set — a sharer's preemption can never free
+        a co-mapped page. Zero-ref pages that hold published (indexed)
+        prefix content are RETAINED on the LRU list instead of freed; the
+        rest go back to the free list. Returns pages that left the used
+        set."""
         table = self.tables.pop(rid, [])
-        self.free.extend(table)
-        self.free_events += len(table)
-        return len(table)
+        self.staged.pop(rid, None)
+        released = 0
+        for page in table:
+            self.ref[page] -= 1
+            if self.ref[page] > 0:
+                continue
+            del self.ref[page]
+            released += 1
+            if page in self.page_key:
+                self.lru[page] = None        # newest at the back
+                self.lru.move_to_end(page)
+            else:
+                self.free.append(page)
+        self.free_events += released
+        return released
+
+    # ---------------------------------------------------------- prefix cache
+    def stage_prefix(self, rid: int, keys: list[str]) -> None:
+        """Declare rid's prompt content: ``keys[i]`` is the rolling hash of
+        its i-th FULL page (``prefix_page_keys``). Staged at submit (and
+        re-staged on preemption resubmit); consumed by peek/acquire at
+        admission and publish at chunk boundaries."""
+        self.staged[rid] = list(keys)
+
+    def peek_prefix(self, rid: int) -> int:
+        """Longest CONTIGUOUS run of rid's staged keys present in the
+        index, without mapping anything. The walk stops at the first miss:
+        the rolling chain means page i is only usable if pages 0..i-1 hit
+        too, and LRU reclaim can evict mid-chain."""
+        n = 0
+        for key in self.staged.get(rid, []):
+            if key not in self.index:
+                break
+            n += 1
+        return n
+
+    def acquire_prefix(self, rid: int, max_pages: int | None = None) -> int:
+        """Map rid's hit prefix pages (read-only share): walk the staged
+        chain, bump each hit page's refcount, append it to rid's table.
+        Retained pages leave the LRU list (they are budget again only when
+        re-released). Returns pages mapped. Caller clamps ``max_pages``
+        below the prompt's last token so the boundary page — the one the
+        request will WRITE — is never shared."""
+        keys = self.staged.get(rid, [])
+        if max_pages is not None:
+            keys = keys[:max_pages]
+        table = self.tables.setdefault(rid, [])
+        if table:
+            raise ValueError(
+                f"acquire_prefix: rid {rid} already holds pages — hits "
+                f"must be mapped before any private allocation")
+        n = 0
+        for key in keys:
+            page = self.index.get(key)
+            if page is None:
+                break
+            if self.ref.get(page, 0) == 0:
+                self.lru.pop(page, None)
+            self.ref[page] = self.ref.get(page, 0) + 1
+            table.append(page)
+            n += 1
+        self.shared_maps += n
+        self.peak_in_use = max(self.peak_in_use, self.used_pages)
+        return n
+
+    def publish_prefix(self, rid: int, n_full_pages: int) -> int:
+        """Index rid's first ``n_full_pages`` pages under their staged keys
+        — called once their KV rows are materialized (chunk scatter /
+        finish). Pages acquired from the index are already keyed and are
+        skipped; a key already indexed to a different page keeps the
+        existing entry (first writer wins — both hold identical content,
+        double-indexing would orphan one). Returns newly indexed pages."""
+        keys = self.staged.get(rid, [])
+        table = self.tables.get(rid, [])
+        new = 0
+        for p in range(min(n_full_pages, len(keys), len(table))):
+            page = table[p]
+            key = keys[p]
+            if self.page_key.get(page) == key or key in self.index:
+                continue
+            self.index[key] = page
+            self.page_key[page] = key
+            new += 1
+        return new
 
     def table(self, rid: int) -> list[int]:
         return self.tables.get(rid, [])

