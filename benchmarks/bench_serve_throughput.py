@@ -36,6 +36,19 @@ identical workload. Asserted: outputs token-identical, warm-wave hit-rate
 (``serve_prefix_hit_ttft_speedup``); the skipped prefill is credited in
 HBM bytes via io_model (``serve_prefix_hbm_bytes_saved``).
 
+Part 4 (tensor-parallel serving, DESIGN.md §13): the same paged workload
+on a ``tp=4`` head-sharded engine vs single-device. Asserted:
+token-identical outputs, per-device resident KV bytes exactly 1/shards of
+the logical pool at equal total concurrency, and a collective census of
+``{"psum"}`` only (no hidden communication inside attention or decode);
+the psum's ring traffic is priced by ``io_model.tp_psum_hbm_bytes``.
+Skipped (with a note) when fewer than 4 devices are visible — scripts/
+ci.sh exports ``--xla_force_host_platform_device_count=8``.
+
+Per-request latency percentiles (``serve_ttft_p50/p95``,
+``serve_tok_latency_p50/p95``) come from the engine's own recorder and
+are direction-aware in ``benchmarks.report`` (lower is better).
+
 Wired into ``benchmarks.run --smoke`` (scripts/ci.sh) so scheduler,
 page-table, or prefix-cache regressions fail CI rather than rotting
 silently.
@@ -296,6 +309,63 @@ def _shared_prefix_workload(smoke: bool) -> list[tuple[str, float, str]]:
     ]
 
 
+def _tp_sharded_workload(smoke: bool) -> list[tuple[str, float, str]]:
+    """The paged workload on a head-sharded ``tp=4`` mesh vs single-device:
+    token identity, per-device KV shrink, and the psum-only census."""
+    tp = 4
+    if jax.device_count() < tp:
+        print(f"  [tp section skipped: {jax.device_count()} device(s) "
+              f"visible, need {tp} — set XLA_FLAGS="
+              f"--xla_force_host_platform_device_count=8]")
+        return []
+    cfg = reduced_config("granite-3-2b",
+                         num_layers=2, d_model=64, num_heads=8,
+                         num_kv_heads=4, head_dim=8, d_ff=128,
+                         vocab_size=256, dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    n_requests = 6 if smoke else 16
+    prompts, new_tokens = _requests(rng, n_requests, cfg.vocab_size)
+    slots, capacity, page_size = 4, 64, 16
+
+    def engine(shards):
+        return ServingEngine(model, params, num_slots=slots,
+                             capacity=capacity, paged=True,
+                             page_size=page_size, tp=shards)
+
+    single = engine(1)
+    sharded = engine(tp)
+    r_single = _drive(single, prompts, new_tokens)
+    r_sharded = _drive(sharded, prompts, new_tokens)
+    assert r_sharded["outs"] == r_single["outs"], \
+        "tp-sharded outputs diverged from single-device"
+    # equal total concurrency, same logical pool — but each device holds
+    # exactly 1/shards of every page (the head slices).
+    assert sharded.cache_bytes() == single.cache_bytes()
+    per_shard = sharded.per_shard_cache_bytes()
+    assert per_shard * tp == sharded.cache_bytes(), (per_shard, tp)
+    census = sharded.decode_collective_census()
+    assert set(census) <= {"psum"}, \
+        f"hidden collectives in the sharded decode step: {census}"
+    # decode's per-token ring-psum HBM traffic (both projection reductions)
+    psum_bytes = io_model.tp_psum_hbm_bytes(
+        slots, cfg.d_model, tp, elt=tuning._elt_bytes(cfg.dtype),
+        reduces_per_layer=2, layers=cfg.num_layers)
+    return [
+        ("serve_tp_per_shard_kv_bytes", float(per_shard),
+         f"tp={tp} head-sharded pool: per-device resident KV is "
+         f"{sharded.cache_bytes()}/{tp} at equal total concurrency "
+         f"(token-identical outputs; census={census or '{}'})"),
+        ("serve_tp_kv_shrink", sharded.cache_bytes() / per_shard,
+         f"logical pool bytes / per-device bytes (= shard count {tp})"),
+        ("serve_tp_psum_bytes_per_decode_step", psum_bytes,
+         f"io_model ring-psum traffic for one {slots}-lane decode step "
+         f"(2 reduces/layer x {cfg.num_layers} layers); attention itself "
+         f"is collective-free — q-head groups co-located with kv heads"),
+    ]
+
+
 def run(smoke: bool = False) -> list[tuple[str, float, str]]:
     cfg = reduced_config("granite-3-2b",
                          num_layers=2, d_model=128, num_heads=4,
@@ -342,8 +412,18 @@ def run(smoke: bool = False) -> list[tuple[str, float, str]]:
          paged.peak_active / dense_slots,
          f"token-identical outputs; equal HBM budget ({gb} bytes)"),
     ]
+    lat = paged.latency_stats()
+    lat_note = (f"paged engine, {n_requests} mixed requests; recorded by "
+                f"the engine per request/token (seconds)")
+    rows += [
+        ("serve_ttft_p50", lat["ttft_p50"], lat_note),
+        ("serve_ttft_p95", lat["ttft_p95"], lat_note),
+        ("serve_tok_latency_p50", lat["tok_latency_p50"], lat_note),
+        ("serve_tok_latency_p95", lat["tok_latency_p95"], lat_note),
+    ]
     rows += _mixed_workload(smoke)
     rows += _shared_prefix_workload(smoke)
+    rows += _tp_sharded_workload(smoke)
     return rows
 
 

@@ -12,7 +12,8 @@ matched by name between runs with the SAME ``smoke`` flag (a smoke run is
 never compared against a full run — the sweep sizes differ).
 
 Direction is inferred from the row name: time/size units (``_us``,
-``_ms``, ``_s``, ``_MB``, ``_GB``, ``_bytes``) regress UP, while
+``_ms``, ``_s``, ``_MB``, ``_GB``, ``_bytes``) and latency percentiles
+(``..ttft_p50``, ``.._latency_p95``) regress UP, while
 throughput/capacity rows (``tok_per_s``, ``_toks``, ``concurrency``,
 ``gain``, ``speedup``) regress DOWN. Everything else (ratios, model
 constants) is reported but never flagged — those rows assert their own
@@ -35,7 +36,7 @@ import sys
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
 
-_LOWER_BETTER = re.compile(r"_(us|ms|s|MB|GB|bytes)$")
+_LOWER_BETTER = re.compile(r"_(us|ms|s|MB|GB|bytes)$|(ttft|latency)_p\d+$")
 _HIGHER_BETTER = re.compile(r"(tok_per_s|_toks$|concurrency|gain|speedup)")
 
 

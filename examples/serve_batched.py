@@ -2,7 +2,7 @@
 
     PYTHONPATH=src python examples/serve_batched.py [--dense]
         [--page-size 16] [--pages 16] [--chunk-size 16 [--token-budget 32]]
-        [--shared-prefix 32] [--no-prefix-cache]
+        [--shared-prefix 32] [--no-prefix-cache] [--tp 2]
 
 Submits a burst of mixed-length requests — plus, in chunked mode, one
 LONG prompt — against a page pool holding (at the default flags) the HBM
@@ -46,11 +46,18 @@ def main():
                     help="prepend this many identical tokens to every "
                          "prompt — later requests hit the prefix cache and "
                          "skip that prefill (watch the summary hit-rate)")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel shards (paged mode): the page "
+                         "pool and projections shard by heads over a (tp,) "
+                         "mesh; needs tp visible devices (CPU: XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
     args = ap.parse_args()
     if args.chunk_size and args.dense:
         ap.error("--chunk-size requires the paged engine (drop --dense)")
     if args.prefix_cache and args.dense:
         ap.error("--prefix-cache requires the paged engine (drop --dense)")
+    if args.tp > 1 and args.dense:
+        ap.error("--tp requires the paged engine (drop --dense)")
 
     cfg = reduced_config("granite-3-2b", num_layers=4, d_model=128,
                          num_heads=4, num_kv_heads=2, head_dim=32,
@@ -88,13 +95,17 @@ def main():
                             page_size=args.page_size, num_pages=args.pages,
                             chunk_size=args.chunk_size,
                             token_budget=args.token_budget,
-                            prefix_cache=args.prefix_cache)
+                            prefix_cache=args.prefix_cache, tp=args.tp)
         chunked = (f", chunked prefill {args.chunk_size}t/step"
                    if args.chunk_size else "")
+        tp_note = (f", tp={args.tp} "
+                   f"({eng.per_shard_cache_bytes()/1e6:.2f} MB/shard)"
+                   if args.tp > 1 else "")
         print(f"paged: {args.pages} pages x {args.page_size} rows "
               f"({cells} cells = {cells / (dense_slots * capacity):.2g}x "
               f"the dense {dense_slots}x{capacity} budget), {lanes} decode "
-              f"lanes ({eng.cache_bytes()/1e6:.2f} MB pool){chunked}")
+              f"lanes ({eng.cache_bytes()/1e6:.2f} MB pool)"
+              f"{chunked}{tp_note}")
 
     t0 = time.perf_counter()
     burst = list(zip(prompts, new_tokens))
@@ -118,6 +129,10 @@ def main():
               f"({eng.prefix_hits}/{eng.prefix_lookups} admissions), "
               f"{eng.prefix_pages_shared} pages shared, "
               f"{eng.prefill_tokens_skipped} prefill tokens skipped")
+    if eng.tp > 1:
+        print(f"tp={eng.tp}: per-shard pool utilization "
+              f"{eng.kv.utilization():.0%} (one logical pool, head-sliced), "
+              f"{eng.per_shard_cache_bytes()/1e6:.2f} MB KV/shard")
 
     # verify token-exactness vs per-request greedy
     def greedy(prompt, n):

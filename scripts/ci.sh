@@ -18,6 +18,15 @@ set -euo pipefail
 
 cd "$(dirname "$0")/.."
 
+# Multi-device host platform (8 fake CPU devices) for the tensor-parallel
+# serving tests and the sharded bench section; must be set before any jax
+# import in the child processes (tests/conftest.py re-applies it for direct
+# pytest invocations). An explicit device count in the caller's XLA_FLAGS
+# wins.
+if [[ "${XLA_FLAGS:-}" != *--xla_force_host_platform_device_count* ]]; then
+    export XLA_FLAGS="${XLA_FLAGS:-} --xla_force_host_platform_device_count=8"
+fi
+
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
 
 echo "== autotune smoke roundtrip (repro.kernels.tuning --smoke) =="
@@ -26,6 +35,12 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m repro.kernels.tuning --smoke --cache "$TUNE_CACHE"
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m repro.kernels.tuning --smoke --cache "$TUNE_CACHE" --expect-hit
+# per-shard tile resolution (--tp 4 namespaces the cache key with |tp4):
+# distinct entries from the single-shard run above, same roundtrip contract.
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m repro.kernels.tuning --smoke --cache "$TUNE_CACHE" --tp 4
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m repro.kernels.tuning --smoke --cache "$TUNE_CACHE" --tp 4 --expect-hit
 
 echo "== benchmark smoke (benchmarks.run --smoke) =="
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.run --smoke

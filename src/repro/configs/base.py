@@ -85,6 +85,16 @@ class ModelConfig:
                                          # (contiguous AND paged caches);
                                          # False = XLA softmax parity path
 
+    # ---- tensor parallelism (serving; DESIGN.md §13) ----
+    # tp_axis names the mesh axis the block functions psum over at the two
+    # projection boundaries (attention wo, MLP w_down). tp_shards is the
+    # GLOBAL shard count carried for tile resolution (the per-shard tuning
+    # cache key) even inside shard_map where only local shapes are visible.
+    # A config used INSIDE a shard_map body must hold the PER-SHARD head
+    # counts (num_heads/tp, num_kv_heads/tp) — weight slices then match.
+    tp_axis: str | None = None
+    tp_shards: int = 1
+
     def __post_init__(self):
         if self.head_dim == 0:
             object.__setattr__(self, "head_dim", self.d_model // max(self.num_heads, 1))

@@ -67,6 +67,11 @@ class AttentionSpec:
     unroll_chunks: bool = False     # dry-run cost probes only
     pv_bf16: bool = False           # cast P to bf16 for P@V (f32 accumulate)
     banded_window: bool = False     # banded layout for sliding-window attn
+    tp_shards: int = 1              # tensor-parallel shard count of the
+                                    # calling step: joins the tuning cache
+                                    # key and biases tile choice toward
+                                    # per-shard grid occupancy (head counts
+                                    # seen here are then per-shard)
 
 
 def attention(
@@ -108,7 +113,7 @@ def attention(
         return kops.flash_attention(
             q, k, v, dropout_p=dropout_p, dropout_seed=dropout_seed,
             block_q=spec.block_q, block_k=spec.block_k, variant=spec.variant,
-            block_layout=block_layout, **common)
+            block_layout=block_layout, shards=spec.tp_shards, **common)
     if spec.impl == "chunked":
         if dropout_p > 0.0:
             # chunked XLA path does not implement attention-matrix dropout;
@@ -144,7 +149,8 @@ def decode_attention(
         return flash_decode(q, k_cache, v_cache, kv_len,
                             scale=scale, block_k=spec.block_k,
                             num_splits=spec.num_decode_splits,
-                            window=spec.window, kv_mask=kv_mask)
+                            window=spec.window, kv_mask=kv_mask,
+                            shards=spec.tp_shards)
     # XLA path: GQA-NATIVE masked softmax over the cache. q is reshaped to
     # (b, hkv, rep, 1, d) and contracted against the UNEXPANDED cache —
     # repeat_kv would broadcast-materialize the cache and force GSPMD to
@@ -211,7 +217,8 @@ def paged_prefill_attention(
             q_positions=q_positions, kv_positions=kv_positions,
             q_segment_ids=q_segment_ids, kv_segment_ids=kv_segment_ids,
             causal=spec.causal, window=spec.window, scale=scale,
-            block_q=spec.block_q, variant=spec.variant)
+            block_q=spec.block_q, variant=spec.variant,
+            shards=spec.tp_shards)
     hkv, num_pages, page_size, d = k_pool.shape
     b, T = page_list.shape
     safe = jnp.clip(page_list, 0, num_pages - 1)
@@ -251,7 +258,8 @@ def paged_decode_attention(
         return flash_decode_paged(q, k_pool, v_pool, page_table, kv_len,
                                   scale=scale,
                                   num_splits=spec.num_decode_splits,
-                                  window=spec.window)
+                                  window=spec.window,
+                                  shards=spec.tp_shards)
     hkv, num_pages, page_size, d = k_pool.shape
     b, T = page_table.shape
     safe = jnp.clip(page_table, 0, num_pages - 1)

@@ -265,3 +265,41 @@ def decode_working_set_bytes(block_k: int, d: int, in_elt: int = 4,
     accumulator scratch."""
     return int(2 * block_k * d * in_elt + block_k * acc_elt
                + d * acc_elt + 2 * lanes * acc_elt)
+
+
+# ---------------------------------------------------------------------------
+# Tensor-parallel serving costs (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+def tp_psum_hbm_bytes(n_tokens: int, d_model: int, shards: int,
+                      elt: int = 2, reduces_per_layer: int = 2,
+                      layers: int = 1) -> float:
+    """Per-device bytes moved by the projection-boundary all-reduces of one
+    tensor-parallel step (ring psum: each device sends+receives
+    ``2 * (shards-1)/shards`` of the payload per reduce).
+
+    The head-sharded serving layout needs exactly TWO reduces per layer —
+    the attention-output and MLP down projections — and nothing inside
+    attention/decode itself (GQA co-location), so this IS the step's whole
+    communication tax. The payload is the activation tile
+    ``n_tokens x d_model`` (logits never reduce: lm_head is replicated).
+    """
+    if shards <= 1:
+        return 0.0
+    payload = n_tokens * d_model * elt
+    return float(2.0 * (shards - 1) / shards * payload
+                 * reduces_per_layer * layers)
+
+
+def tp_sharded_hbm_bytes(total_bytes: float, shards: int,
+                         n_tokens: int = 0, d_model: int = 0,
+                         elt: int = 2, reduces_per_layer: int = 2,
+                         layers: int = 1) -> float:
+    """Per-device HBM cost of a head-sharded attention step: the unsharded
+    attention traffic divided over the shards (Q/K/V/O and the page pool
+    all shard on heads) PLUS the psum bytes — the surface the report uses
+    to show the real communication tax of going tensor-parallel."""
+    local = float(total_bytes) / max(1, int(shards))
+    return local + tp_psum_hbm_bytes(n_tokens, d_model, shards, elt=elt,
+                                     reduces_per_layer=reduces_per_layer,
+                                     layers=layers)

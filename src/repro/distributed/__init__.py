@@ -1,5 +1,7 @@
-from repro.distributed.meshes import data_axis_names, make_mesh, num_data_shards  # noqa: F401
-from repro.distributed.sharding import (DEFAULT_RULES, resolve_spec,  # noqa: F401
+from repro.distributed.meshes import (data_axis_names, make_mesh,  # noqa: F401
+                                      num_data_shards, tp_mesh)
+from repro.distributed.sharding import (DEFAULT_RULES, COLLECTIVE_PRIMS,  # noqa: F401
+                                        collective_census, resolve_spec,
                                         resolve_tree, rules_for_mesh,
-                                        validate_divisibility)
+                                        tp_serve_rules, validate_divisibility)
 from repro.distributed.zero import zero1_state_specs  # noqa: F401

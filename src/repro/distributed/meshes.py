@@ -21,6 +21,23 @@ def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]) -> Mesh:
     return jax.make_mesh(shape, axes)
 
 
+def tp_mesh(num_shards: int) -> Mesh:
+    """Flat ``("tp",)`` mesh over the first ``num_shards`` visible devices —
+    the serving engine's tensor-parallel mesh (DESIGN.md §13). Unlike
+    ``make_mesh`` the shard count need not equal the device count: a tp=2
+    engine on an 8-device host uses devices [0, 1]."""
+    import numpy as np
+    devs = jax.devices()
+    if num_shards < 1:
+        raise ValueError(f"tp mesh needs >= 1 shard, got {num_shards}")
+    if num_shards > len(devs):
+        raise ValueError(
+            f"tp={num_shards} exceeds the {len(devs)} visible device(s); "
+            f"on CPU set XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{num_shards} BEFORE jax initializes")
+    return Mesh(np.asarray(devs[:num_shards]), ("tp",))
+
+
 def data_axis_names(mesh: Mesh) -> tuple[str, ...]:
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
 

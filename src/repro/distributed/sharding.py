@@ -31,6 +31,18 @@ DEFAULT_RULES: dict[str, Any] = {
 }
 
 
+def tp_serve_rules() -> dict[str, Any]:
+    """Rule table for the tensor-parallel serving engine (DESIGN.md §13).
+
+    ONLY heads and the FFN hidden dim shard over "tp": embed/vocab stay
+    replicated so activations and logits are replicated once the two
+    projection psums run (sampling then needs no collective), and the page
+    pool's page dim stays host-global — the pool shards over HEADS, page
+    indices are valid on every shard (one logical pool, per-shard slices).
+    """
+    return {"heads": "tp", "ff": "tp"}
+
+
 def rules_for_mesh(mesh: Mesh, overrides: Mapping[str, Any] | None = None):
     rules = dict(DEFAULT_RULES)
     if "pod" in mesh.axis_names:
@@ -130,13 +142,15 @@ def validate_divisibility(shapes_tree, specs_tree, mesh: Mesh,
 
     def check(path, shape, spec):
         phys = resolve_spec(spec, rules)
-        for dim, entry in zip(shape, phys):
+        for i, (dim, entry) in enumerate(zip(shape, phys)):
             if entry is None:
                 continue
             axes = entry if isinstance(entry, tuple) else (entry,)
             n = int(np.prod([mesh.shape[a] for a in axes]))
             if dim % n != 0:
-                problems.append(f"{path}: dim {dim} % {axes}={n} != 0")
+                problems.append(
+                    f"{path}: shape {tuple(shape)} spec {phys} — dim[{i}]="
+                    f"{dim} not divisible by mesh axes {axes} (size {n})")
 
     def walk(path, shapes, specs):
         if _is_spec(specs):
@@ -151,3 +165,51 @@ def validate_divisibility(shapes_tree, specs_tree, mesh: Mesh,
 
     walk("", shapes_tree, specs_tree)
     return problems
+
+
+# ---------------------------------------------------------------------------
+# Collective census (the tp-serving "no hidden communication" assertion)
+# ---------------------------------------------------------------------------
+
+COLLECTIVE_PRIMS = frozenset({
+    "psum", "pmax", "pmin", "all_gather", "all_to_all", "ppermute",
+    "reduce_scatter", "psum_scatter", "pgather",
+})
+
+
+def collective_census(jaxpr) -> dict[str, int]:
+    """Count collective primitives in a (closed) jaxpr, recursing through
+    every sub-jaxpr (shard_map bodies, scan bodies, custom_vjp branches).
+
+    The tp-serving invariant this backs (DESIGN.md §13): a head-sharded
+    decode/prefill step's census is ``{"psum": 2}`` per layer trace — the
+    attention-output and MLP down projections — and NOTHING else; attention
+    itself, the paged cache writes, and sampling are communication-free
+    because each q-head group is co-located with its kv head.
+    """
+    import jax as _jax
+
+    counts: dict[str, int] = {}
+
+    def _maybe(v):
+        if isinstance(v, _jax.core.ClosedJaxpr):
+            walk(v.jaxpr)
+        elif isinstance(v, _jax.core.Jaxpr):
+            walk(v)
+        elif isinstance(v, (list, tuple)):
+            for x in v:
+                _maybe(x)
+        elif isinstance(v, dict):
+            for x in v.values():
+                _maybe(x)
+
+    def walk(j):
+        for eq in j.eqns:
+            name = eq.primitive.name
+            if name in COLLECTIVE_PRIMS:
+                counts[name] = counts.get(name, 0) + 1
+            for v in eq.params.values():
+                _maybe(v)
+
+    walk(jaxpr.jaxpr if hasattr(jaxpr, "jaxpr") else jaxpr)
+    return counts

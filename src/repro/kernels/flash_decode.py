@@ -111,6 +111,8 @@ def flash_decode(
     window: int | None = None,
     kv_mask: jax.Array | None = None,   # (b, sk) True = valid cache slot
     interpret: bool | None = None,
+    shards: int = 1,                    # tensor-parallel shard count (per-
+                                        # shard split target + tuning key)
 ) -> jax.Array:
     """One-token attention against a fixed-capacity KV cache. Returns
     (b, hq, 1, d). GQA handled via kv index_map. ``window`` keeps only the
@@ -133,7 +135,7 @@ def flash_decode(
         interpret = jax.default_backend() != "tpu"
 
     block_k, num_splits = tuning.resolve_decode_geometry(
-        sk, block_k, num_splits, head_dim=d, dtype=k.dtype)
+        sk, block_k, num_splits, head_dim=d, dtype=k.dtype, shards=shards)
     nk_in = (sk // block_k) // num_splits
 
     kvm = kv_mask
@@ -251,6 +253,8 @@ def flash_decode_paged(
     num_splits: int | None = None,     # None = resolve via kernels.tuning
     window: int | None = None,
     interpret: bool | None = None,
+    shards: int = 1,                   # tensor-parallel shard count (per-
+                                       # shard split target + tuning key)
 ) -> jax.Array:
     """Split-KV decode against a PAGED KV cache (DESIGN.md §6).
 
@@ -279,7 +283,7 @@ def flash_decode_paged(
     if num_splits is None:
         _, num_splits = tuning.resolve_decode_geometry(
             T * page_size, None, None, head_dim=d, dtype=k_pool.dtype,
-            page_size=page_size)
+            page_size=page_size, shards=shards)
     num_splits = validate_paged_decode_geometry(T, num_splits)
     t_in = T // num_splits
 

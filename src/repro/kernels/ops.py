@@ -133,6 +133,8 @@ def flash_attention(
     kv_positions: jax.Array | None = None,    # (b, sk) logical positions
     kv_major: bool | None = None,      # None = loop order resolved via tuning
     interpret: bool | None = None,
+    shards: int = 1,                   # tensor-parallel shard count of the
+                                       # calling step (per-shard tuning key)
 ) -> jax.Array:
     """Differentiable FlashAttention (Pallas). Pads seq dims to block
     multiples internally; GQA inferred from head counts. Every call's mask
@@ -188,7 +190,7 @@ def flash_attention(
     if block_q is None or block_k is None:
         tiles = tuning.resolve_tiles(
             block_q, block_k, sq=sq, sk=sk, head_dim=d, dtype=q.dtype,
-            heads_q=hq, heads_kv=hkv,
+            heads_q=hq, heads_kv=hkv, shards=shards,
             mask_class=tuning.mask_class_of(
                 causal=causal, window=window,
                 has_kv_mask=kv_mask is not None,
@@ -356,6 +358,8 @@ def flash_prefill_paged(
     variant: str = "fa2",
     kv_major: bool | None = None,      # None = loop order resolved via tuning
     interpret: bool | None = None,
+    shards: int = 1,                   # tensor-parallel shard count of the
+                                       # calling step (per-shard tuning key)
 ) -> jax.Array:
     """Differentiable FlashAttention over a PAGED kv prefix, read in place.
 
@@ -395,7 +399,7 @@ def flash_prefill_paged(
     if block_q is None:
         tiles = tuning.resolve_tiles(
             block_q, ps, sq=sq, sk=sk, head_dim=d, dtype=q.dtype,
-            heads_q=hq, heads_kv=hkv,
+            heads_q=hq, heads_kv=hkv, shards=shards,
             mask_class=tuning.mask_class_of(
                 causal=causal, window=window, has_kv_mask=False,
                 has_segments=has_seg, has_sparse=False, has_positions=True))

@@ -49,6 +49,10 @@ LANES = io_model.LANES
 SUBLANES = io_model.SUBLANES
 MAX_BLOCK = 1024           # beyond this the S tile alone dwarfs any win
 TARGET_DECODE_SPLITS = 8   # split-KV parallelism target (cores/megacore)
+TARGET_GRID_CELLS = 8      # per-device (head, q-block) cells a sharded
+                           # call should keep busy: with heads/tp local
+                           # heads, block_q shrinks to recover grid
+                           # parallelism lost to the head shard
 
 _DTYPE_BYTES = {
     "float32": 4, "f32": 4, "bfloat16": 2, "bf16": 2, "float16": 2,
@@ -186,6 +190,15 @@ def _divisors_desc(n: int) -> list[int]:
     return [d for d in range(n, 0, -1) if n % d == 0]
 
 
+def decode_split_target(shards: int = 1,
+                        target_splits: int = TARGET_DECODE_SPLITS) -> int:
+    """Split-KV parallelism target per device. Under tensor parallelism each
+    shard's decode grid is ``(heads/tp) * num_splits`` cells — the head axis
+    shrank by ``tp``, so the split count scales UP by ``tp`` to keep the
+    per-device grid occupancy constant (per-shard geometry, DESIGN.md §13)."""
+    return int(target_splits) * max(1, int(shards))
+
+
 def choose_decode_geometry(capacity: int, head_dim: int, *,
                            elt: int = 4, budget: int | None = None,
                            target_splits: int = TARGET_DECODE_SPLITS,
@@ -276,7 +289,8 @@ def _analytic_choice(sq: int, sk: int, head_dim: int, elt: int,
                      backward: bool, budget: int,
                      fixed_bq: int | None, fixed_bk: int | None,
                      decode_capacity: int | None,
-                     heads_q: int = 1, heads_kv: int = 1) -> TileConfig:
+                     heads_q: int = 1, heads_kv: int = 1,
+                     shards: int = 1) -> TileConfig:
     bq_cands = [fixed_bq] if fixed_bq is not None else _aligned_candidates(sq)
     bk_cands = [fixed_bk] if fixed_bk is not None else _aligned_candidates(sk)
     best: tuple | None = None
@@ -288,14 +302,22 @@ def _analytic_choice(sq: int, sk: int, head_dim: int, elt: int,
             hbm = io_model.flash_hbm_bytes_tiled(
                 sq, sk, head_dim, 1, 1, bq, bk, elt=elt,
                 fwd_and_bwd=backward)
+            # Sharded calls see only heads/tp local heads, so the (head,
+            # q-block) grid can collapse to a couple of cells; prefer tiles
+            # that keep TARGET_GRID_CELLS cells busy per device before
+            # minimizing HBM bytes (HBM traffic is tile-size-flat near the
+            # optimum; idle cores are not). Unsharded calls (shards == 1)
+            # rank exactly as before.
+            par_ok = (shards <= 1
+                      or max(1, heads_q) * -(-sq // bq) >= TARGET_GRID_CELLS)
             # rank: fitting first; among fitting, fewest HBM bytes then the
             # larger tile (fewer grid steps at equal traffic); among
             # non-fitting (caller pinned an over-budget tile, or the budget
             # is below one minimal tile) the smallest working set.
-            key = (fits, -hbm if fits else -ws, bq + bk, bk)
-            if best is None or key > best[:4]:
+            key = (fits, par_ok, -hbm if fits else -ws, bq + bk, bk)
+            if best is None or key > best[:5]:
                 best = key + (bq, bk)
-    bq, bk = best[4], best[5]
+    bq, bk = best[5], best[6]
     # Loop-order decision: kv-major holds the WHOLE grouped q side
     # resident, so its kv tile is chosen independently of the q-major
     # optimum above — the largest candidate that still fits beside the
@@ -323,19 +345,24 @@ def choose_tile_config(sq: int, sk: int, head_dim: int, *,
                        decode_capacity: int | None = None,
                        block_q: int | None = None,
                        block_k: int | None = None,
-                       heads_q: int = 1, heads_kv: int = 1) -> TileConfig:
+                       heads_q: int = 1, heads_kv: int = 1,
+                       shards: int = 1) -> TileConfig:
     """Analytic tile choice (see module docstring). Explicit ``block_q`` /
     ``block_k`` pin that axis and the chooser fills the rest. ``heads_q`` /
     ``heads_kv`` feed the LOOP-ORDER decision: with them the chooser costs
     both grid orders (``io_model.prefill_order_hbm_bytes``) and sets
     ``kv_major`` when the transposed resident-group order strictly wins
-    and fits — the short-N_q/long-N_k serving shapes."""
+    and fits — the short-N_q/long-N_k serving shapes. ``shards`` > 1 means
+    the call runs inside a ``tp``-sharded step with PER-SHARD head counts
+    in ``heads_q``/``heads_kv``: the chooser then also keeps per-device
+    grid occupancy above ``TARGET_GRID_CELLS`` (block_q shrinks with the
+    local head count)."""
     budget = (sram_budget() if sram_budget_bytes is None
               else int(sram_budget_bytes))
     return _analytic_choice(int(sq), int(sk), int(head_dim),
                             _elt_bytes(dtype), bool(backward), budget,
                             block_q, block_k, decode_capacity,
-                            int(heads_q), int(heads_kv))
+                            int(heads_q), int(heads_kv), int(shards))
 
 
 # ---------------------------------------------------------------------------
@@ -351,9 +378,16 @@ def seq_bucket(n: int) -> int:
 
 
 def cache_key(device_kind: str, dtype: Any, head_dim: int, bucket: int,
-              mask_class: str) -> str:
-    return f"{device_kind}|{_dtype_name(dtype)}|{head_dim}|" \
-           f"{bucket}|{mask_class}"
+              mask_class: str, shards: int = 1) -> str:
+    """Autotune cache key. ``shards`` > 1 namespaces tensor-parallel
+    resolutions (``|tpN``): the per-shard head count changes which tiles
+    win, so a sharded entry must never serve — or be served by — the
+    single-device one."""
+    key = f"{device_kind}|{_dtype_name(dtype)}|{head_dim}|" \
+          f"{bucket}|{mask_class}"
+    if shards > 1:
+        key += f"|tp{int(shards)}"
+    return key
 
 
 class AutotuneCache:
@@ -458,7 +492,8 @@ def autotune_tiles(sq: int, sk: int, head_dim: int, *, dtype,
                    max_candidates: int = 4,
                    block_q: int | None = None,
                    block_k: int | None = None,
-                   heads_q: int = 1, heads_kv: int = 1) -> TileConfig:
+                   heads_q: int = 1, heads_kv: int = 1,
+                   shards: int = 1) -> TileConfig:
     """Empirical resolution: cache lookup, else time the analytic chooser's
     top fitting candidates and persist the winner. A pinned ``block_q`` /
     ``block_k`` axis CONSTRAINS the candidate list (only combinations that
@@ -474,7 +509,8 @@ def autotune_tiles(sq: int, sk: int, head_dim: int, *, dtype,
     under its own ``|bwd`` key namespace, so inference and training
     resolutions never serve each other's winner."""
     bucket = seq_bucket(max(sq, sk))
-    key = cache_key(_device_kind(), dtype, head_dim, bucket, mask_class)
+    key = cache_key(_device_kind(), dtype, head_dim, bucket, mask_class,
+                    shards=shards)
     if block_q is not None:
         key += f"|bq={block_q}"
     if block_k is not None:
@@ -491,7 +527,8 @@ def autotune_tiles(sq: int, sk: int, head_dim: int, *, dtype,
     analytic = choose_tile_config(bucket, bucket, head_dim, dtype=dtype,
                                   backward=backward,
                                   block_q=block_q, block_k=block_k,
-                                  heads_q=heads_q, heads_kv=heads_kv)
+                                  heads_q=heads_q, heads_kv=heads_kv,
+                                  shards=shards)
     budget = sram_budget()
     elt = _elt_bytes(dtype)
     cands: list[tuple[int, int, bool]] = [
@@ -578,7 +615,8 @@ def _time_decode_candidates(capacity: int, head_dim: int, dtype,
 def autotune_decode_geometry(capacity: int, head_dim: int, *, dtype,
                              page_size: int | None = None,
                              target_splits: int = TARGET_DECODE_SPLITS,
-                             max_candidates: int = 4) -> TileConfig:
+                             max_candidates: int = 4,
+                             shards: int = 1) -> TileConfig:
     """Empirical decode resolution: time ``(decode_block_k, num_splits)``
     candidates and persist the winner — the ROADMAP "Autotune coverage"
     item. Keyed by EXACT capacity (not the pow-2 bucket): split validity is
@@ -589,6 +627,9 @@ def autotune_decode_geometry(capacity: int, head_dim: int, *, dtype,
     kind = f"paged{page_size}" if page_size is not None else "contig"
     key = (f"decode|{_device_kind()}|{_dtype_name(dtype)}|{head_dim}|"
            f"{capacity}|{kind}")
+    if shards > 1:
+        key += f"|tp{int(shards)}"
+        target_splits = decode_split_target(shards, target_splits)
     cache = autotune_cache()
     hit = cache.get(key)
     if hit is not None and hit.decode_block_k is not None:
@@ -639,7 +680,8 @@ def resolve_tiles(block_q: int | None, block_k: int | None, *,
                   sq: int, sk: int, head_dim: int, dtype: Any,
                   mask_class: str = "dense",
                   backward: bool = True,
-                  heads_q: int = 1, heads_kv: int = 1) -> TileConfig:
+                  heads_q: int = 1, heads_kv: int = 1,
+                  shards: int = 1) -> TileConfig:
     """THE audited decision point for training/prefill tiles.
 
     Explicit (non-``None``) values pass through untouched; ``None`` means
@@ -648,7 +690,10 @@ def resolve_tiles(block_q: int | None, block_k: int | None, *,
     sequence lengths: resolution works on the padded geometry.
     ``heads_q``/``heads_kv`` inform the loop-order (``kv_major``) decision;
     a call that pins both blocks has opted out of resolution entirely, so
-    its config keeps the default q-major order.
+    its config keeps the default q-major order. ``shards`` is the tensor-
+    parallel shard count of the calling step (1 = unsharded): it joins the
+    autotune cache key and biases the chooser toward per-device grid
+    occupancy, since ``heads_q``/``heads_kv`` are then per-shard counts.
     """
     if block_q is not None and block_k is not None:
         return TileConfig(block_q=int(block_q), block_k=int(block_k),
@@ -657,11 +702,13 @@ def resolve_tiles(block_q: int | None, block_k: int | None, *,
         return autotune_tiles(sq, sk, head_dim, dtype=dtype,
                               mask_class=mask_class, backward=backward,
                               block_q=block_q, block_k=block_k,
-                              heads_q=heads_q, heads_kv=heads_kv)
+                              heads_q=heads_q, heads_kv=heads_kv,
+                              shards=shards)
     return choose_tile_config(sq, sk, head_dim, dtype=dtype,
                               backward=backward,
                               block_q=block_q, block_k=block_k,
-                              heads_q=heads_q, heads_kv=heads_kv)
+                              heads_q=heads_q, heads_kv=heads_kv,
+                              shards=shards)
 
 
 def resolve_decode_geometry(capacity: int, block_k: int | None,
@@ -669,7 +716,7 @@ def resolve_decode_geometry(capacity: int, block_k: int | None,
                             dtype: Any = "float32",
                             page_size: int | None = None,
                             target_splits: int = TARGET_DECODE_SPLITS,
-                            ) -> tuple[int, int]:
+                            shards: int = 1) -> tuple[int, int]:
     """Resolve decode ``(block_k, num_splits)`` for a contiguous or paged
     cache. For a paged cache the kv block IS the page (allocation-unit
     invariant, DESIGN.md §6.5): an explicit conflicting ``block_k`` is
@@ -687,8 +734,12 @@ def resolve_decode_geometry(capacity: int, block_k: int | None,
         # The timed candidates pass explicit geometry, so no re-entry here.
         cfg = autotune_decode_geometry(capacity, head_dim, dtype=dtype,
                                        page_size=page_size,
-                                       target_splits=target_splits)
+                                       target_splits=target_splits,
+                                       shards=shards)
         block_k, num_splits = cfg.decode_block_k, cfg.num_decode_splits
+    if shards > 1:
+        # per-shard geometry: the head grid shrank by tp, splits scale up
+        target_splits = decode_split_target(shards, target_splits)
 
     if page_size is not None:
         if block_k is not None and int(block_k) != int(page_size):
@@ -735,6 +786,9 @@ def _main() -> None:
                     help="fail unless resolution was served from the cache")
     ap.add_argument("--seq", type=int, default=None)
     ap.add_argument("--head-dim", type=int, default=64)
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel shard count: resolve against the "
+                         "per-shard cache-key namespace (|tpN)")
     args = ap.parse_args()
 
     configure_tuning(sram_budget=args.sram_budget, autotune=True,
@@ -742,7 +796,8 @@ def _main() -> None:
     seq = args.seq if args.seq is not None else (256 if args.smoke else 2048)
     import jax.numpy as jnp
     cfg = autotune_tiles(seq, seq, args.head_dim, dtype=jnp.float32,
-                         mask_class="causal", backward=False)
+                         mask_class="causal", backward=False,
+                         shards=args.tp)
     cache = autotune_cache()
     fixed = io_model.flash_hbm_bytes_tiled(seq, seq, args.head_dim, 1, 1,
                                            128, 128, elt=4)
@@ -754,11 +809,13 @@ def _main() -> None:
           f"hbm_vs_128x128={chosen / fixed:.3f} cache_hit={hit} "
           f"(hits={cache.hits} misses={cache.misses}) path={cache.path}")
     bwd = autotune_tiles(seq, seq, args.head_dim, dtype=jnp.float32,
-                         mask_class="causal", backward=True)
+                         mask_class="causal", backward=True,
+                         shards=args.tp)
     bwd_hit = bwd.source == "cache"
     print(f"autotune bwd seq={seq} d={args.head_dim}: block_q={bwd.block_q} "
           f"block_k={bwd.block_k} source={bwd.source} cache_hit={bwd_hit}")
-    dec = autotune_decode_geometry(seq, args.head_dim, dtype=jnp.float32)
+    dec = autotune_decode_geometry(seq, args.head_dim, dtype=jnp.float32,
+                                   shards=args.tp)
     dec_hit = dec.source == "cache"
     print(f"autotune decode cap={seq} d={args.head_dim}: "
           f"block_k={dec.decode_block_k} splits={dec.num_decode_splits} "

@@ -85,11 +85,30 @@ def main():
                     help="prepend this many identical tokens to every "
                          "prompt (system-prompt workload: later requests "
                          "hit the prefix cache and skip that prefill)")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel shards over a (tp,) device mesh "
+                         "(paged mode): page pool and projections shard by "
+                         "heads, scheduler stays host-global; needs tp "
+                         "visible devices (CPU: XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N); "
+                         "composes with --prefix-cache and --autotune")
     args = ap.parse_args()
 
     tuning.configure_tuning(sram_budget=args.sram_budget,
                             autotune=args.autotune or None)
     cfg = reduced_config(args.arch)
+    if args.tp > 1 and cfg.num_kv_heads % args.tp:
+        # the reduced demo config may carry fewer kv heads than shards
+        # (granite reduces to 4q/1kv); scale BOTH head counts, keeping the
+        # GQA ratio, so every shard owns whole kv-head groups — the real
+        # config on a real slice divides and never takes this branch.
+        import dataclasses
+        ratio = max(1, cfg.num_heads // max(cfg.num_kv_heads, 1))
+        kv = -(-cfg.num_kv_heads // args.tp) * args.tp
+        cfg = dataclasses.replace(cfg, num_kv_heads=kv,
+                                  num_heads=kv * ratio)
+        print(f"[tp={args.tp}] scaled reduced config to {kv * ratio}q/"
+              f"{kv}kv heads so every shard owns whole kv-head groups")
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     eng = ServingEngine(model, params, num_slots=args.slots,
@@ -98,7 +117,8 @@ def main():
                         page_size=args.page_size, num_pages=args.pages,
                         chunk_size=args.chunk_size,
                         token_budget=args.token_budget,
-                        prefix_cache=args.prefix_cache)
+                        prefix_cache=args.prefix_cache,
+                        tp=args.tp)
     rng = np.random.default_rng(0)
     shared = list(rng.integers(1, cfg.vocab_size, size=args.shared_prefix))
     t0 = time.perf_counter()
@@ -115,8 +135,10 @@ def main():
 
     mode = "paged" if eng.paged else "dense"
     chunked = (f" chunk={args.chunk_size}" if args.chunk_size else "")
+    tp_note = (f" tp={args.tp} ({eng.per_shard_cache_bytes()/1e6:.2f} MB"
+               f"/shard)" if args.tp > 1 else "")
     print(f"arch={cfg.name} mode={mode}{chunked} lanes={args.slots} "
-          f"cache={eng.cache_bytes()/1e6:.2f} MB"
+          f"cache={eng.cache_bytes()/1e6:.2f} MB{tp_note}"
           + (f" pool={eng.kv.num_pages}x{eng.kv.page_size}" if eng.paged
              else f" slots={args.slots}x{args.capacity}"))
     done = eng.run(on_step=ServingEngine.step_stats_printer())
@@ -134,6 +156,12 @@ def main():
               f"{eng.prefill_hbm_bytes_saved/1e6:.2f} MB HBM saved, "
               f"{eng.kv.cached_pages} pages indexed "
               f"({eng.kv.cache_evictions} evicted under pressure)")
+    if eng.tp > 1:
+        print(f"tp={eng.tp}: per-shard pool utilization "
+              f"{eng.kv.utilization():.0%} (identical on every shard — one "
+              f"logical pool, head-sliced), "
+              f"{eng.per_shard_cache_bytes()/1e6:.2f} MB KV/shard, "
+              f"decode census {eng.decode_collective_census()}")
     for r in done[:5]:
         print(f"  req{r.rid}: {len(r.output)} tokens {r.output[:8]}...")
 

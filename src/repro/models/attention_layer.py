@@ -30,7 +30,20 @@ def attn_spec_from_config(cfg: ModelConfig) -> AttentionSpec:
         banded_window=cfg.banded_window,
         block_q=cfg.attn_block_q, block_k=cfg.attn_block_k,
         num_decode_splits=cfg.num_decode_splits,
-        use_decode_kernel=cfg.use_decode_kernel)
+        use_decode_kernel=cfg.use_decode_kernel,
+        tp_shards=cfg.tp_shards)
+
+
+def _tp_reduce(y: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Sum the output projection's partial result over the tensor-parallel
+    axis. With heads sharded over ``cfg.tp_axis``, each shard's
+    ``_merge_heads(o) @ wo`` covers only its local head columns/rows of wo
+    — the ONE collective the attention layer needs (DESIGN.md §13): Q/K/V
+    projection, RoPE, cache writes, and attention itself are head-local
+    because every q-head group lives with its kv head."""
+    if cfg.tp_axis is None:
+        return y
+    return jax.lax.psum(y, cfg.tp_axis)
 
 
 def init_attention(key, cfg: ModelConfig, dtype):
@@ -125,7 +138,7 @@ def apply_attention(
                   segment_ids=None if cross else segment_ids,
                   block_layout=block_layout,
                   deterministic=deterministic, dropout_seed=dropout_seed)
-    return _merge_heads(o) @ params["wo"]
+    return _tp_reduce(_merge_heads(o) @ params["wo"], cfg)
 
 
 # ---------------------------------------------------------------------------
@@ -171,7 +184,7 @@ def prefill_attention(params, cfg: ModelConfig, x, cache, *, kv_mask=None,
         "k": jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0)),
         "v": jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0)),
     }
-    return _merge_heads(o) @ params["wo"], cache
+    return _tp_reduce(_merge_heads(o) @ params["wo"], cfg), cache
 
 
 def decode_attention_step(params, cfg: ModelConfig, x, cache, kv_len,
@@ -214,7 +227,7 @@ def decode_attention_step(params, cfg: ModelConfig, x, cache, kv_len,
 
     spec = spec or attn_spec_from_config(cfg)
     o = decode_attention(q, cache["k"], cache["v"], kv_len + 1, spec)
-    return _merge_heads(o) @ params["wo"], cache
+    return _tp_reduce(_merge_heads(o) @ params["wo"], cfg), cache
 
 
 # ---------------------------------------------------------------------------
@@ -274,7 +287,7 @@ def chunk_prefill_attention_step(params, cfg: ModelConfig, x, pool,
     o = paged_prefill_attention(q, pool["k"], pool["v"], page_list, spec,
                                 q_segment_ids=q_seg, kv_segment_ids=kv_seg,
                                 q_positions=q_pos, kv_positions=kv_pos)
-    return _merge_heads(o) @ params["wo"], pool
+    return _tp_reduce(_merge_heads(o) @ params["wo"], cfg), pool
 
 
 def paged_decode_attention_step(params, cfg: ModelConfig, x, pool,
@@ -315,4 +328,4 @@ def paged_decode_attention_step(params, cfg: ModelConfig, x, pool,
     spec = spec or attn_spec_from_config(cfg)
     o = paged_decode_attention(q, pool["k"], pool["v"], page_table,
                                kv_len + 1, spec)
-    return _merge_heads(o) @ params["wo"], pool
+    return _tp_reduce(_merge_heads(o) @ params["wo"], cfg), pool

@@ -139,7 +139,8 @@ def apply_block(params: Params, cfg: ModelConfig, x, *,
         x = x + y
     elif "mlp" in params:
         h = apply_norm(params["mlp_norm"], x, cfg.norm_type)
-        x = x + apply_mlp(params["mlp"], h, cfg.mlp_type)
+        x = x + attn_mod._tp_reduce(
+            apply_mlp(params["mlp"], h, cfg.mlp_type), cfg)
     return x, aux
 
 
@@ -276,7 +277,8 @@ def apply_block_decode(params: Params, cfg: ModelConfig, x, cache, kv_len,
         x = x + y
     elif "mlp" in params:
         h = apply_norm(params["mlp_norm"], x, cfg.norm_type)
-        x = x + apply_mlp(params["mlp"], h, cfg.mlp_type)
+        x = x + attn_mod._tp_reduce(
+            apply_mlp(params["mlp"], h, cfg.mlp_type), cfg)
     return x, new_cache
 
 
@@ -317,7 +319,8 @@ def apply_block_decode_paged(params: Params, cfg: ModelConfig, x, cache,
         x = x + y
     elif "mlp" in params:
         h = apply_norm(params["mlp_norm"], x, cfg.norm_type)
-        x = x + apply_mlp(params["mlp"], h, cfg.mlp_type)
+        x = x + attn_mod._tp_reduce(
+            apply_mlp(params["mlp"], h, cfg.mlp_type), cfg)
     return x, {"kv": kv}
 
 
@@ -338,7 +341,8 @@ def apply_block_chunk_prefill(params: Params, cfg: ModelConfig, x, cache,
         x = x + y
     elif "mlp" in params:
         h = apply_norm(params["mlp_norm"], x, cfg.norm_type)
-        x = x + apply_mlp(params["mlp"], h, cfg.mlp_type)
+        x = x + attn_mod._tp_reduce(
+            apply_mlp(params["mlp"], h, cfg.mlp_type), cfg)
     return x, {"kv": kv}
 
 
@@ -479,7 +483,8 @@ def apply_block_prefill(params: Params, cfg: ModelConfig, x, capacity: int,
         x = x + y
     elif "mlp" in params:
         h = apply_norm(params["mlp_norm"], x, cfg.norm_type)
-        x = x + apply_mlp(params["mlp"], h, cfg.mlp_type)
+        x = x + attn_mod._tp_reduce(
+            apply_mlp(params["mlp"], h, cfg.mlp_type), cfg)
     return x, cache_l
 
 

@@ -54,30 +54,49 @@ executors publish pages as their rows materialize — see kv_cache.py and
 DESIGN.md §12. A hit's skipped rows are credited in HBM bytes via
 ``io_model.prefix_cache_hbm_bytes_saved``.
 
+Tensor parallelism (``tp=N``, paged dense-family mode; DESIGN.md §13):
+the page pool and every attention/MLP projection shard over a ``("tp",)``
+mesh by HEADS / FFN hidden dim — each shard owns whole kv heads together
+with their q-head groups, so decode and paged prefill run collective-free
+and only the two per-layer output projections ``psum``. The scheduler,
+allocator, page tables, and prefix-cache index stay host-global: one
+logical pool, per-shard head slices, page indices valid on every shard.
+
 ``prefill_calls`` / ``decode_calls`` count model invocations;
 ``preemptions`` / ``peak_active`` / ``kv.utilization()`` expose scheduler
 behaviour (printed by launch/serve.py per step); ``prefix_cache_hit_rate``
-/ ``prefill_tokens_skipped`` / ``prefill_hbm_bytes_saved`` the cache.
+/ ``prefill_tokens_skipped`` / ``prefill_hbm_bytes_saved`` the cache;
+``latency_stats()`` per-request TTFT and per-token decode percentiles.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import itertools
+import time
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
 
 from repro.core import io_model, masks
 from repro.core.masks import POS_PAD, SEG_PAD_Q
+from repro.distributed import meshes as dist_meshes
+from repro.distributed import sharding as dist_sharding
 from repro.kernels import tuning
 from repro.models.attention_layer import attn_spec_from_config
 from repro.models.model_zoo import Model
 from repro.serve import kv_cache as kvc
 from repro.serve import sampling
 from repro.serve.scheduler import ChunkScheduler, ChunkTask, SchedulerConfig
+
+try:  # jax >= 0.4.30 module move
+    from jax.experimental.shard_map import shard_map
+except ImportError:  # pragma: no cover - newer jax exposes jax.shard_map
+    from jax import shard_map  # type: ignore[attr-defined,no-redef]
 
 
 @dataclasses.dataclass
@@ -89,6 +108,11 @@ class Request:
         default_factory=sampling.SamplingParams)
     output: list[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    # latency observability: submit wall-clock and first-generated-token
+    # wall-clock (None until the first chunk of prefill completes; survives
+    # preempt->resume — the FIRST emission is the TTFT).
+    t_submit: float = 0.0
+    t_first: float | None = None
 
     @property
     def resume_tokens(self) -> list[int]:
@@ -108,7 +132,8 @@ class ServingEngine:
                  chunk_size: int | None = None,
                  token_budget: int | None = None,
                  chunk_kv_bucket: int | None = None,
-                 prefix_cache: bool | None = None):
+                 prefix_cache: bool | None = None,
+                 tp: int = 1):
         self.model = model
         self.params = params
         self.B = num_slots
@@ -150,6 +175,39 @@ class ServingEngine:
         self.prefix_cache = self.paged if prefix_cache is None \
             else bool(prefix_cache)
         cfg = model.cfg
+
+        # ---- tensor parallelism over a ("tp",) mesh (DESIGN.md §13) ----
+        self.tp = int(tp)
+        if self.tp < 1:
+            raise ValueError(f"tp must be >= 1, got {tp}")
+        if self.tp > 1:
+            if not self.paged:
+                raise ValueError(
+                    "tensor-parallel serving shards the page pool over "
+                    "heads; dense slot mode supports tp=1 only (pass "
+                    "paged=True)")
+            if cfg.family != "dense":
+                raise ValueError(
+                    f"tp>1 serving shards attention heads and the dense "
+                    f"MLP hidden dim; family {cfg.family!r} is out of "
+                    f"scope (expert parallelism is a separate axis)")
+            # GQA: every shard must own WHOLE kv heads, each co-located
+            # with its full q-head group, or decode attention would need a
+            # collective. Fail here, at construction, not inside a deep
+            # shard_map trace.
+            if cfg.num_kv_heads % self.tp:
+                raise ValueError(
+                    f"GQA kv heads ({cfg.num_kv_heads}) not divisible by "
+                    f"tp={self.tp}: each shard must own whole kv heads "
+                    f"(with their q-head groups) for collective-free "
+                    f"decode attention")
+            if cfg.num_heads % self.tp:
+                raise ValueError(
+                    f"query heads ({cfg.num_heads}) not divisible by "
+                    f"tp={self.tp}")
+            if cfg.d_ff and cfg.d_ff % self.tp:
+                raise ValueError(
+                    f"d_ff ({cfg.d_ff}) not divisible by tp={self.tp}")
         # seeds every content-hash chain: pages must never collide across
         # model weights / dtype / attention geometry identities.
         self._model_key = (f"{cfg.name}|{cfg.family}|{cfg.dtype}"
@@ -167,8 +225,45 @@ class ServingEngine:
         self.finished: list[Request] = []
         self.next_token = np.zeros((num_slots,), np.int32)
         self._rid = itertools.count()
-        self._decode = jax.jit(model.decode_step, donate_argnums=(1,))
         self._sample = jax.jit(sampling.sample_tokens)
+        # per-request latency samples (seconds): time-to-first-token and
+        # per-token decode step latency — percentile-reduced by
+        # ``latency_stats()`` for the serving benchmarks.
+        self.ttfts: list[float] = []
+        self.tok_latencies: list[float] = []
+
+        if self.tp > 1:
+            # The mesh and the per-shard MODEL VIEW: inside shard_map every
+            # array is a per-shard slice, so the step functions trace with a
+            # config whose head/ff counts are the per-shard ones and whose
+            # tp_axis makes the two projection boundaries psum
+            # (models/attention_layer._tp_reduce). Host bookkeeping (page
+            # allocator, prefix hashes, io accounting) keeps the GLOBAL cfg.
+            self.mesh = dist_meshes.tp_mesh(self.tp)
+            shard_cfg = dataclasses.replace(
+                cfg,
+                num_heads=cfg.num_heads // self.tp,
+                num_kv_heads=cfg.num_kv_heads // self.tp,
+                d_ff=cfg.d_ff // self.tp,
+                tp_axis="tp", tp_shards=self.tp)
+            self._shard_model = type(model)(shard_cfg)
+            rules = dist_sharding.tp_serve_rules()
+            logical = model.param_specs()
+            problems = dist_sharding.validate_divisibility(
+                params, logical, self.mesh, rules)
+            if problems:
+                raise ValueError("tp sharding preflight failed:\n"
+                                 + "\n".join(problems))
+            self._param_specs = jax.tree.map(
+                lambda s: dist_sharding.resolve_spec(s, rules), logical,
+                is_leaf=lambda x: isinstance(x, P))
+            self.params = params = jax.device_put(
+                params, dist_sharding.resolve_tree(logical, self.mesh, rules))
+            self._rep = NamedSharding(self.mesh, P())
+        else:
+            self.mesh = None
+            self._shard_model = model
+            self._decode = jax.jit(model.decode_step, donate_argnums=(1,))
 
         if self.paged:
             if capacity % page_size:
@@ -187,11 +282,14 @@ class ServingEngine:
                 num_slots, num_pages, page_size, self.pages_per_seq)
             self._kv_len_h = np.zeros((num_slots,), np.int64)
             self._paged_dirty = True     # device table/kv_len need upload
-            self._scatter = jax.jit(kvc.scatter_packed_segments,
-                                    donate_argnums=(0,))
-            self._prefill_packed = jax.jit(model.prefill_packed)
-            self._prefill_chunk = jax.jit(model.prefill_chunk_paged,
-                                          donate_argnums=(2,))
+            if self.tp > 1:
+                self._build_tp_step_fns()
+            else:
+                self._scatter = jax.jit(kvc.scatter_packed_segments,
+                                        donate_argnums=(0,))
+                self._prefill_packed = jax.jit(model.prefill_packed)
+                self._prefill_chunk = jax.jit(model.prefill_chunk_paged,
+                                              donate_argnums=(2,))
             # kv-side width bucket for suffix chunks: coarse enough to
             # bound the jit-trace family over a long prompt's prefill, and
             # rounded UP to a page multiple — the in-place kv side is a
@@ -267,7 +365,72 @@ class ServingEngine:
                 tuning.resolve_decode_geometry(
                     capacity, spec.block_k, spec.num_decode_splits,
                     head_dim=model.cfg.head_dim, dtype=model.cfg.dtype,
-                    page_size=page_size if self.paged else None)
+                    page_size=page_size if self.paged else None,
+                    shards=self.tp)
+
+    # -------------------------------------------------- tensor parallelism
+    def _build_tp_step_fns(self) -> None:
+        """shard_map-wrap the four device step functions over the tp mesh.
+
+        Per-shard layout: pool leaves (L, hkv, pages, page_size, hd) and
+        packed-prefill leaves (L, 1, hkv, S, hd) shard their KV-HEAD axis;
+        tokens, page tables, kv lengths, scatter indices, and logits are
+        replicated (``P()``) — the host allocator's page indices are valid
+        on every shard, and replicated logits make sampling a plain jit
+        with no collective. ``check_rep=False`` because the bodies psum at
+        the projection boundaries, which jax's replication checker cannot
+        see through in this jax version."""
+        mesh = self.mesh
+        pool_spec = jax.tree.map(
+            lambda _: P(None, "tp", None, None, None), self.state["caches"])
+        packed_spec = jax.tree.map(
+            lambda _: P(None, None, "tp", None, None), self.state["caches"])
+        state_spec = {"caches": pool_spec, "page_table": P(), "kv_len": P()}
+        self._state_spec = state_spec
+        sm = self._shard_model
+
+        self._decode_sm = shard_map(
+            sm.decode_step, mesh=mesh,
+            in_specs=(self._param_specs, state_spec, P()),
+            out_specs=(state_spec, P()), check_rep=False)
+        self._decode = jax.jit(self._decode_sm, donate_argnums=(1,))
+        self._scatter = jax.jit(
+            shard_map(kvc.scatter_packed_segments, mesh=mesh,
+                      in_specs=(pool_spec, packed_spec, P(), P()),
+                      out_specs=pool_spec, check_rep=False),
+            donate_argnums=(0,))
+        self._prefill_packed_sm = shard_map(
+            sm.prefill_packed, mesh=mesh,
+            in_specs=(self._param_specs,
+                      {"tokens": P(), "segment_ids": P()}),
+            out_specs=(packed_spec, P()), check_rep=False)
+        self._prefill_packed = jax.jit(self._prefill_packed_sm)
+        chunk_batch_spec = {
+            "tokens": P(), "q_segment_ids": P(), "q_positions": P(),
+            "kv_segment_ids": P(), "kv_positions": P(),
+            "dest_page": P(), "dest_off": P(), "page_list": P()}
+        self._prefill_chunk_sm = shard_map(
+            sm.prefill_chunk_paged, mesh=mesh,
+            in_specs=(self._param_specs, chunk_batch_spec, pool_spec),
+            out_specs=(pool_spec, P()), check_rep=False)
+        self._prefill_chunk = jax.jit(self._prefill_chunk_sm,
+                                      donate_argnums=(2,))
+        # shard the freshly built (zero) pool in place; table/len replicated
+        self.state = jax.device_put(self.state, jax.tree.map(
+            lambda s: NamedSharding(mesh, s), state_spec,
+            is_leaf=lambda x: isinstance(x, P)))
+
+    def decode_collective_census(self) -> dict[str, int]:
+        """Collective primitives in one sharded decode step's jaxpr —
+        the "no hidden communication" assertion (DESIGN.md §13): exactly
+        ``{"psum": 2}`` per traced layer (attention-output + MLP down
+        projections), nothing inside attention, cache writes, or sampling.
+        Empty at tp=1."""
+        if self.tp == 1:
+            return {}
+        tok = jnp.zeros((self.B,), jnp.int32)
+        jaxpr = jax.make_jaxpr(self._decode_sm)(self.params, self.state, tok)
+        return dist_sharding.collective_census(jaxpr)
 
     # ----------------------------------------------------------------- admit
     def submit(self, prompt: list[int], max_new_tokens: int, *,
@@ -296,7 +459,8 @@ class ServingEngine:
         sp = sampling.SamplingParams(
             temperature=temperature, top_p=top_p,
             seed=rid if seed is None else seed)
-        req = Request(rid, list(prompt), max_new_tokens, params=sp)
+        req = Request(rid, list(prompt), max_new_tokens, params=sp,
+                      t_submit=time.perf_counter())
         self.requests[rid] = req
         self._stage_prefix(req)
         self.scheduler.submit(rid, len(prompt))
@@ -388,6 +552,9 @@ class ServingEngine:
 
     def _post_prefill(self, lane: int, req: Request, tok: int) -> None:
         """The final chunk's logits produced the first generated token."""
+        if req.t_first is None:
+            req.t_first = time.perf_counter()
+            self.ttfts.append(req.t_first - req.t_submit)
         req.output.append(tok)
         if ((self.eos_id is not None and tok == self.eos_id)
                 or len(req.output) >= req.max_new_tokens):
@@ -615,7 +782,8 @@ class ServingEngine:
         report_block = (spec.block_q if spec.block_q is not None
                         else tuning.choose_tile_config(
                             s, s, self.model.cfg.head_dim,
-                            dtype=self.model.cfg.dtype).block_q)
+                            dtype=self.model.cfg.dtype,
+                            shards=self.tp).block_q)
         bq = min(report_block, self.prefill_bucket, s)
         if s % bq:
             return  # bucket not block-aligned; skip the report, not the call
@@ -653,15 +821,27 @@ class ServingEngine:
                 (self.slot_req[l].rid
                  if l in lane_set and self.slot_req[l] is not None else None)
                 for l in range(self.B)]
-            self.state["page_table"] = jnp.asarray(
+            pt = jnp.asarray(
                 self.kv.table_array(row_rids, self.pages_per_seq))
-            self.state["kv_len"] = jnp.asarray(self._kv_len_h, jnp.int32)
+            kl = jnp.asarray(self._kv_len_h, jnp.int32)
+            if self.tp > 1:
+                # commit the host uploads replicated on the mesh so the
+                # whole (donated) state keeps shardings matching in_specs
+                pt = jax.device_put(pt, self._rep)
+                kl = jax.device_put(kl, self._rep)
+            self.state["page_table"] = pt
+            self.state["kv_len"] = kl
             self._paged_dirty = False
+        t0 = time.perf_counter()
         tok = jnp.asarray(self.next_token)
         reqs_by_lane = [self.slot_req[l] for l in range(self.B)]
         self.state, logits = self._decode(self.params, self.state, tok)
         self.decode_calls += 1
         nxt = self._sample_rows(logits[:, 0], reqs_by_lane)
+        # _sample_rows materialized host tokens, so the step's device work
+        # is done: one wall-clock sample covers every token emitted here.
+        dt = time.perf_counter() - t0
+        self.tok_latencies.extend([dt] * len(lanes))
         for lane in lanes:
             req = self.slot_req[lane]
             t = int(nxt[lane])
@@ -779,6 +959,25 @@ class ServingEngine:
         return show
 
     def cache_bytes(self) -> int:
-        """HBM bytes resident in the decode KV state (pool or slot cache)."""
+        """HBM bytes resident in the decode KV state (pool or slot cache),
+        summed over all shards (jax reports global nbytes)."""
         return int(sum(leaf.nbytes
                        for leaf in jax.tree.leaves(self.state["caches"])))
+
+    def per_shard_cache_bytes(self) -> int:
+        """Per-DEVICE resident KV bytes: the head-sharded pool puts 1/tp of
+        every page on each shard, so at equal total concurrency the
+        per-device footprint shrinks by the shard count."""
+        return self.cache_bytes() // max(1, self.tp)
+
+    def latency_stats(self) -> dict[str, float]:
+        """Percentile-reduced per-request latencies (seconds): TTFT (submit
+        -> first generated token, chunked prefill and queueing included)
+        and per-token decode step latency. Zeros when no samples exist."""
+        out: dict[str, float] = {}
+        for name, xs in (("ttft", self.ttfts),
+                         ("tok_latency", self.tok_latencies)):
+            for q in (50, 95):
+                out[f"{name}_p{q}"] = (float(np.percentile(xs, q))
+                                       if xs else 0.0)
+        return out

@@ -1,0 +1,163 @@
+"""Tensor-parallel paged serving (DESIGN.md §13): token identity vs the
+single-device engine (greedy, sampled, preemption, prefix-cache hits),
+the psum-only collective census, per-shard KV footprint, per-shard tuning
+cache keys, and the construction-time GQA divisibility errors.
+
+Device tests carry the ``multidevice`` marker — tests/conftest.py sets
+``--xla_force_host_platform_device_count=8`` before jax initializes and
+skips them when the flag could not take effect. Subprocess-isolated
+shard-count sweeps live in tests/test_distributed.py."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import reduced_config
+from repro.distributed.sharding import validate_divisibility
+from repro.kernels import tuning
+from repro.models import build_model
+from repro.serve.engine import ServingEngine
+
+CFG_KW = dict(num_layers=2, d_model=64, num_heads=8, num_kv_heads=4,
+              head_dim=8, d_ff=128, vocab_size=128, dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced_config("granite-3-2b", **CFG_KW)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _engine(model, params, tp, **kw):
+    kw.setdefault("num_slots", 4)
+    kw.setdefault("capacity", 64)
+    kw.setdefault("page_size", 8)
+    return ServingEngine(model, params, paged=True, tp=tp, **kw)
+
+
+def _drive(eng, prompts, max_new=8):
+    for i, p in enumerate(prompts):
+        eng.submit(p, max_new_tokens=max_new,
+                   temperature=0.7 if i % 2 else 0.0, seed=23 + i)
+    done = eng.run()
+    return {r.rid: r.output for r in done}
+
+
+@pytest.mark.multidevice
+def test_token_identity_greedy_sampled_and_prefix_hits(setup):
+    """tp=2 outputs token-identical to tp=1 across greedy lanes, sampled
+    lanes, and a duplicate prompt whose full pages hit the prefix cache."""
+    cfg, model, params = setup
+    rng = np.random.default_rng(0)
+    dup = list(map(int, rng.integers(1, cfg.vocab_size, size=12)))
+    prompts = [dup, list(map(int, rng.integers(1, cfg.vocab_size, size=7))),
+               dup, list(map(int, rng.integers(1, cfg.vocab_size, size=9)))]
+
+    def drive(tp):
+        eng = _engine(model, params, tp=tp, chunk_size=4)
+        # prime: drain the first (dup) request alone so its full pages are
+        # published before the wave — the second dup then hits the index.
+        out = _drive(eng, prompts[:1])
+        out.update(_drive(eng, prompts[1:]))
+        return out, eng
+
+    o1, e1 = drive(1)
+    o2, e2 = drive(2)
+    assert o1 == o2
+    # the duplicate prompt's full page actually hit on both engines
+    assert e2.prefix_hits > 0 and e2.prefix_hits == e1.prefix_hits
+
+
+@pytest.mark.multidevice
+def test_token_identity_under_preemption(setup):
+    """A page pool too small for the full workload forces preemptions;
+    resume re-prefills on per-shard slices and stays token-identical."""
+    cfg, model, params = setup
+    rng = np.random.default_rng(1)
+    prompts = [list(map(int, rng.integers(1, cfg.vocab_size, size=10)))
+               for _ in range(4)]
+    kw = dict(num_pages=10, chunk_size=4, prefix_cache=False)
+    e1 = _engine(model, params, tp=1, **kw)
+    e2 = _engine(model, params, tp=2, **kw)
+    o1 = _drive(e1, prompts, max_new=14)
+    o2 = _drive(e2, prompts, max_new=14)
+    assert e1.preemptions > 0, "workload did not force a preemption"
+    assert e2.preemptions == e1.preemptions
+    assert o1 == o2
+
+
+@pytest.mark.multidevice
+def test_decode_census_psum_only(setup):
+    """The sharded decode step's jaxpr contains psum and NOTHING else:
+    attention, paged cache writes, and sampling are collective-free, and
+    the psums sit exactly at the two per-layer projection boundaries."""
+    cfg, model, params = setup
+    eng = _engine(model, params, tp=2)
+    census = eng.decode_collective_census()
+    assert set(census) == {"psum"}, census
+    expected = 2 if cfg.scan_layers else 2 * cfg.num_layers
+    assert census["psum"] == expected, (census, cfg.scan_layers)
+    # tp=1 has no shard_map and therefore no census
+    assert _engine(model, params, tp=1).decode_collective_census() == {}
+
+
+@pytest.mark.multidevice
+def test_per_shard_kv_bytes_shrink(setup):
+    """One logical pool: global bytes are shard-count invariant while each
+    device holds exactly 1/tp of every page (the head slices)."""
+    cfg, model, params = setup
+    e1 = _engine(model, params, tp=1)
+    e4 = _engine(model, params, tp=4)
+    assert e4.cache_bytes() == e1.cache_bytes()
+    assert e4.per_shard_cache_bytes() * 4 == e4.cache_bytes()
+    leaf = jax.tree.leaves(e4.state["caches"])[0]
+    assert len(leaf.sharding.device_set) == 4
+    assert leaf.addressable_shards[0].data.shape[1] == leaf.shape[1] // 4
+
+
+@pytest.mark.multidevice
+def test_construction_errors(setup):
+    """Satellite guarantees: GQA/head/ff divisibility fail at construction
+    with actionable messages, never inside a deep shard_map trace; dense
+    slot mode rejects tp>1."""
+    cfg, model, params = setup
+    with pytest.raises(ValueError, match="kv heads.*not divisible"):
+        _engine(model, params, tp=8)          # hkv=4 % 8 != 0
+    # heads divide but d_ff does not: exercise the d_ff branch
+    cfg_ff = reduced_config("granite-3-2b", **{**CFG_KW, "d_ff": 130})
+    with pytest.raises(ValueError, match="d_ff"):
+        _engine(build_model(cfg_ff), params, tp=4)
+    with pytest.raises(ValueError, match="dense slot mode"):
+        ServingEngine(model, params, num_slots=2, capacity=32, paged=False,
+                      tp=2)
+
+
+@pytest.mark.multidevice
+def test_validate_divisibility_names_offender():
+    """The preflight error names the offending (shape, spec, axis-size)
+    triple so a bad rule table is debuggable from the message alone."""
+    mesh = Mesh(np.asarray(jax.devices()[:4]), ("tp",))
+    shapes = {"w": jnp.zeros((6, 8))}
+    specs = {"w": P("heads", None)}
+    problems = validate_divisibility(shapes, specs, mesh,
+                                     rules={"heads": "tp"})
+    assert len(problems) == 1
+    msg = problems[0]
+    assert "shape (6, 8)" in msg and "dim[0]=6" in msg
+    assert "('tp',)" in msg and "(size 4)" in msg
+
+
+def test_tuning_cache_key_namespaces_shards():
+    """Per-shard tile resolutions live under a distinct cache key (|tpN):
+    a sharded entry never serves — or is served by — the single-device
+    one, and the decode split target scales with the shard count."""
+    k1 = tuning.cache_key("cpu", "float32", 64, 1024, "causal")
+    k4 = tuning.cache_key("cpu", "float32", 64, 1024, "causal", shards=4)
+    assert k1 != k4 and k4.endswith("|tp4") and "|tp" not in k1
+    assert (tuning.decode_split_target(4)
+            == 4 * tuning.decode_split_target(1))
