@@ -45,6 +45,14 @@ the psum's ring traffic is priced by ``io_model.tp_psum_hbm_bytes``.
 Skipped (with a note) when fewer than 4 devices are visible — scripts/
 ci.sh exports ``--xla_force_host_platform_device_count=8``.
 
+Part 5 (sequence-parallel prefill, DESIGN.md §14): the long-prompt
+chunked workload on a 2-D ``sp=2 x tp=2`` mesh vs ``tp=4`` vs
+single-device — token identity across all three, the exact-collective
+census for every prefill step kind, and io_model's per-shard pricing of
+the chosen KV-movement strategy (``serve_sp_prefill_speedup`` must beat
+replicated prefill; ``serve_sp_psum_bytes`` prices the slab's projection
+reductions).
+
 Per-request latency percentiles (``serve_ttft_p50/p95``,
 ``serve_tok_latency_p50/p95``) come from the engine's own recorder and
 are direction-aware in ``benchmarks.report`` (lower is better).
@@ -366,6 +374,90 @@ def _tp_sharded_workload(smoke: bool) -> list[tuple[str, float, str]]:
     ]
 
 
+def _sp_prefill_workload(smoke: bool) -> list[tuple[str, float, str]]:
+    """Sequence-parallel chunked prefill (DESIGN.md §14) on the long-prompt
+    mixed workload: sp=2 x tp=2 vs tp=4 vs single-device. Token identity
+    across all three is the exactness claim; the speedup row is io_model's
+    per-shard HBM pricing of the chosen KV-movement strategy vs replicated
+    prefill (CPU fake devices share one backend, so wall clock cannot show
+    the parallelism), and the census rows prove the sp step contains
+    EXACTLY the declared collectives."""
+    if jax.device_count() < 4:
+        print(f"  [sp section skipped: {jax.device_count()} device(s) "
+              f"visible, need 4 — set XLA_FLAGS="
+              f"--xla_force_host_platform_device_count=8]")
+        return []
+    from repro.distributed.sharding import expected_sp_prefill_census
+    long_len, chunk = (2048, 512) if smoke else (8192, 1024)
+    sp, tp = 2, 2
+    base_kw = dict(num_layers=1, d_model=64, num_heads=8, num_kv_heads=4,
+                   head_dim=16, d_ff=128, vocab_size=256, dtype="float32")
+    cfg = reduced_config("granite-3-2b", **base_kw)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(4)
+    long_prompt = list(rng.integers(1, cfg.vocab_size, size=long_len))
+    n_short = 3 if smoke else 6
+    shorts = [list(rng.integers(1, cfg.vocab_size, size=12))
+              for _ in range(n_short)]
+
+    def drive(sp_shards, tp_shards):
+        eng = ServingEngine(model, params, num_slots=1 + n_short,
+                            capacity=long_len + 64, paged=True,
+                            page_size=64, chunk_size=chunk,
+                            token_budget=chunk + 64, chunk_kv_bucket=2048,
+                            sp=sp_shards, tp=tp_shards)
+        t0 = time.perf_counter()
+        eng.submit(long_prompt, max_new_tokens=4)
+        for s in shorts:
+            eng.submit(s, max_new_tokens=6)
+        done = eng.run()
+        dt = time.perf_counter() - t0
+        return {r.rid: r.output for r in done}, eng, dt
+
+    outs_1, _, _ = drive(1, 1)
+    outs_tp, eng_tp, _ = drive(1, 4)
+    outs_sp, eng_sp, _ = drive(sp, tp)
+    assert outs_sp == outs_1, "sp-sharded outputs diverged from single-device"
+    assert outs_tp == outs_1, "tp-sharded outputs diverged from single-device"
+
+    # census contract, asserted here too so a bench run catches a drifted
+    # step function even when the test suite was skipped for device count.
+    L = 1 if cfg.scan_layers else cfg.num_layers
+    census = eng_sp.prefill_collective_census("chunk")
+    assert census == expected_sp_prefill_census(
+        L, sp=sp, strategy=eng_sp.sp_strategy), census
+    assert eng_sp.decode_collective_census() == {"psum": 2 * L}
+    assert eng_tp.prefill_collective_census("chunk") == {"psum": 2 * L}
+    assert eng_tp.prefill_collective_census("packed") == {"psum": 2 * L}
+    assert eng_tp.prefill_collective_census("scatter") == {}
+
+    # io_model pricing: per-shard chunk HBM bytes under the strategy the
+    # tuner picked, vs the replicated prefill every shard would otherwise
+    # run. The psum row prices the two per-layer projection reductions on
+    # the per-shard slab (chunk/sp rows), the only tp traffic in the step.
+    costs = eng_sp.sp_prefill_costs
+    sharded = min(costs["allgather"], costs["ring"])
+    speedup = costs["replicated"] / sharded
+    assert speedup > 1, (
+        f"sp={sp} per-shard prefill bytes did not shrink: {costs}")
+    psum_bytes = io_model.tp_psum_hbm_bytes(
+        chunk // sp, cfg.d_model, tp, elt=tuning._elt_bytes(cfg.dtype),
+        reduces_per_layer=2, layers=cfg.num_layers)
+    return [
+        ("serve_sp_prefill_speedup", speedup,
+         f"sp={sp}x tp={tp} on the {long_len}-token prompt, chunk={chunk}: "
+         f"io_model per-shard chunk bytes {sharded / 1e6:.2f} MB "
+         f"({eng_sp.sp_strategy}) vs {costs['replicated'] / 1e6:.2f} MB "
+         f"replicated; token-identical outputs, census={census}"),
+        ("serve_sp_psum_bytes", psum_bytes,
+         f"ring-psum traffic for one sp-shard's chunk slab "
+         f"({chunk}/{sp} rows, 2 reduces/layer x {cfg.num_layers} "
+         f"layer(s)); the KV path moves by "
+         f"{eng_sp.sp_strategy} instead"),
+    ]
+
+
 def run(smoke: bool = False) -> list[tuple[str, float, str]]:
     cfg = reduced_config("granite-3-2b",
                          num_layers=2, d_model=128, num_heads=4,
@@ -424,6 +516,7 @@ def run(smoke: bool = False) -> list[tuple[str, float, str]]:
     rows += _mixed_workload(smoke)
     rows += _shared_prefix_workload(smoke)
     rows += _tp_sharded_workload(smoke)
+    rows += _sp_prefill_workload(smoke)
     return rows
 
 

@@ -39,11 +39,23 @@ RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
 _LOWER_BETTER = re.compile(r"_(us|ms|s|MB|GB|bytes)$|(ttft|latency)_p\d+$")
 _HIGHER_BETTER = re.compile(r"(tok_per_s|_toks$|concurrency|gain|speedup)")
 
+# Rows whose direction is pinned by contract rather than unit inference.
+# The sp rows are io_model-priced analytics (DESIGN.md §14): the speedup
+# must stay > 1 (sharded per-shard bytes beat replicated prefill) and the
+# slab's psum traffic must never grow without the bench saying so.
+_EXPLICIT = {
+    "serve_sp_prefill_speedup": +1,
+    "serve_sp_psum_bytes": -1,
+}
+
 
 def direction_of(name: str) -> int:
     """+1 = higher is better, -1 = lower is better, 0 = informational.
-    Throughput patterns are checked FIRST: ``tok_per_s`` ends in ``_s``
-    and must not be misread as a time unit."""
+    Contract-pinned rows are checked first, then throughput patterns:
+    ``tok_per_s`` ends in ``_s`` and must not be misread as a time
+    unit."""
+    if name in _EXPLICIT:
+        return _EXPLICIT[name]
     if _HIGHER_BETTER.search(name):
         return +1
     if _LOWER_BETTER.search(name):

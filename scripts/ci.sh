@@ -41,6 +41,16 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m repro.kernels.tuning --smoke --cache "$TUNE_CACHE" --tp 4
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m repro.kernels.tuning --smoke --cache "$TUNE_CACHE" --tp 4 --expect-hit
+# sequence-parallel strategy resolution (--sp 2 adds |sp2 alongside |tpN
+# and |bwd): the second run must serve the persisted strategy + slab
+# tiles from the cache, and both runs print the measured-vs-io_model HBM
+# calibration factor accumulated from the timed candidates above. The
+# sp x tp token-identity sweep itself (tests/test_sp_serving.py) runs in
+# the pytest pass above under the exported 8-device flag.
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m repro.kernels.tuning --smoke --cache "$TUNE_CACHE" --tp 2 --sp 2
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m repro.kernels.tuning --smoke --cache "$TUNE_CACHE" --tp 2 --sp 2 --expect-hit
 
 echo "== benchmark smoke (benchmarks.run --smoke) =="
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.run --smoke

@@ -95,6 +95,21 @@ class ModelConfig:
     tp_axis: str | None = None
     tp_shards: int = 1
 
+    # ---- sequence parallelism (sp chunked prefill; DESIGN.md §14) ----
+    # sp_axis names the mesh axis a chunked-prefill step's PACKED QUERY
+    # ROWS shard over: each shard owns one contiguous slab of the chunk.
+    # sp_strategy is how the chunk's freshly projected K/V slabs reach
+    # every shard before the pool scatter (the pool is replicated across
+    # sp, so all shards must write ALL chunk rows): "allgather" = one
+    # collective per layer; "ring" = sp-1 neighbor ppermutes per layer,
+    # incoming slabs scattered without materializing the full gather
+    # buffer. Resolved by kernels/tuning.resolve_sp_strategy through
+    # io_model.sp_prefill_hbm_bytes. Distinct from ``sp_activations``
+    # (the training-side residual-stream sharding lever).
+    sp_axis: str | None = None
+    sp_shards: int = 1
+    sp_strategy: str = "allgather"
+
     def __post_init__(self):
         if self.head_dim == 0:
             object.__setattr__(self, "head_dim", self.d_model // max(self.num_heads, 1))

@@ -291,6 +291,68 @@ def tp_psum_hbm_bytes(n_tokens: int, d_model: int, shards: int,
                  * reduces_per_layer * layers)
 
 
+# A collective launch is not free even when its payload is: host-side
+# dispatch, fusion barriers, and per-step latency amortize like a fixed
+# byte cost at HBM speed. 256 KiB ~ a few microseconds at v5e bandwidth —
+# the same order as measured per-launch overheads. The ring strategy pays
+# this (sp-1) times per layer, the all-gather once; it is what makes the
+# strategy choice genuinely shape-dependent instead of degenerate.
+SP_COLLECTIVE_LAUNCH_BYTES = 256 * 1024
+
+
+def sp_prefill_hbm_bytes(chunk: int, prefix: int, d: int, heads_q: int,
+                         heads_kv: int, sp: int, *, block_q: int = 128,
+                         elt: int = 2, layers: int = 1) -> dict[str, float]:
+    """Per-shard HBM + interconnect bytes of prefilling ONE chunk of
+    ``chunk`` query rows against a ``prefix``-row causal prefix, three
+    ways (DESIGN.md §14) — the cost surface
+    ``kernels.tuning.resolve_sp_strategy`` minimizes:
+
+    * ``replicated``: every shard runs the FULL chunk (the pre-sp, tp-only
+      behaviour) — the q-major Theorem-2 forward term for ``chunk`` rows.
+    * ``allgather``: each shard computes its ``chunk/sp`` slab, then one
+      all-gather per layer materializes the full chunk K/V before the
+      pool scatter. Pays the comm bytes plus a write+re-read of the
+      gathered buffer's non-local part, but only ONE collective launch
+      per layer.
+    * ``ring``: ``sp - 1`` neighbor ppermutes per layer; each incoming
+      slab is placed directly (no full-buffer round trip beyond the
+      placement write the scatter needs anyway), at the price of
+      ``sp - 1`` sequential collective launches per layer
+      (``SP_COLLECTIVE_LAUNCH_BYTES`` each).
+
+    Returns ``{"replicated", "allgather", "ring", "best"}`` where "best"
+    names the cheaper sharded strategy (or "replicated" at sp=1). Small
+    chunks favor the single gather launch; large chunks amortize the ring
+    launches and skip the gather-buffer materialization.
+    """
+    sp = max(1, int(sp))
+    n_k = prefix + chunk
+
+    def _compute(rows: int) -> float:
+        # q-major forward: q read + o written once, prefix K/V re-streamed
+        # once per q block (flash_hbm_bytes_tiled, fwd only), GQA-aware.
+        t_r = max(1, int(np.ceil(rows / block_q)))
+        return float(3 * rows * d * heads_q + 2 * n_k * d * t_r * heads_q)
+
+    replicated = _compute(chunk) * elt * layers
+    if sp == 1:
+        return {"replicated": replicated, "allgather": replicated,
+                "ring": replicated, "best": "replicated"}
+
+    slab = int(np.ceil(chunk / sp))
+    kv_payload = 2.0 * chunk * d * heads_kv * elt          # full-chunk K+V
+    comm = 2.0 * (sp - 1) / sp * kv_payload                # send + receive
+    gather_extra = 2.0 * (sp - 1) / sp * kv_payload        # write + re-read
+    allgather = ((_compute(slab) * elt + comm + gather_extra) * layers
+                 + SP_COLLECTIVE_LAUNCH_BYTES * layers)
+    ring = ((_compute(slab) * elt + comm) * layers
+            + SP_COLLECTIVE_LAUNCH_BYTES * (sp - 1) * layers)
+    best = "allgather" if allgather <= ring else "ring"
+    return {"replicated": float(replicated), "allgather": float(allgather),
+            "ring": float(ring), "best": best}
+
+
 def tp_sharded_hbm_bytes(total_bytes: float, shards: int,
                          n_tokens: int = 0, d_model: int = 0,
                          elt: int = 2, reduces_per_layer: int = 2,

@@ -38,6 +38,27 @@ def tp_mesh(num_shards: int) -> Mesh:
     return Mesh(np.asarray(devs[:num_shards]), ("tp",))
 
 
+def sp_tp_mesh(sp: int, tp: int) -> Mesh:
+    """2-D ``("sp", "tp")`` mesh over the first ``sp * tp`` visible devices
+    — the serving engine's sequence-parallel x tensor-parallel mesh
+    (DESIGN.md §14). Row-major: shards that differ only in the tp
+    coordinate are adjacent, so the per-layer tp psums stay within a row
+    while the sp KV gather/ring crosses rows."""
+    import numpy as np
+    devs = jax.devices()
+    if sp < 1 or tp < 1:
+        raise ValueError(f"sp/tp mesh needs >= 1 shard per axis, got "
+                         f"sp={sp}, tp={tp}")
+    need = sp * tp
+    if need > len(devs):
+        raise ValueError(
+            f"sp={sp} x tp={tp} needs {need} devices but only "
+            f"{len(devs)} visible; on CPU set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={need} BEFORE jax "
+            f"initializes")
+    return Mesh(np.asarray(devs[:need]).reshape(sp, tp), ("sp", "tp"))
+
+
 def data_axis_names(mesh: Mesh) -> tuple[str, ...]:
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
 

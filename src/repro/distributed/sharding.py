@@ -43,6 +43,44 @@ def tp_serve_rules() -> dict[str, Any]:
     return {"heads": "tp", "ff": "tp"}
 
 
+def sp_serve_rules() -> dict[str, Any]:
+    """Rule table for the 2-D ``("sp", "tp")`` serving mesh (DESIGN.md §14).
+
+    Extends :func:`tp_serve_rules` with one logical axis: "sp_seq", the
+    PACKED QUERY-ROW axis of a chunked-prefill step, shards over "sp" —
+    each sp-shard owns one contiguous slab of the chunk. Everything
+    KV-side (the page pool, destination maps, page lists, kv
+    segment/position rows) stays sp-REPLICATED: page indices remain
+    host-global on every shard, and each shard scatters the FULL chunk's
+    K/V (assembled via all-gather or ring ppermute) into its pool
+    replica, keeping replicas bit-identical across sp.
+    """
+    return {**tp_serve_rules(), "sp_seq": "sp"}
+
+
+def expected_sp_prefill_census(traced_layers: int, *, sp: int = 1,
+                               strategy: str = "allgather") -> dict[str, int]:
+    """The exact collective multiset a sharded chunked-prefill step must
+    trace to (DESIGN.md §14 census contract) — shared by the serving
+    tests and the throughput bench so the assertion cannot drift.
+
+    Per traced layer: the 2 projection psums over "tp" (attention wo +
+    MLP down — present whenever the mesh is active, even at tp=1 where
+    the axis has size 1), plus the sp KV movement: ONE all_gather, or
+    ``sp - 1`` neighbor ppermutes for the ring. ``traced_layers`` is 1
+    under ``scan_layers`` (the scan body traces once), else num_layers.
+    """
+    census = {"psum": 2 * traced_layers}
+    if sp > 1:
+        if strategy == "ring":
+            census["ppermute"] = (sp - 1) * traced_layers
+        elif strategy == "allgather":
+            census["all_gather"] = traced_layers
+        else:
+            raise ValueError(f"unknown sp strategy {strategy!r}")
+    return census
+
+
 def rules_for_mesh(mesh: Mesh, overrides: Mapping[str, Any] | None = None):
     rules = dict(DEFAULT_RULES)
     if "pod" in mesh.axis_names:

@@ -84,8 +84,13 @@ class TileConfig:
     forward kernel iterates kv innermost with q-major accumulators
     (``kv_major=False``); the field keeps the decision explicit so the IO
     model can score both orders and a future kv-major forward slots in
-    without widening any signature. ``source`` is observability only:
-    "explicit" (caller pinned it), "analytic", "cache", or "autotuned".
+    without widening any signature. ``sp_strategy`` records the
+    sequence-parallel KV-movement choice ("allgather" | "ring") for
+    entries resolved by ``resolve_sp_strategy`` under the ``|spN``
+    namespace (None everywhere else — old cache entries load fine since
+    ``from_cache_entry`` filters by field names). ``source`` is
+    observability only: "explicit" (caller pinned it), "analytic",
+    "cache", or "autotuned".
     """
     block_q: int
     block_k: int
@@ -93,6 +98,7 @@ class TileConfig:
     num_decode_splits: int | None = None
     variant: str = "fa2"
     kv_major: bool = False
+    sp_strategy: str | None = None
     source: str = "analytic"
 
     def as_cache_entry(self) -> dict:
@@ -378,26 +384,59 @@ def seq_bucket(n: int) -> int:
 
 
 def cache_key(device_kind: str, dtype: Any, head_dim: int, bucket: int,
-              mask_class: str, shards: int = 1) -> str:
+              mask_class: str, shards: int = 1, sp: int = 1) -> str:
     """Autotune cache key. ``shards`` > 1 namespaces tensor-parallel
     resolutions (``|tpN``): the per-shard head count changes which tiles
     win, so a sharded entry must never serve — or be served by — the
-    single-device one."""
+    single-device one. ``sp`` > 1 namespaces sequence-parallel prefill
+    resolutions (``|spN``, DESIGN.md §14): the per-shard q slab is
+    ``1/sp`` of the chunk, so both the winning tiles and the KV-movement
+    strategy are sp-specific."""
     key = f"{device_kind}|{_dtype_name(dtype)}|{head_dim}|" \
           f"{bucket}|{mask_class}"
     if shards > 1:
         key += f"|tp{int(shards)}"
+    if sp > 1:
+        key += f"|sp{int(sp)}"
     return key
+
+
+# Nominal HBM bandwidth per device kind, the denominator of the autotune
+# calibration factor (measured effective bytes/s over what the hardware
+# claims). Unknown kinds — CPU CI hosts included — fall back to a generic
+# DDR-class figure; the point of the factor is the RATIO trend per kind,
+# not an absolute roofline.
+_NOMINAL_HBM_BW: dict[str, float] = {
+    "TPU v5 lite": io_model.V5E_HBM_BW,
+    "TPU v5e": io_model.V5E_HBM_BW,
+}
+_FALLBACK_HBM_BW = 5e10
+
+
+def nominal_hbm_bw(device_kind: str) -> float:
+    for k, bw in _NOMINAL_HBM_BW.items():
+        if k.lower() in device_kind.lower():
+            return bw
+    return _FALLBACK_HBM_BW
 
 
 class AutotuneCache:
     """JSON-file persistence for autotuned ``TileConfig``s. Load is lazy;
     every ``put`` rewrites the file (entries are few — one per
-    (device, dtype, head_dim, bucket, mask) class)."""
+    (device, dtype, head_dim, bucket, mask) class).
+
+    Besides the per-key entries the file carries a per-``device_kind``
+    ``calibration`` aggregate (the ROADMAP "measured-vs-model HBM bytes"
+    item): every timed winner whose ``io_model`` byte prediction is known
+    contributes ``(model_hbm_bytes, timed_us)``, from which
+    :meth:`calibration` derives the effective model-implied bandwidth and
+    its ratio to the device's nominal one — the factor by which the
+    analytic surface over/under-predicts on this hardware."""
 
     def __init__(self, path: str):
         self.path = path
         self._entries: dict[str, dict] | None = None
+        self._calib: dict[str, dict] | None = None
         self.hits = 0
         self.misses = 0
 
@@ -405,9 +444,12 @@ class AutotuneCache:
         if self._entries is None:
             try:
                 with open(self.path) as f:
-                    self._entries = json.load(f).get("entries", {})
+                    doc = json.load(f)
+                self._entries = doc.get("entries", {})
+                self._calib = doc.get("calibration", {})
             except (OSError, ValueError):
                 self._entries = {}
+                self._calib = {}
         return self._entries
 
     def get(self, key: str) -> TileConfig | None:
@@ -418,13 +460,44 @@ class AutotuneCache:
         self.hits += 1
         return TileConfig.from_cache_entry(entry)
 
-    def put(self, key: str, cfg: TileConfig, timed_us: float) -> None:
-        entries = self._load()
-        entries[key] = {**cfg.as_cache_entry(), "timed_us": timed_us}
+    def _write(self) -> None:
         os.makedirs(os.path.dirname(self.path) or ".", exist_ok=True)
         with open(self.path, "w") as f:
-            json.dump({"version": 1, "entries": entries}, f, indent=1,
+            json.dump({"version": 1, "entries": self._entries,
+                       "calibration": self._calib}, f, indent=1,
                       sort_keys=True)
+
+    def put(self, key: str, cfg: TileConfig, timed_us: float, *,
+            model_hbm_bytes: float | None = None,
+            device_kind: str | None = None) -> None:
+        entries = self._load()
+        entry = {**cfg.as_cache_entry(), "timed_us": timed_us}
+        if model_hbm_bytes is not None:
+            entry["model_hbm_bytes"] = float(model_hbm_bytes)
+            if timed_us > 0 and device_kind:
+                c = self._calib.setdefault(
+                    device_kind, {"samples": 0, "model_bytes": 0.0,
+                                  "us": 0.0})
+                c["samples"] += 1
+                c["model_bytes"] += float(model_hbm_bytes)
+                c["us"] += float(timed_us)
+        entries[key] = entry
+        self._write()
+
+    def calibration(self, device_kind: str) -> dict | None:
+        """Aggregate calibration for one device kind, or None if no timed
+        sample carried a model prediction yet. ``vs_nominal`` is the
+        measured-vs-io_model factor: model-implied effective bandwidth
+        over the kind's nominal bandwidth (1.0 = the analytic byte counts
+        at nominal speed explain the clock exactly)."""
+        self._load()
+        c = (self._calib or {}).get(device_kind)
+        if not c or c["us"] <= 0:
+            return None
+        bytes_per_s = c["model_bytes"] / (c["us"] * 1e-6)
+        return {"samples": c["samples"],
+                "model_bytes_per_s": bytes_per_s,
+                "vs_nominal": bytes_per_s / nominal_hbm_bw(device_kind)}
 
 
 _CACHE: AutotuneCache | None = None
@@ -493,7 +566,7 @@ def autotune_tiles(sq: int, sk: int, head_dim: int, *, dtype,
                    block_q: int | None = None,
                    block_k: int | None = None,
                    heads_q: int = 1, heads_kv: int = 1,
-                   shards: int = 1) -> TileConfig:
+                   shards: int = 1, sp: int = 1) -> TileConfig:
     """Empirical resolution: cache lookup, else time the analytic chooser's
     top fitting candidates and persist the winner. A pinned ``block_q`` /
     ``block_k`` axis CONSTRAINS the candidate list (only combinations that
@@ -510,7 +583,7 @@ def autotune_tiles(sq: int, sk: int, head_dim: int, *, dtype,
     resolutions never serve each other's winner."""
     bucket = seq_bucket(max(sq, sk))
     key = cache_key(_device_kind(), dtype, head_dim, bucket, mask_class,
-                    shards=shards)
+                    shards=shards, sp=sp)
     if block_q is not None:
         key += f"|bq={block_q}"
     if block_k is not None:
@@ -555,7 +628,13 @@ def autotune_tiles(sq: int, sk: int, head_dim: int, *, dtype,
         backward=backward)
     cfg = dataclasses.replace(analytic, block_q=bq, block_k=bk,
                               kv_major=kvm, source="autotuned")
-    cache.put(key, cfg, t_us)
+    # calibration sample: the winner's io_model byte prediction for the
+    # TIMED shape (batch 1, heads_q heads) vs its clock (ROADMAP item).
+    model_bytes = io_model.flash_hbm_bytes_tiled(
+        bucket, bucket, head_dim, max(heads_q, 1), 1, bq, bk, elt=elt,
+        fwd_and_bwd=backward, kv_major=kvm)
+    cache.put(key, cfg, t_us, model_hbm_bytes=model_bytes,
+              device_kind=_device_kind())
     return cfg
 
 
@@ -657,7 +736,11 @@ def autotune_decode_geometry(capacity: int, head_dim: int, *, dtype,
         page_size=page_size)
     cfg = TileConfig(block_q=1, block_k=blk, decode_block_k=blk,
                      num_decode_splits=splits, source="autotuned")
-    cache.put(key, cfg, t_us)
+    # calibration: decode reads every valid K/V byte exactly once — the
+    # timing harness runs 2 kv heads at full capacity (q/o traffic ~0).
+    model_bytes = float(2 * 2 * capacity * head_dim * _elt_bytes(dtype))
+    cache.put(key, cfg, t_us, model_hbm_bytes=model_bytes,
+              device_kind=_device_kind())
     return cfg
 
 
@@ -709,6 +792,51 @@ def resolve_tiles(block_q: int | None, block_k: int | None, *,
                               block_q=block_q, block_k=block_k,
                               heads_q=heads_q, heads_kv=heads_kv,
                               shards=shards)
+
+
+def resolve_sp_strategy(chunk: int, prefix: int, head_dim: int, *,
+                        heads_q: int = 1, heads_kv: int = 1, sp: int = 1,
+                        dtype: Any = "float32", layers: int = 1) -> dict:
+    """Resolve the sequence-parallel prefill KV-movement strategy and the
+    per-shard (slab) tiles for one engine shape (DESIGN.md §14).
+
+    Costs both strategies against replicated prefill via
+    ``io_model.sp_prefill_hbm_bytes`` using the slab's analytically chosen
+    ``block_q`` (``heads_q``/``heads_kv`` are PER-TP-SHARD counts, matching
+    what the sharded step's kernels see). With autotuning enabled the
+    decision persists under the ``|spN`` cache-key namespace — the
+    ``TileConfig`` entry carries both the slab tiles and ``sp_strategy`` —
+    so repeat engines resolve from the cache.
+
+    Returns ``{"strategy", "costs", "tiles", "source"}``; at sp <= 1 the
+    strategy is "allgather" (degenerate: never used) and nothing persists.
+    """
+    slab = max(1, -(-int(chunk) // max(1, int(sp))))
+    tiles = choose_tile_config(slab, prefix + chunk, head_dim, dtype=dtype,
+                               backward=False, heads_q=heads_q,
+                               heads_kv=heads_kv, shards=max(1, sp))
+    costs = io_model.sp_prefill_hbm_bytes(
+        chunk, prefix, head_dim, max(1, heads_q), max(1, heads_kv), sp,
+        block_q=tiles.block_q, elt=_elt_bytes(dtype), layers=max(1, layers))
+    if sp <= 1:
+        return {"strategy": "allgather", "costs": costs, "tiles": tiles,
+                "source": "analytic"}
+    strategy = costs["best"]
+    if autotune_enabled():
+        key = cache_key(_device_kind(), dtype, head_dim, seq_bucket(chunk),
+                        "causal+seg+pos", sp=sp)
+        cache = autotune_cache()
+        hit = cache.get(key)
+        if hit is not None and hit.sp_strategy in ("allgather", "ring"):
+            return {"strategy": hit.sp_strategy, "costs": costs,
+                    "tiles": hit, "source": "cache"}
+        cfg = dataclasses.replace(tiles, sp_strategy=strategy)
+        # analytic decision, not a timed one: no calibration sample.
+        cache.put(key, cfg, 0.0)
+        return {"strategy": strategy, "costs": costs, "tiles": cfg,
+                "source": "analytic"}
+    return {"strategy": strategy, "costs": costs, "tiles": tiles,
+            "source": "analytic"}
 
 
 def resolve_decode_geometry(capacity: int, block_k: int | None,
@@ -789,6 +917,9 @@ def _main() -> None:
     ap.add_argument("--tp", type=int, default=1,
                     help="tensor-parallel shard count: resolve against the "
                          "per-shard cache-key namespace (|tpN)")
+    ap.add_argument("--sp", type=int, default=1,
+                    help="sequence-parallel shard count: resolve the sp "
+                         "prefill strategy + slab tiles under |spN")
     args = ap.parse_args()
 
     configure_tuning(sram_budget=args.sram_budget, autotune=True,
@@ -820,9 +951,29 @@ def _main() -> None:
     print(f"autotune decode cap={seq} d={args.head_dim}: "
           f"block_k={dec.decode_block_k} splits={dec.num_decode_splits} "
           f"source={dec.source} cache_hit={dec_hit}")
-    if args.expect_hit and not (hit and bwd_hit and dec_hit):
+    sp_hit = True
+    if args.sp > 1:
+        res = resolve_sp_strategy(seq, 4 * seq, args.head_dim, heads_q=2,
+                                  heads_kv=2, sp=args.sp,
+                                  dtype=jnp.float32)
+        sp_hit = res["source"] == "cache"
+        c = res["costs"]
+        print(f"autotune sp={args.sp} chunk={seq}: "
+              f"strategy={res['strategy']} source={res['source']} "
+              f"cache_hit={sp_hit} "
+              f"speedup_vs_replicated="
+              f"{c['replicated'] / min(c['allgather'], c['ring']):.2f}")
+    kind = _device_kind()
+    cal = cache.calibration(kind)
+    if cal is not None:
+        print(f"calibration[{kind}]: io_model-implied "
+              f"{cal['model_bytes_per_s'] / 1e9:.2f} GB/s over "
+              f"{cal['samples']} timed samples = {cal['vs_nominal']:.3f}x "
+              f"nominal ({nominal_hbm_bw(kind) / 1e9:.0f} GB/s)")
+    if args.expect_hit and not (hit and bwd_hit and dec_hit and sp_hit):
         raise SystemExit("expected a cache hit but resolution re-tuned "
-                         f"(fwd={hit} bwd={bwd_hit} decode={dec_hit})")
+                         f"(fwd={hit} bwd={bwd_hit} decode={dec_hit} "
+                         f"sp={sp_hit})")
 
 
 if __name__ == "__main__":

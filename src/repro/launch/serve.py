@@ -18,7 +18,11 @@ greedy to sampling (per-request keys, preemption-safe).
 system-prompt workload): with the prefix cache on (default in paged mode;
 ``--no-prefix-cache`` disables) later requests map those pages read-only
 and skip their prefill — the summary prints hit-rate, pages shared, and
-the HBM bytes saved (DESIGN.md §12). Each step prints
+the HBM bytes saved (DESIGN.md §12). ``--tp``/``--sp`` shard the engine
+over a 2-D (sp, tp) device mesh: tp slices heads, sp slices each prefill
+chunk's query rows with all-gathered or ring-rotated KV (DESIGN.md
+§13–14); the summary prints the strategy, io_model cost surface, and the
+collective censuses. Each step prints
 batch occupancy, page-pool utilization, and the step's prefill/decode
 token split so scheduler behaviour (admission waves, chunk interleaving,
 preemption, reclamation) is visible live."""
@@ -92,6 +96,18 @@ def main():
                          "visible devices (CPU: XLA_FLAGS="
                          "--xla_force_host_platform_device_count=N); "
                          "composes with --prefix-cache and --autotune")
+    ap.add_argument("--sp", type=int, default=1,
+                    help="sequence-parallel shards over the leading axis of "
+                         "a 2-D (sp, tp) mesh (paged mode): each shard owns "
+                         "a contiguous slab of every prefill chunk's query "
+                         "rows; the causal-prefix KV moves by all-gather or "
+                         "ring ppermute, chosen per shape via io_model "
+                         "(override with --sp-strategy); needs sp*tp "
+                         "visible devices")
+    ap.add_argument("--sp-strategy", default=None,
+                    choices=("allgather", "ring"),
+                    help="force the sp KV movement strategy instead of the "
+                         "io_model cost pick")
     args = ap.parse_args()
 
     tuning.configure_tuning(sram_budget=args.sram_budget,
@@ -118,7 +134,8 @@ def main():
                         chunk_size=args.chunk_size,
                         token_budget=args.token_budget,
                         prefix_cache=args.prefix_cache,
-                        tp=args.tp)
+                        tp=args.tp, sp=args.sp,
+                        sp_strategy=args.sp_strategy)
     rng = np.random.default_rng(0)
     shared = list(rng.integers(1, cfg.vocab_size, size=args.shared_prefix))
     t0 = time.perf_counter()
@@ -137,6 +154,8 @@ def main():
     chunked = (f" chunk={args.chunk_size}" if args.chunk_size else "")
     tp_note = (f" tp={args.tp} ({eng.per_shard_cache_bytes()/1e6:.2f} MB"
                f"/shard)" if args.tp > 1 else "")
+    if args.sp > 1:
+        tp_note += f" sp={args.sp}({eng.sp_strategy})"
     print(f"arch={cfg.name} mode={mode}{chunked} lanes={args.slots} "
           f"cache={eng.cache_bytes()/1e6:.2f} MB{tp_note}"
           + (f" pool={eng.kv.num_pages}x{eng.kv.page_size}" if eng.paged
@@ -161,6 +180,14 @@ def main():
               f"{eng.kv.utilization():.0%} (identical on every shard — one "
               f"logical pool, head-sliced), "
               f"{eng.per_shard_cache_bytes()/1e6:.2f} MB KV/shard, "
+              f"decode census {eng.decode_collective_census()}")
+    if eng.sp > 1:
+        c = eng.sp_prefill_costs
+        print(f"sp={eng.sp}: strategy={eng.sp_strategy} "
+              f"(io_model chunk bytes: replicated {c['replicated']/1e6:.2f} "
+              f"MB, allgather {c['allgather']/1e6:.2f} MB, "
+              f"ring {c['ring']/1e6:.2f} MB), "
+              f"prefill census {eng.prefill_collective_census('chunk')}, "
               f"decode census {eng.decode_collective_census()}")
     for r in done[:5]:
         print(f"  req{r.rid}: {len(r.output)} tokens {r.output[:8]}...")

@@ -253,6 +253,51 @@ def paged_kv_cache_specs():
             "v": P(None, "kv_seq", None, None)}
 
 
+def _sp_gather_kv(k: jax.Array, v: jax.Array, cfg: ModelConfig):
+    """Assemble the chunk's FULL K/V across the sequence-parallel axis
+    (DESIGN.md §14). Inside an sp-sharded chunk-prefill step each shard
+    projects only its contiguous slab of the packed query rows; the page
+    pool is REPLICATED over sp, so every shard must scatter the whole
+    chunk — slab K/V therefore move between shards here, by one of two
+    strategies costed in ``io_model.sp_prefill_hbm_bytes``:
+
+    * ``"allgather"``: one ``all_gather(tiled=True)`` per layer over the
+      stacked (k, v) pair — slab order matches the ``P(None, "sp")``
+      input sharding, so the gathered sequence axis is exactly the packed
+      chunk.
+    * ``"ring"``: ``sp - 1`` neighbor ``ppermute`` steps; each shard
+      starts from its own slab and places every arriving slab at the
+      sender's (traced) slot, never materializing more than one in-flight
+      slab beyond the output buffer.
+
+    Both return bit-identical (k, v) of the full chunk on every shard —
+    which is what keeps the sp-replicated pool replicas identical after
+    the scatter. No-op when the config is not sp-sharded.
+    """
+    if cfg.sp_axis is None or cfg.sp_shards <= 1:
+        return k, v
+    kv = jnp.stack([k, v])                       # (2, 1, hkv, slab, hd)
+    n = cfg.sp_shards
+    if cfg.sp_strategy == "ring":
+        slab = kv.shape[3]
+        full = jnp.zeros(kv.shape[:3] + (slab * n,) + kv.shape[4:], kv.dtype)
+        src = jax.lax.axis_index(cfg.sp_axis)
+        cur = kv
+        perm = [(i, (i + 1) % n) for i in range(n)]
+        for step in range(n):
+            full = jax.lax.dynamic_update_slice_in_dim(full, cur, src * slab,
+                                                       axis=3)
+            if step < n - 1:
+                cur = jax.lax.ppermute(cur, cfg.sp_axis, perm)
+                src = (src - 1) % n              # the slab now held came
+                                                 # from the left neighbor
+    elif cfg.sp_strategy == "allgather":
+        full = jax.lax.all_gather(kv, cfg.sp_axis, axis=3, tiled=True)
+    else:
+        raise ValueError(f"unknown sp_strategy {cfg.sp_strategy!r}")
+    return full[0], full[1]
+
+
 def chunk_prefill_attention_step(params, cfg: ModelConfig, x, pool,
                                  dest_page, dest_off, page_list,
                                  q_seg, kv_seg, q_pos, kv_pos,
@@ -275,8 +320,19 @@ def chunk_prefill_attention_step(params, cfg: ModelConfig, x, pool,
     atomic prefill sees. RoPE uses the same logical positions, making the
     K rows written here bit-compatible with atomic-prefill and decode-step
     writes. Returns (out, new_pool).
+
+    Under sequence parallelism (``cfg.sp_axis`` set, DESIGN.md §14) x and
+    the q-side rows (``q_seg``, ``q_pos``) are this shard's SLAB of the
+    packed chunk while everything kv-side (``dest_page``/``dest_off``/
+    ``page_list``/``kv_seg``/``kv_pos``) stays replicated: the projection
+    and RoPE run on the slab's own traced positions (exact for any
+    offset), ``_sp_gather_kv`` assembles the full chunk's K/V, and the
+    scatter + paged attention below are unchanged — each shard writes all
+    chunk rows (keeping pool replicas identical) and attends only its
+    slab's queries.
     """
     q, k, v = _project_qkv(params, cfg, x, x, q_pos, q_pos)
+    k, v = _sp_gather_kv(k, v, cfg)
 
     def _scat(c, new):  # c: (hkv, P, ps, hd); new: (1, hkv, S, hd)
         return c.at[:, dest_page, dest_off, :].set(new[0].astype(c.dtype),

@@ -351,7 +351,14 @@ def apply_stack_chunk_prefill(params: Params, cfg: ModelConfig, x, caches,
                               q_seg, kv_seg, q_pos, kv_pos):
     """Packed prefill chunks through all layers, threading per-layer pools.
     The scatter map and kv page list are layer-invariant (one logical
-    sequence maps to the same pages in every layer's pool)."""
+    sequence maps to the same pages in every layer's pool).
+
+    Sequence-parallel contract (``cfg.sp_axis`` set, DESIGN.md §14): x,
+    ``q_seg`` and ``q_pos`` are this shard's contiguous SLAB of the packed
+    chunk — the per-segment traced positions make the offset slab exact —
+    while ``dest_page``/``dest_off``/``page_list``/``kv_seg``/``kv_pos``
+    cover the FULL chunk on every shard (the pool is sp-replicated; the
+    per-layer KV gather happens inside the attention step)."""
     block = functools.partial(
         apply_block_chunk_prefill, cfg=cfg, dest_page=dest_page,
         dest_off=dest_off, page_list=page_list,

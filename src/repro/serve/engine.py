@@ -133,7 +133,8 @@ class ServingEngine:
                  token_budget: int | None = None,
                  chunk_kv_bucket: int | None = None,
                  prefix_cache: bool | None = None,
-                 tp: int = 1):
+                 tp: int = 1, sp: int = 1,
+                 sp_strategy: str | None = None):
         self.model = model
         self.params = params
         self.B = num_slots
@@ -208,6 +209,43 @@ class ServingEngine:
             if cfg.d_ff and cfg.d_ff % self.tp:
                 raise ValueError(
                     f"d_ff ({cfg.d_ff}) not divisible by tp={self.tp}")
+
+        # ---- sequence parallelism over the sp axis (DESIGN.md §14) ----
+        self.sp = int(sp)
+        if self.sp < 1:
+            raise ValueError(f"sp must be >= 1, got {sp}")
+        if self.sp > 1:
+            if not self.paged:
+                raise ValueError(
+                    "sequence-parallel prefill shards the packed chunk "
+                    "call's query rows; dense slot mode supports sp=1 only "
+                    "(pass paged=True)")
+            if cfg.family != "dense":
+                raise ValueError(
+                    f"sp>1 serving runs prefill through the paged chunk "
+                    f"step; family {cfg.family!r} is out of scope")
+            # every packed prefill call pads its width to prefill_bucket;
+            # rounding the bucket to sp * SUBLANES keeps each shard's slab
+            # a whole number of lane-aligned sublane rows (ragged final
+            # slabs are SEG_PAD_Q/POS_PAD padding rows that self-mask).
+            m = self.sp * io_model.SUBLANES
+            self.prefill_bucket += (-self.prefill_bucket) % m
+            chunk_hint = chunk_size or self.prefill_bucket
+            res = tuning.resolve_sp_strategy(
+                chunk_hint, capacity, cfg.head_dim,
+                heads_q=cfg.num_heads // self.tp,
+                heads_kv=cfg.num_kv_heads // self.tp,
+                sp=self.sp, dtype=cfg.dtype, layers=cfg.num_layers)
+            self.sp_prefill_costs = res["costs"]
+            sp_strategy = sp_strategy or res["strategy"]
+            if sp_strategy not in ("allgather", "ring"):
+                raise ValueError(
+                    f"sp_strategy must be 'allgather' or 'ring', "
+                    f"got {sp_strategy!r}")
+            self.sp_strategy: str | None = sp_strategy
+        else:
+            self.sp_strategy = None
+            self.sp_prefill_costs = None
         # seeds every content-hash chain: pages must never collide across
         # model weights / dtype / attention geometry identities.
         self._model_key = (f"{cfg.name}|{cfg.family}|{cfg.dtype}"
@@ -232,22 +270,31 @@ class ServingEngine:
         self.ttfts: list[float] = []
         self.tok_latencies: list[float] = []
 
-        if self.tp > 1:
+        if self.tp > 1 or self.sp > 1:
             # The mesh and the per-shard MODEL VIEW: inside shard_map every
             # array is a per-shard slice, so the step functions trace with a
             # config whose head/ff counts are the per-shard ones and whose
             # tp_axis makes the two projection boundaries psum
             # (models/attention_layer._tp_reduce). Host bookkeeping (page
             # allocator, prefix hashes, io accounting) keeps the GLOBAL cfg.
-            self.mesh = dist_meshes.tp_mesh(self.tp)
+            # sp composes as the leading axis of a 2-D ("sp", "tp") mesh
+            # (DESIGN.md §14); the tp axis — size 1 when only sp is
+            # requested — always carries the projection psums, so the
+            # census contract is uniform whenever the mesh is active.
+            self.mesh = (dist_meshes.sp_tp_mesh(self.sp, self.tp)
+                         if self.sp > 1 else dist_meshes.tp_mesh(self.tp))
             shard_cfg = dataclasses.replace(
                 cfg,
                 num_heads=cfg.num_heads // self.tp,
                 num_kv_heads=cfg.num_kv_heads // self.tp,
                 d_ff=cfg.d_ff // self.tp,
-                tp_axis="tp", tp_shards=self.tp)
+                tp_axis="tp", tp_shards=self.tp,
+                sp_axis="sp" if self.sp > 1 else None,
+                sp_shards=self.sp,
+                sp_strategy=self.sp_strategy or cfg.sp_strategy)
             self._shard_model = type(model)(shard_cfg)
-            rules = dist_sharding.tp_serve_rules()
+            rules = (dist_sharding.sp_serve_rules() if self.sp > 1
+                     else dist_sharding.tp_serve_rules())
             logical = model.param_specs()
             problems = dist_sharding.validate_divisibility(
                 params, logical, self.mesh, rules)
@@ -282,7 +329,7 @@ class ServingEngine:
                 num_slots, num_pages, page_size, self.pages_per_seq)
             self._kv_len_h = np.zeros((num_slots,), np.int64)
             self._paged_dirty = True     # device table/kv_len need upload
-            if self.tp > 1:
+            if self.mesh is not None:
                 self._build_tp_step_fns()
             else:
                 self._scatter = jax.jit(kvc.scatter_packed_segments,
@@ -294,7 +341,7 @@ class ServingEngine:
             # bound the jit-trace family over a long prompt's prefill, and
             # rounded UP to a page multiple — the in-place kv side is a
             # page LIST, so its packed width must be whole pages.
-            ckb = chunk_kv_bucket or max(prefill_bucket,
+            ckb = chunk_kv_bucket or max(self.prefill_bucket,
                                          2 * (chunk_size or 0))
             self.chunk_kv_bucket = ckb + (-ckb) % page_size
             # hot-path IO the in-place kv side no longer pays: the bytes
@@ -304,7 +351,10 @@ class ServingEngine:
             self.scheduler = ChunkScheduler(
                 SchedulerConfig(num_lanes=num_slots, capacity=capacity,
                                 page_size=page_size, chunk_size=chunk_size,
-                                token_budget=token_budget),
+                                token_budget=token_budget,
+                                # full chunks split into equal sp slabs;
+                                # the bucket padding carries lane alignment
+                                chunk_multiple=self.sp),
                 kv=self.kv)
         else:
             if token_budget is not None:
@@ -368,9 +418,10 @@ class ServingEngine:
                     page_size=page_size if self.paged else None,
                     shards=self.tp)
 
-    # -------------------------------------------------- tensor parallelism
+    # ----------------------------------------- tensor/sequence parallelism
     def _build_tp_step_fns(self) -> None:
-        """shard_map-wrap the four device step functions over the tp mesh.
+        """shard_map-wrap the device step functions over the serving mesh
+        (1-D ``("tp",)``, or 2-D ``("sp", "tp")`` when sp > 1).
 
         Per-shard layout: pool leaves (L, hkv, pages, page_size, hd) and
         packed-prefill leaves (L, 1, hkv, S, hd) shard their KV-HEAD axis;
@@ -379,12 +430,24 @@ class ServingEngine:
         on every shard, and replicated logits make sampling a plain jit
         with no collective. ``check_rep=False`` because the bodies psum at
         the projection boundaries, which jax's replication checker cannot
-        see through in this jax version."""
+        see through in this jax version.
+
+        sp > 1 (DESIGN.md §14) changes ONLY the chunk-prefill call: its
+        q-side batch rows (tokens / q_segment_ids / q_positions) shard
+        ``P(None, "sp")`` — each shard gets one contiguous slab of the
+        packed width — and its logits come back ``P(None, "sp", None)``;
+        everything kv-side stays replicated, and the pool's specs leave
+        "sp" unmentioned (= replicated), which is sound because every
+        shard scatters the full gathered chunk (see
+        ``attention_layer._sp_gather_kv``). Decode runs sp-replicated:
+        its specs never mention "sp", so every sp row of the mesh computes
+        the identical step and the census stays psum-only. The packed
+        zero-offset prefill + scatter pair is a sp=1-only path — at sp > 1
+        the engine routes ALL chunks (zero-offset included) through the
+        chunk step, whose suffix machinery is exact at start=0."""
         mesh = self.mesh
         pool_spec = jax.tree.map(
             lambda _: P(None, "tp", None, None, None), self.state["caches"])
-        packed_spec = jax.tree.map(
-            lambda _: P(None, None, "tp", None, None), self.state["caches"])
         state_spec = {"caches": pool_spec, "page_table": P(), "kv_len": P()}
         self._state_spec = state_spec
         sm = self._shard_model
@@ -394,25 +457,32 @@ class ServingEngine:
             in_specs=(self._param_specs, state_spec, P()),
             out_specs=(state_spec, P()), check_rep=False)
         self._decode = jax.jit(self._decode_sm, donate_argnums=(1,))
-        self._scatter = jax.jit(
-            shard_map(kvc.scatter_packed_segments, mesh=mesh,
-                      in_specs=(pool_spec, packed_spec, P(), P()),
-                      out_specs=pool_spec, check_rep=False),
-            donate_argnums=(0,))
-        self._prefill_packed_sm = shard_map(
-            sm.prefill_packed, mesh=mesh,
-            in_specs=(self._param_specs,
-                      {"tokens": P(), "segment_ids": P()}),
-            out_specs=(packed_spec, P()), check_rep=False)
-        self._prefill_packed = jax.jit(self._prefill_packed_sm)
+        if self.sp == 1:
+            packed_spec = jax.tree.map(
+                lambda _: P(None, None, "tp", None, None),
+                self.state["caches"])
+            self._scatter_sm = shard_map(
+                kvc.scatter_packed_segments, mesh=mesh,
+                in_specs=(pool_spec, packed_spec, P(), P()),
+                out_specs=pool_spec, check_rep=False)
+            self._scatter = jax.jit(self._scatter_sm, donate_argnums=(0,))
+            self._prefill_packed_sm = shard_map(
+                sm.prefill_packed, mesh=mesh,
+                in_specs=(self._param_specs,
+                          {"tokens": P(), "segment_ids": P()}),
+                out_specs=(packed_spec, P()), check_rep=False)
+            self._prefill_packed = jax.jit(self._prefill_packed_sm)
+        q_spec = P(None, "sp") if self.sp > 1 else P()
+        logits_spec = P(None, "sp", None) if self.sp > 1 else P()
         chunk_batch_spec = {
-            "tokens": P(), "q_segment_ids": P(), "q_positions": P(),
+            "tokens": q_spec, "q_segment_ids": q_spec, "q_positions": q_spec,
             "kv_segment_ids": P(), "kv_positions": P(),
             "dest_page": P(), "dest_off": P(), "page_list": P()}
+        self._chunk_batch_spec = chunk_batch_spec
         self._prefill_chunk_sm = shard_map(
             sm.prefill_chunk_paged, mesh=mesh,
             in_specs=(self._param_specs, chunk_batch_spec, pool_spec),
-            out_specs=(pool_spec, P()), check_rep=False)
+            out_specs=(pool_spec, logits_spec), check_rep=False)
         self._prefill_chunk = jax.jit(self._prefill_chunk_sm,
                                       donate_argnums=(2,))
         # shard the freshly built (zero) pool in place; table/len replicated
@@ -424,12 +494,71 @@ class ServingEngine:
         """Collective primitives in one sharded decode step's jaxpr —
         the "no hidden communication" assertion (DESIGN.md §13): exactly
         ``{"psum": 2}`` per traced layer (attention-output + MLP down
-        projections), nothing inside attention, cache writes, or sampling.
-        Empty at tp=1."""
-        if self.tp == 1:
+        projections), nothing inside attention, cache writes, or sampling
+        — at sp > 1 included (decode is sp-replicated, its specs never
+        mention the sp axis). Empty when unsharded."""
+        if self.mesh is None:
             return {}
         tok = jnp.zeros((self.B,), jnp.int32)
         jaxpr = jax.make_jaxpr(self._decode_sm)(self.params, self.state, tok)
+        return dist_sharding.collective_census(jaxpr)
+
+    def prefill_collective_census(self, kind: str = "chunk") -> dict[str, int]:
+        """Collective census of one sharded PREFILL step function's jaxpr
+        (abstract trace — nothing executes). Kinds:
+
+        * ``"chunk"`` — the paged suffix/zero chunk step
+          (``prefill_chunk_paged``): the sp tentpole's contract is
+          ``dist_sharding.expected_sp_prefill_census(traced_layers,
+          sp=..., strategy=...)`` — the 2/layer projection psums plus the
+          sp KV movement (one all_gather/layer, or (sp-1) ppermutes).
+        * ``"packed"`` — the zero-offset packed prefill (sp=1 only; at
+          sp > 1 zero chunks route through the chunk step): psums only.
+        * ``"scatter"`` — the packed->pool page scatter (sp=1 only): a
+          pure data movement, expected census ``{}``.
+
+        Empty when unsharded or in dense mode.
+        """
+        if self.mesh is None or not self.paged:
+            return {}
+        S = self.prefill_bucket
+        if kind == "chunk":
+            Sk = self.chunk_kv_bucket
+            batch = {
+                "tokens": jnp.zeros((1, S), jnp.int32),
+                "q_segment_ids": jnp.full((1, S), SEG_PAD_Q, jnp.int32),
+                "q_positions": jnp.full((1, S), POS_PAD, jnp.int32),
+                "kv_segment_ids": jnp.zeros((1, Sk), jnp.int32),
+                "kv_positions": jnp.zeros((1, Sk), jnp.int32),
+                "dest_page": jnp.full((S,), self.kv.num_pages, jnp.int32),
+                "dest_off": jnp.zeros((S,), jnp.int32),
+                "page_list": jnp.zeros((1, Sk // self.page_size), jnp.int32),
+            }
+            jaxpr = jax.make_jaxpr(self._prefill_chunk_sm)(
+                self.params, batch, self.state["caches"])
+        elif kind == "packed":
+            if self.sp > 1:
+                raise ValueError(
+                    "sp>1 routes zero-offset chunks through the chunk "
+                    "step; census kind='chunk' instead")
+            batch = {"tokens": jnp.zeros((1, S), jnp.int32),
+                     "segment_ids": jnp.full((1, S), SEG_PAD_Q, jnp.int32)}
+            jaxpr = jax.make_jaxpr(self._prefill_packed_sm)(
+                self.params, batch)
+        elif kind == "scatter":
+            if self.sp > 1:
+                raise ValueError(
+                    "the packed->pool scatter is an sp=1-only path")
+            packed = jax.tree.map(
+                lambda c: jnp.zeros((c.shape[0], 1, c.shape[1], S,
+                                     c.shape[4]), c.dtype),
+                self.state["caches"])
+            dest_page = jnp.full((S,), self.kv.num_pages, jnp.int32)
+            dest_off = jnp.zeros((S,), jnp.int32)
+            jaxpr = jax.make_jaxpr(self._scatter_sm)(
+                self.state["caches"], packed, dest_page, dest_off)
+        else:
+            raise ValueError(f"unknown prefill census kind {kind!r}")
         return dist_sharding.collective_census(jaxpr)
 
     # ----------------------------------------------------------------- admit
@@ -824,7 +953,7 @@ class ServingEngine:
             pt = jnp.asarray(
                 self.kv.table_array(row_rids, self.pages_per_seq))
             kl = jnp.asarray(self._kv_len_h, jnp.int32)
-            if self.tp > 1:
+            if self.mesh is not None:
                 # commit the host uploads replicated on the mesh so the
                 # whole (donated) state keeps shardings matching in_specs
                 pt = jax.device_put(pt, self._rep)
@@ -871,7 +1000,13 @@ class ServingEngine:
 
         zero = [t for t in plan.prefill if t.start == 0]
         suffix = [t for t in plan.prefill if t.start > 0]
-        if self.paged:
+        if self.paged and self.sp > 1:
+            # one step function at sp>1: the chunk path is exact at
+            # start=0 and carries the P(None,"sp") q-row sharding; the
+            # packed+scatter pair was never built on the 2-D mesh.
+            if plan.prefill:
+                self._exec_suffix_paged(list(plan.prefill))
+        elif self.paged:
             if zero:
                 if self.packed_prefill and len(zero) > 1:
                     self._exec_zero_paged(zero)

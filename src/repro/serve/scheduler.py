@@ -62,18 +62,30 @@ class SchedulerConfig:
     never be scheduled — and must fit at least one full chunk. The default
     budget for chunked mode is ``num_lanes + chunk_size``: every decoder
     plus one full chunk per step.
+
+    ``chunk_multiple`` rounds ``chunk_size`` UP to a multiple at
+    construction — the sequence-parallel engine passes its sp shard count
+    (DESIGN.md §14) so every FULL chunk splits into equal per-shard slabs
+    (the packed call's bucket padding carries the lane alignment; a
+    ragged FINAL chunk still pads inside the call and stays exact).
+    Rounding happens before the ``token_budget`` validation, so a budget
+    must fit the ROUNDED chunk.
     """
     num_lanes: int
     capacity: int
     page_size: int | None = None       # None = dense (no page accounting)
     chunk_size: int | None = None      # None = atomic prefill
     token_budget: int | None = None
+    chunk_multiple: int = 1
 
     def __post_init__(self):
         if self.num_lanes < 1:
             raise ValueError(f"need at least one lane, got {self.num_lanes}")
         if self.capacity < 1:
             raise ValueError(f"capacity must be positive, got {self.capacity}")
+        if self.chunk_multiple < 1:
+            raise ValueError(f"chunk_multiple must be positive, "
+                             f"got {self.chunk_multiple}")
         if self.chunk_size is not None:
             if self.page_size is None:
                 raise ValueError(
@@ -83,6 +95,11 @@ class SchedulerConfig:
             if self.chunk_size < 1:
                 raise ValueError(f"chunk_size must be positive, "
                                  f"got {self.chunk_size}")
+            if self.chunk_multiple > 1 and self.chunk_size % self.chunk_multiple:
+                object.__setattr__(
+                    self, "chunk_size",
+                    self.chunk_size
+                    + (-self.chunk_size) % self.chunk_multiple)
         if self.token_budget is not None:
             if self.chunk_size is None:
                 raise ValueError(

@@ -1,0 +1,248 @@
+"""Sequence-parallel chunked prefill (DESIGN.md §14): token identity vs
+the single-device engine over sp x tp mesh combos — ragged final slabs,
+mid-prefill preemption -> resume, prefix-cache hits that shorten the
+suffix below one sp slab — plus the prefill collective census contract,
+the |spN tuning-cache namespace, the io_model cost surface, and the
+scheduler's chunk-rounding invariant.
+
+Device tests carry the ``multidevice`` marker — tests/conftest.py sets
+``--xla_force_host_platform_device_count=8`` before jax initializes and
+skips them when the flag could not take effect."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import reduced_config
+from repro.core import io_model
+from repro.distributed.sharding import expected_sp_prefill_census
+from repro.kernels import tuning
+from repro.models import build_model
+from repro.serve.engine import ServingEngine
+from repro.serve.scheduler import SchedulerConfig
+
+CFG_KW = dict(num_layers=2, d_model=64, num_heads=8, num_kv_heads=4,
+              head_dim=8, d_ff=128, vocab_size=128, dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced_config("granite-3-2b", **CFG_KW)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _engine(model, params, sp=1, tp=1, **kw):
+    kw.setdefault("num_slots", 4)
+    kw.setdefault("capacity", 64)
+    kw.setdefault("page_size", 8)
+    return ServingEngine(model, params, paged=True, sp=sp, tp=tp, **kw)
+
+
+def _drive(eng, prompts, max_new=8):
+    for i, p in enumerate(prompts):
+        eng.submit(p, max_new_tokens=max_new,
+                   temperature=0.7 if i % 2 else 0.0, seed=23 + i)
+    return {r.rid: r.output for r in eng.run()}
+
+
+def _traced_layers(cfg):
+    return 1 if cfg.scan_layers else cfg.num_layers
+
+
+# --------------------------------------------------------- token identity
+@pytest.mark.multidevice
+@pytest.mark.parametrize("sp,tp", [(2, 1), (2, 2), (4, 1), (4, 2)])
+def test_token_identity_sweep(setup, sp, tp):
+    """Every sp x tp mesh combo reproduces the single-device token streams
+    across greedy and sampled lanes. Prompt lengths are deliberately NOT
+    multiples of sp * chunk_size: the final slab of most chunks is ragged
+    and covered by self-masking padding rows."""
+    cfg, model, params = setup
+    rng = np.random.default_rng(0)
+    prompts = [list(map(int, rng.integers(1, cfg.vocab_size, size=n)))
+               for n in (11, 7, 13, 9)]
+    base = _drive(_engine(model, params), prompts)
+    eng = _engine(model, params, sp=sp, tp=tp, chunk_size=4)
+    assert _drive(eng, prompts) == base
+    assert eng.sp_strategy in ("allgather", "ring")
+
+
+@pytest.mark.multidevice
+def test_token_identity_atomic_prefill(setup):
+    """With no chunk_size every prefill is one zero-offset chunk; sp>1
+    routes it through the (start=0-exact) paged chunk step instead of the
+    packed+scatter pair, and stays token-identical."""
+    cfg, model, params = setup
+    rng = np.random.default_rng(2)
+    prompts = [list(map(int, rng.integers(1, cfg.vocab_size, size=n)))
+               for n in (11, 6, 14)]
+    base = _drive(_engine(model, params), prompts)
+    eng = _engine(model, params, sp=2, tp=2)
+    assert _drive(eng, prompts) == base
+
+
+@pytest.mark.multidevice
+def test_token_identity_under_preemption(setup):
+    """A page pool too small for the workload forces mid-stream
+    preemptions; the resumed prefill re-runs through the sp-sharded chunk
+    step and the continuation is token-identical."""
+    cfg, model, params = setup
+    rng = np.random.default_rng(1)
+    prompts = [list(map(int, rng.integers(1, cfg.vocab_size, size=10)))
+               for _ in range(4)]
+    kw = dict(num_pages=10, chunk_size=4, prefix_cache=False)
+    e1 = _engine(model, params, **kw)
+    e2 = _engine(model, params, sp=2, tp=2, **kw)
+    o1 = _drive(e1, prompts, max_new=14)
+    o2 = _drive(e2, prompts, max_new=14)
+    assert e1.preemptions > 0, "workload did not force a preemption"
+    assert e2.preemptions == e1.preemptions
+    assert o1 == o2
+
+
+@pytest.mark.multidevice
+def test_prefix_hit_shortens_suffix_below_one_slab(setup):
+    """A prefix-cache hit maps whole pages and prefills only the prompt
+    tail — here 1 token, far below one sp slab (sp=4 over chunk 8), so
+    all but one shard's slab is pure padding. Outputs stay identical and
+    the hit actually happened on both engines."""
+    cfg, model, params = setup
+    rng = np.random.default_rng(3)
+    dup = list(map(int, rng.integers(1, cfg.vocab_size, size=17)))
+    other = list(map(int, rng.integers(1, cfg.vocab_size, size=9)))
+    kw = dict(chunk_size=8)
+
+    def drive(sp, tp):
+        eng = _engine(model, params, sp=sp, tp=tp, **kw)
+        out = _drive(eng, [dup])          # prime: publish dup's full pages
+        out.update(_drive(eng, [other, dup]))
+        return out, eng
+
+    o1, e1 = drive(1, 1)
+    o2, e2 = drive(4, 2)
+    assert o1 == o2
+    assert e2.prefix_hits > 0 and e2.prefix_hits == e1.prefix_hits
+    assert e2.prefill_tokens_skipped == e1.prefill_tokens_skipped > 0
+
+
+# ----------------------------------------------------------------- census
+@pytest.mark.multidevice
+@pytest.mark.parametrize("strategy", ["allgather", "ring"])
+def test_sp_prefill_census(setup, strategy):
+    """The sp chunk step's jaxpr contains EXACTLY the declared
+    collectives: the 2/layer projection psums plus one all_gather/layer
+    (or sp-1 ppermutes/layer) on the KV path — nothing else, and decode
+    stays psum-only (sp-replicated)."""
+    cfg, model, params = setup
+    eng = _engine(model, params, sp=2, tp=2, sp_strategy=strategy)
+    L = _traced_layers(cfg)
+    assert (eng.prefill_collective_census("chunk")
+            == expected_sp_prefill_census(L, sp=2, strategy=strategy))
+    assert eng.decode_collective_census() == {"psum": 2 * L}
+    # the packed/scatter pair is an sp=1-only path
+    with pytest.raises(ValueError, match="chunk"):
+        eng.prefill_collective_census("packed")
+    with pytest.raises(ValueError, match="sp=1"):
+        eng.prefill_collective_census("scatter")
+
+
+@pytest.mark.multidevice
+def test_prefill_census_tp_only(setup):
+    """Satellite: census assertions extend to every prefill step kind.
+    At tp-only the packed and chunk prefills carry exactly the projection
+    psums; the packed->pool scatter is pure data movement (empty census);
+    unsharded engines census empty everywhere."""
+    cfg, model, params = setup
+    eng = _engine(model, params, tp=2)
+    L = _traced_layers(cfg)
+    assert eng.prefill_collective_census("chunk") == {"psum": 2 * L}
+    assert eng.prefill_collective_census("packed") == {"psum": 2 * L}
+    assert eng.prefill_collective_census("scatter") == {}
+    e1 = _engine(model, params)
+    assert e1.prefill_collective_census("chunk") == {}
+    assert e1.decode_collective_census() == {}
+    with pytest.raises(ValueError, match="kind"):
+        eng.prefill_collective_census("bogus")
+
+
+def test_expected_census_helper():
+    assert (expected_sp_prefill_census(3, sp=4, strategy="ring")
+            == {"psum": 6, "ppermute": 9})
+    assert (expected_sp_prefill_census(3, sp=4, strategy="allgather")
+            == {"psum": 6, "all_gather": 3})
+    assert expected_sp_prefill_census(2, sp=1) == {"psum": 4}
+    with pytest.raises(ValueError):
+        expected_sp_prefill_census(2, sp=2, strategy="teleport")
+
+
+# ----------------------------------------------------- tuning + io_model
+def test_tuning_cache_key_namespaces_sp():
+    """|spN composes with |tpN: sp entries never serve — or are served
+    by — replicated or tp-only resolutions."""
+    k = tuning.cache_key("cpu", "float32", 64, 1024, "causal",
+                         shards=2, sp=4)
+    assert k.endswith("|tp2|sp4")
+    k1 = tuning.cache_key("cpu", "float32", 64, 1024, "causal")
+    assert "|sp" not in k1 and "|tp" not in k1
+
+
+def test_resolve_sp_strategy_shapes():
+    """The resolver prices both strategies with the SLAB's tile geometry
+    and returns the io_model pick; sp=1 degenerates to the replicated
+    cost with no strategy decision to persist."""
+    res = tuning.resolve_sp_strategy(1024, 4096, 64, heads_q=8, heads_kv=4,
+                                     sp=4, dtype="float32", layers=2)
+    assert res["strategy"] == res["costs"]["best"]
+    assert res["strategy"] in ("allgather", "ring")
+    assert res["costs"]["best"] != "replicated"
+    r1 = tuning.resolve_sp_strategy(1024, 4096, 64, sp=1)
+    assert r1["costs"]["best"] == "replicated"
+
+
+def test_io_model_sp_cost_surface():
+    """Strategy crossover: tiny chunks are launch-dominated (allgather's
+    single collective wins); large chunks are bandwidth-dominated (ring
+    skips the gathered-KV materialization). Sharding always beats
+    replicated compute at sp=1 parity."""
+    c = io_model.sp_prefill_hbm_bytes(128, 512, 64, 2, 2, 4, elt=2)
+    assert c["best"] == "allgather"
+    c = io_model.sp_prefill_hbm_bytes(8192, 8192, 64, 8, 4, 4, elt=2)
+    assert c["best"] == "ring"
+    c = io_model.sp_prefill_hbm_bytes(1024, 8192, 32, 2, 1, 4, elt=4)
+    assert min(c["allgather"], c["ring"]) < c["replicated"]
+    c1 = io_model.sp_prefill_hbm_bytes(1024, 8192, 32, 2, 1, 1, elt=4)
+    assert c1["best"] == "replicated"
+    assert c1["allgather"] == c1["ring"] == c1["replicated"]
+
+
+# ------------------------------------------------- scheduler + validation
+def test_scheduler_chunk_rounding():
+    """chunk_multiple rounds chunk_size UP to sp-shard granularity so
+    every full chunk splits into equal slabs; multiple=1 never touches
+    the configured size."""
+    c = SchedulerConfig(num_lanes=2, capacity=64, page_size=8,
+                        chunk_size=6, chunk_multiple=4)
+    assert c.chunk_size == 8
+    c = SchedulerConfig(num_lanes=2, capacity=64, page_size=8,
+                        chunk_size=6)
+    assert c.chunk_size == 6
+    with pytest.raises(ValueError):
+        SchedulerConfig(num_lanes=2, capacity=64, chunk_multiple=0)
+
+
+def test_construction_errors(setup):
+    """sp misconfiguration fails at construction with actionable messages:
+    sp<1, dense slot mode, a mesh larger than the visible devices, and an
+    unknown strategy name."""
+    cfg, model, params = setup
+    with pytest.raises(ValueError, match="sp must be >= 1"):
+        _engine(model, params, sp=0)
+    with pytest.raises(ValueError, match="dense slot mode"):
+        ServingEngine(model, params, num_slots=2, capacity=32, paged=False,
+                      sp=2)
+    with pytest.raises(ValueError, match="devices"):
+        _engine(model, params, sp=8, tp=2)    # 16 > 8 visible
+    with pytest.raises(ValueError, match="sp_strategy"):
+        _engine(model, params, sp=2, sp_strategy="teleport")

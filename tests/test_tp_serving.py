@@ -107,6 +107,22 @@ def test_decode_census_psum_only(setup):
 
 
 @pytest.mark.multidevice
+def test_prefill_census_per_step_kind(setup):
+    """The census contract extends to every PREFILL step function: the
+    packed zero-offset prefill and the paged chunk step each carry
+    exactly the two per-layer projection psums (same multiset as decode),
+    and the packed->pool scatter is pure data movement — empty census.
+    Unsharded engines census empty for every kind."""
+    cfg, model, params = setup
+    eng = _engine(model, params, tp=2)
+    expected = {"psum": 2 if cfg.scan_layers else 2 * cfg.num_layers}
+    assert eng.prefill_collective_census("packed") == expected
+    assert eng.prefill_collective_census("chunk") == expected
+    assert eng.prefill_collective_census("scatter") == {}
+    assert _engine(model, params, tp=1).prefill_collective_census() == {}
+
+
+@pytest.mark.multidevice
 def test_per_shard_kv_bytes_shrink(setup):
     """One logical pool: global bytes are shard-count invariant while each
     device holds exactly 1/tp of every page (the head slices)."""
