@@ -46,6 +46,9 @@ _HIGHER_BETTER = re.compile(r"(tok_per_s|_toks$|concurrency|gain|speedup)")
 _EXPLICIT = {
     "serve_sp_prefill_speedup": +1,
     "serve_sp_psum_bytes": -1,
+    # Tracing-disabled overhead contract (DESIGN.md §15): the pct is
+    # asserted < 5 inside the bench, and must never creep up quietly.
+    "serve_trace_overhead_pct": -1,
 }
 
 
@@ -124,6 +127,9 @@ def main() -> None:
                     help="relative change below which a row is noise")
     ap.add_argument("--strict", action="store_true",
                     help="exit nonzero when a regression is flagged")
+    ap.add_argument("--json", action="store_true",
+                    help="emit the diff as one JSON object on stdout "
+                         "instead of the table (same exit-code contract)")
     args = ap.parse_args()
 
     runs = load_runs(args.results_dir)
@@ -137,24 +143,43 @@ def main() -> None:
             raise SystemExit(2)
     base, head = pick_pair(runs, args.base, args.head)
     if head is None or base is None:
-        print(f"nothing to diff: {len(runs)} run(s) in {args.results_dir} "
-              f"(need two with a matching smoke flag)")
+        if args.json:
+            json.dump({"base": base, "head": head, "rows": [],
+                       "regressions": 0}, sys.stdout, indent=1)
+            print()
+        else:
+            print(f"nothing to diff: {len(runs)} run(s) in "
+                  f"{args.results_dir} (need two with a matching smoke "
+                  f"flag)")
         return
 
-    print(f"# BENCH_{base} -> BENCH_{head} "
-          f"(smoke={runs[head].get('smoke', False)}, "
-          f"threshold={args.threshold:.0%})")
-    print(f"{'name':<40} {'base':>12} {'head':>12} {'delta':>8}  status")
+    rows = []
     regressions = 0
     for name, b, h, rel, status in diff_runs(runs[base], runs[head],
                                              args.threshold):
-        if status == "new":
-            print(f"{name:<40} {'-':>12} {h:>12.4g} {'-':>8}  new")
-            continue
         if status == "REGRESSION":
             regressions += 1
-        print(f"{name:<40} {b:>12.4g} {h:>12.4g} {rel:>+7.1%}  {status}")
-    print(f"# {regressions} regression(s) flagged")
+        rows.append({"name": name, "base": b, "head": h,
+                     "rel_change": rel, "status": status})
+    if args.json:
+        json.dump({"base": base, "head": head,
+                   "smoke": runs[head].get("smoke", False),
+                   "threshold": args.threshold, "rows": rows,
+                   "regressions": regressions}, sys.stdout, indent=1)
+        print()
+    else:
+        print(f"# BENCH_{base} -> BENCH_{head} "
+              f"(smoke={runs[head].get('smoke', False)}, "
+              f"threshold={args.threshold:.0%})")
+        print(f"{'name':<40} {'base':>12} {'head':>12} {'delta':>8}  status")
+        for r in rows:
+            if r["status"] == "new":
+                print(f"{r['name']:<40} {'-':>12} {r['head']:>12.4g} "
+                      f"{'-':>8}  new")
+                continue
+            print(f"{r['name']:<40} {r['base']:>12.4g} {r['head']:>12.4g} "
+                  f"{r['rel_change']:>+7.1%}  {r['status']}")
+        print(f"# {regressions} regression(s) flagged")
     if regressions and args.strict:
         raise SystemExit(1)
 

@@ -51,6 +51,12 @@ def main():
                          "pool and projections shard by heads over a (tp,) "
                          "mesh; needs tp visible devices (CPU: XLA_FLAGS="
                          "--xla_force_host_platform_device_count=N)")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="write a Chrome trace-event JSON of the serve "
+                         "(open in Perfetto / chrome://tracing)")
+    ap.add_argument("--metrics", action="store_true",
+                    help="print the metrics-registry table and IO ledger "
+                         "at exit")
     args = ap.parse_args()
     if args.chunk_size and args.dense:
         ap.error("--chunk-size requires the paged engine (drop --dense)")
@@ -82,7 +88,8 @@ def main():
     dense_slots, capacity = 4, 64
     if args.dense:
         eng = ServingEngine(model, params, num_slots=dense_slots,
-                            capacity=capacity, paged=False)
+                            capacity=capacity, paged=False,
+                            trace=bool(args.trace))
         print(f"dense: {dense_slots} slots x {capacity} capacity")
     else:
         # short requests only hold the pages they actually fill, so the
@@ -95,7 +102,8 @@ def main():
                             page_size=args.page_size, num_pages=args.pages,
                             chunk_size=args.chunk_size,
                             token_budget=args.token_budget,
-                            prefix_cache=args.prefix_cache, tp=args.tp)
+                            prefix_cache=args.prefix_cache, tp=args.tp,
+                            trace=bool(args.trace))
         chunked = (f", chunked prefill {args.chunk_size}t/step"
                    if args.chunk_size else "")
         tp_note = (f", tp={args.tp} "
@@ -146,6 +154,14 @@ def main():
     ok = all(r.output == greedy(prompts[r.rid], len(r.output)) for r in done)
     print(f"token-exact vs sequential greedy: {ok}")
     assert ok
+    if args.trace:
+        n = eng.tm.tracer.to_chrome_trace(args.trace)
+        print(f"trace: {n} events -> {args.trace}")
+    if args.metrics:
+        print("\n-- metrics registry --")
+        print(eng.tm.registry.table())
+        print("\n-- IO ledger --")
+        print(eng.tm.ledger.table())
 
 
 if __name__ == "__main__":

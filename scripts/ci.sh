@@ -55,8 +55,22 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
 echo "== benchmark smoke (benchmarks.run --smoke) =="
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.run --smoke
 
+echo "== traced serving smoke (launch.serve --smoke --trace) =="
+# pressure preset forcing a preemption->resume plus prefix hits; the
+# exported Chrome trace must pass the schema validator (every step span
+# priced in HBM bytes, every request lifecycle reconstructable —
+# DESIGN.md §15).
+SERVE_TRACE="$(mktemp -d)/serve_trace.json"
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m repro.launch.serve --smoke --trace "$SERVE_TRACE" --metrics
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m repro.telemetry.validate "$SERVE_TRACE"
+
 echo "== benchmark trajectory (benchmarks.report) =="
 # diff the run just written against the previous compatible BENCH_<n>.json
 # and print flagged regressions in every CI log (non-strict: CPU timing
 # noise makes a hard gate counterproductive; the trajectory stays visible).
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.report
+# same diff, machine-readable (consumed by dashboards; same exit-code
+# contract as the table form).
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.report --json

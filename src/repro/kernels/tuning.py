@@ -44,6 +44,7 @@ import os
 from typing import Any
 
 from repro.core import io_model
+from repro.telemetry.metrics import default_registry
 
 LANES = io_model.LANES
 SUBLANES = io_model.SUBLANES
@@ -456,8 +457,10 @@ class AutotuneCache:
         entry = self._load().get(key)
         if entry is None:
             self.misses += 1
+            default_registry().counter("tuning_cache_misses").inc()
             return None
         self.hits += 1
+        default_registry().counter("tuning_cache_hits").inc()
         return TileConfig.from_cache_entry(entry)
 
     def _write(self) -> None:
@@ -471,6 +474,10 @@ class AutotuneCache:
             model_hbm_bytes: float | None = None,
             device_kind: str | None = None) -> None:
         entries = self._load()
+        default_registry().histogram(
+            "autotune_timed_us",
+            buckets=(10.0, 50.0, 100.0, 500.0, 1000.0, 5000.0, 10000.0,
+                     50000.0)).observe(float(timed_us))
         entry = {**cfg.as_cache_entry(), "timed_us": timed_us}
         if model_hbm_bytes is not None:
             entry["model_hbm_bytes"] = float(model_hbm_bytes)

@@ -108,7 +108,30 @@ def main():
                     choices=("allgather", "ring"),
                     help="force the sp KV movement strategy instead of the "
                          "io_model cost pick")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="record the serve and write a Chrome trace-event "
+                         "JSON here (load in Perfetto / chrome://tracing; "
+                         "validate with python -m repro.telemetry.validate)")
+    ap.add_argument("--metrics", action="store_true",
+                    help="print the metrics-registry table and the IO "
+                         "ledger (predicted HBM bytes per step kind) at "
+                         "exit")
+    ap.add_argument("--smoke", action="store_true",
+                    help="preset pressure workload (tight page pool + "
+                         "chunked prefill + shared prefix) that forces at "
+                         "least one preemption→resume and prefix hits — "
+                         "the CI trace-validation scenario")
     args = ap.parse_args()
+
+    if args.smoke:
+        # Tight pool + two long chunked prompts: decode outgrows the pages,
+        # the scheduler preempts a lane and resumes it after reclamation;
+        # the shared prefix gives the prefix cache hits to annotate.
+        args.slots, args.capacity, args.dense = 2, 32, False
+        args.page_size, args.pages = 8, 4
+        args.chunk_size, args.token_budget = 8, 18
+        args.requests, args.max_new = 2, 5
+        args.long_prompt, args.shared_prefix = 16, 8
 
     tuning.configure_tuning(sram_budget=args.sram_budget,
                             autotune=args.autotune or None)
@@ -135,7 +158,8 @@ def main():
                         token_budget=args.token_budget,
                         prefix_cache=args.prefix_cache,
                         tp=args.tp, sp=args.sp,
-                        sp_strategy=args.sp_strategy)
+                        sp_strategy=args.sp_strategy,
+                        trace=bool(args.trace))
     rng = np.random.default_rng(0)
     shared = list(rng.integers(1, cfg.vocab_size, size=args.shared_prefix))
     t0 = time.perf_counter()
@@ -191,6 +215,15 @@ def main():
               f"decode census {eng.decode_collective_census()}")
     for r in done[:5]:
         print(f"  req{r.rid}: {len(r.output)} tokens {r.output[:8]}...")
+    if args.trace:
+        n = eng.tm.tracer.to_chrome_trace(args.trace)
+        print(f"trace: {n} events -> {args.trace} "
+              f"(validate: python -m repro.telemetry.validate {args.trace})")
+    if args.metrics:
+        print("\n-- metrics registry --")
+        print(eng.tm.registry.table())
+        print("\n-- IO ledger (predicted HBM bytes per step kind) --")
+        print(eng.tm.ledger.table())
 
 
 if __name__ == "__main__":

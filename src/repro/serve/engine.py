@@ -92,6 +92,7 @@ from repro.models.model_zoo import Model
 from repro.serve import kv_cache as kvc
 from repro.serve import sampling
 from repro.serve.scheduler import ChunkScheduler, ChunkTask, SchedulerConfig
+from repro.telemetry import IOLedger, ServePriceModel, Telemetry
 
 try:  # jax >= 0.4.30 module move
     from jax.experimental.shard_map import shard_map
@@ -134,7 +135,8 @@ class ServingEngine:
                  chunk_kv_bucket: int | None = None,
                  prefix_cache: bool | None = None,
                  tp: int = 1, sp: int = 1,
-                 sp_strategy: str | None = None):
+                 sp_strategy: str | None = None,
+                 telemetry: Telemetry | None = None, trace: bool = False):
         self.model = model
         self.params = params
         self.B = num_slots
@@ -142,19 +144,48 @@ class ServingEngine:
         self.eos_id = eos_id
         self.packed_prefill = packed_prefill and model.supports_packed_prefill()
         self.prefill_bucket = prefill_bucket
-        self.prefill_calls = 0
-        self.decode_calls = 0
+        # Telemetry bundle (registry + tracer + IO ledger, DESIGN.md §15):
+        # every historical ad-hoc counter becomes a registry series and the
+        # attribute names below survive as read-only property views. A
+        # shared bundle (``telemetry=``) puts engine + scheduler metrics on
+        # one scrape surface; ``trace=True`` records the per-step /
+        # per-request event timeline (exported via ``tm.tracer``).
+        self.tm = telemetry if telemetry is not None else Telemetry(trace=trace)
+        reg = self.tm.registry
+        self._c_prefill_calls = reg.counter(
+            "serve_prefill_calls", "model prefill invocations")
+        self._c_decode_calls = reg.counter(
+            "serve_decode_calls", "batched decode invocations")
         # packed-prefill block-skip observability (mask IR, DESIGN.md §3):
         # how many attention blocks the compiled layout proves skippable
         # (cross-document + padded-tail), cumulated over packed prefills.
-        self.blocks_skipped = 0
-        self.blocks_total = 0
-        self.last_prefill_layout_density = 1.0
+        self._c_blocks_skipped = reg.counter(
+            "serve_blocks_skipped", "mask-IR blocks proven skippable")
+        self._c_blocks_total = reg.counter(
+            "serve_blocks_total", "mask-IR blocks in packed layouts")
+        self._g_layout_density = reg.gauge(
+            "serve_prefill_layout_density",
+            "1 - skip rate of the last packed layout")
+        self._g_layout_density.set(1.0)
         # scheduler observability (both modes; paged specifics are zero in
         # dense mode).
-        self.preemptions = 0
-        self.peak_active = 0
-        self.last_step_stats: dict[str, Any] = {}
+        self._c_preemptions = reg.counter(
+            "serve_preemptions", "preempted requests requeued/finished")
+        self._g_peak_active = reg.gauge(
+            "serve_peak_active", "max concurrently active lanes")
+        self._g_step = {
+            name: reg.gauge(f"serve_step_{name}",
+                            f"last step's {name.replace('_', ' ')}")
+            for name in ("active", "occupancy", "pool_utilization",
+                         "prefill_tokens", "decode_tokens",
+                         "deferred_chunks", "queued")}
+        self._h_ttft = reg.histogram(
+            "serve_ttft_s", "submit -> first generated token (s)")
+        self._h_tok = reg.histogram(
+            "serve_tok_latency_s", "per-token decode step latency (s)")
+        self._stepped = False
+        self._step_idx = 0
+        self._preempted_rids: set[int] = set()
 
         can_page = model.supports_paged_decode()
         self.paged = can_page if paged is None else bool(paged)
@@ -252,11 +283,22 @@ class ServingEngine:
                            f"|L{cfg.num_layers}|hq{cfg.num_heads}"
                            f"|hkv{cfg.num_kv_heads}|d{cfg.head_dim}"
                            f"|V{cfg.vocab_size}")
-        self.prefix_lookups = 0            # admissions with lookup enabled
-        self.prefix_hits = 0               # admissions mapping >= 1 page
-        self.prefix_pages_shared = 0       # pages mapped from the index
-        self.prefill_tokens_skipped = 0    # prompt rows never prefilled
-        self.prefill_hbm_bytes_saved = 0   # io_model credit for those rows
+        self._c_prefix_lookups = reg.counter(
+            "serve_prefix_lookups", "admissions with lookup enabled")
+        self._c_prefix_hits = reg.counter(
+            "serve_prefix_hits", "admissions mapping >= 1 page")
+        self._c_prefix_pages = reg.counter(
+            "serve_prefix_pages_shared", "pages mapped from the index")
+        self._c_tokens_skipped = reg.counter(
+            "serve_prefill_tokens_skipped", "prompt rows never prefilled")
+        self._c_hbm_saved = reg.counter(
+            "serve_prefill_hbm_bytes_saved", "io_model credit for those rows")
+        # hot-path IO the in-place kv side no longer pays: the bytes the
+        # per-layer prefix gather (read pages + write packed rows, K and V)
+        # would have moved for the same chunk steps.
+        self._c_gather_elim = reg.counter(
+            "serve_prefill_gather_bytes_eliminated",
+            "prefix-gather bytes the paged chunk path avoids")
 
         self.requests: dict[int, Request] = {}
         self.slot_req: list[Request | None] = [None] * num_slots
@@ -264,11 +306,6 @@ class ServingEngine:
         self.next_token = np.zeros((num_slots,), np.int32)
         self._rid = itertools.count()
         self._sample = jax.jit(sampling.sample_tokens)
-        # per-request latency samples (seconds): time-to-first-token and
-        # per-token decode step latency — percentile-reduced by
-        # ``latency_stats()`` for the serving benchmarks.
-        self.ttfts: list[float] = []
-        self.tok_latencies: list[float] = []
 
         if self.tp > 1 or self.sp > 1:
             # The mesh and the per-shard MODEL VIEW: inside shard_map every
@@ -324,7 +361,8 @@ class ServingEngine:
             if num_pages is None:
                 # HBM-equivalent default: exactly the dense engine's cells.
                 num_pages = num_slots * self.pages_per_seq
-            self.kv = kvc.PagedKVCache(num_pages, page_size)
+            self.kv = kvc.PagedKVCache(num_pages, page_size,
+                                       registry=self.tm.registry)
             self.state = model.init_paged_decode_state(
                 num_slots, num_pages, page_size, self.pages_per_seq)
             self._kv_len_h = np.zeros((num_slots,), np.int64)
@@ -344,10 +382,6 @@ class ServingEngine:
             ckb = chunk_kv_bucket or max(self.prefill_bucket,
                                          2 * (chunk_size or 0))
             self.chunk_kv_bucket = ckb + (-ckb) % page_size
-            # hot-path IO the in-place kv side no longer pays: the bytes
-            # the per-layer prefix gather (read pages + write packed rows,
-            # K and V) would have moved for the same chunk steps.
-            self.prefill_gather_bytes_eliminated = 0
             self.scheduler = ChunkScheduler(
                 SchedulerConfig(num_lanes=num_slots, capacity=capacity,
                                 page_size=page_size, chunk_size=chunk_size,
@@ -355,7 +389,7 @@ class ServingEngine:
                                 # full chunks split into equal sp slabs;
                                 # the bucket padding carries lane alignment
                                 chunk_multiple=self.sp),
-                kv=self.kv)
+                kv=self.kv, telemetry=self.tm)
         else:
             if token_budget is not None:
                 raise ValueError("token_budget requires chunked (paged) mode")
@@ -363,7 +397,8 @@ class ServingEngine:
             if model.supports_packed_prefill():
                 self._prefill_packed = jax.jit(model.prefill_packed)
             self.scheduler = ChunkScheduler(
-                SchedulerConfig(num_lanes=num_slots, capacity=capacity))
+                SchedulerConfig(num_lanes=num_slots, capacity=capacity),
+                telemetry=self.tm)
 
             def _insert(state, slot_state, slot, kv_len_new, slot_sizes=None):
                 def ins(big, small):
@@ -417,6 +452,105 @@ class ServingEngine:
                     head_dim=model.cfg.head_dim, dtype=model.cfg.dtype,
                     page_size=page_size if self.paged else None,
                     shards=self.tp)
+
+        # IO-ledger pricing surface (telemetry/io_ledger.py): the model
+        # geometry plus ONE representative tuner-resolved tile config
+        # (analytic chooser only — construction must never trigger a
+        # device-timing autotune) price every executed step's predicted
+        # HBM bytes next to its measured wall-clock.
+        rep = tuning.choose_tile_config(
+            self.prefill_bucket, max(capacity, self.prefill_bucket),
+            cfg.head_dim, dtype=cfg.dtype, backward=False,
+            heads_q=max(1, cfg.num_heads // self.tp),
+            heads_kv=max(1, cfg.num_kv_heads // self.tp), shards=self.tp)
+        self.tm.ledger = IOLedger(ServePriceModel(
+            d=cfg.head_dim, heads_q=cfg.num_heads,
+            heads_kv=cfg.num_kv_heads, d_model=cfg.d_model,
+            layers=cfg.num_layers, elt=tuning._elt_bytes(cfg.dtype),
+            block_q=rep.block_q, block_k=rep.block_k, kv_major=rep.kv_major,
+            tp=self.tp, sp=self.sp,
+            sp_strategy=self.sp_strategy or "replicated"))
+
+    # --------------------- back-compat views over the telemetry registry
+    @property
+    def prefill_calls(self) -> int:
+        return int(self._c_prefill_calls.total())
+
+    @property
+    def decode_calls(self) -> int:
+        return int(self._c_decode_calls.total())
+
+    @property
+    def blocks_skipped(self) -> int:
+        return int(self._c_blocks_skipped.total())
+
+    @property
+    def blocks_total(self) -> int:
+        return int(self._c_blocks_total.total())
+
+    @property
+    def last_prefill_layout_density(self) -> float:
+        return self._g_layout_density.value(default=1.0)
+
+    @property
+    def preemptions(self) -> int:
+        return int(self._c_preemptions.total())
+
+    @property
+    def peak_active(self) -> int:
+        return int(self._g_peak_active.value())
+
+    @property
+    def prefix_lookups(self) -> int:
+        return int(self._c_prefix_lookups.total())
+
+    @property
+    def prefix_hits(self) -> int:
+        return int(self._c_prefix_hits.total())
+
+    @property
+    def prefix_pages_shared(self) -> int:
+        return int(self._c_prefix_pages.total())
+
+    @property
+    def prefill_tokens_skipped(self) -> int:
+        return int(self._c_tokens_skipped.total())
+
+    @property
+    def prefill_hbm_bytes_saved(self) -> int:
+        return int(self._c_hbm_saved.total())
+
+    @property
+    def prefill_gather_bytes_eliminated(self) -> int:
+        return int(self._c_gather_elim.total())
+
+    @property
+    def ttfts(self) -> list[float]:
+        """Raw TTFT samples (seconds) — histogram-backed view."""
+        return self._h_ttft.samples()
+
+    @property
+    def tok_latencies(self) -> list[float]:
+        """Raw per-token decode latency samples — histogram-backed view."""
+        return self._h_tok.samples()
+
+    @property
+    def last_step_stats(self) -> dict[str, Any]:
+        """The most recent step's gauges, assembled from the registry
+        (empty before the first step, matching the historical dict)."""
+        if not self._stepped:
+            return {}
+        g = self._g_step
+        return {
+            "active": int(g["active"].value()),
+            "occupancy": g["occupancy"].value(),
+            "pool_utilization": (g["pool_utilization"].value()
+                                 if self.paged else None),
+            "prefill_tokens": int(g["prefill_tokens"].value()),
+            "decode_tokens": int(g["decode_tokens"].value()),
+            "deferred_chunks": int(g["deferred_chunks"].value()),
+            "queued": int(g["queued"].value()),
+        }
 
     # ----------------------------------------- tensor/sequence parallelism
     def _build_tp_step_fns(self) -> None:
@@ -593,6 +727,10 @@ class ServingEngine:
         self.requests[rid] = req
         self._stage_prefix(req)
         self.scheduler.submit(rid, len(prompt))
+        tr = self.tm.tracer
+        if tr.enabled:
+            tr.event("req", "submit", rid=rid, prompt_len=len(prompt),
+                     max_new=max_new_tokens)
         return rid
 
     def _stage_prefix(self, req: Request) -> None:
@@ -666,9 +804,14 @@ class ServingEngine:
         if self.prefix_cache:
             self.kv.publish_prefix(req.rid, n_rows // self.page_size)
 
-    def _finish(self, lane: int, req: Request) -> None:
+    def _finish(self, lane: int, req: Request,
+                reason: str = "stop") -> None:
         req.done = True
         self.finished.append(req)
+        tr = self.tm.tracer
+        if tr.enabled:
+            tr.event("req", "finish", rid=req.rid, reason=reason,
+                     tokens=len(req.output))
         if self.paged:
             # publish before release: zero-ref indexed pages are RETAINED
             # (LRU) instead of freed — the pool doubles as the cache.
@@ -683,11 +826,16 @@ class ServingEngine:
         """The final chunk's logits produced the first generated token."""
         if req.t_first is None:
             req.t_first = time.perf_counter()
-            self.ttfts.append(req.t_first - req.t_submit)
+            self._h_ttft.observe(req.t_first - req.t_submit)
+            tr = self.tm.tracer
+            if tr.enabled:
+                tr.event("req", "first_token", rid=req.rid,
+                         ttft_s=req.t_first - req.t_submit)
         req.output.append(tok)
-        if ((self.eos_id is not None and tok == self.eos_id)
-                or len(req.output) >= req.max_new_tokens):
-            self._finish(lane, req)
+        hit_eos = self.eos_id is not None and tok == self.eos_id
+        if hit_eos or len(req.output) >= req.max_new_tokens:
+            self._finish(lane, req,
+                         "eos" if hit_eos else "max_new_tokens")
             return
         self.next_token[lane] = tok
 
@@ -707,27 +855,39 @@ class ServingEngine:
         victim's lane in the plan — eviction and admission can touch the
         same lane within one plan); the engine decides requeue vs finish
         (it knows the generated prefix)."""
+        tr = self.tm.tracer
         for rid, lane in plan.finished_capacity:
             req = self.requests[rid]
             self._clear_lane(rid, lane)
             req.done = True
             self.finished.append(req)
+            if tr.enabled:
+                tr.event("req", "finish", rid=rid, reason="capacity",
+                         tokens=len(req.output))
         for rid, lane in plan.preempted:
             req = self.requests[rid]
             self._clear_lane(rid, lane)
+            self._preempted_rids.add(rid)
+            if tr.enabled:
+                tr.event("req", "preempt", rid=rid,
+                         reason=plan.preempt_reasons.get(rid, ""),
+                         generated=len(req.output))
             if len(req.resume_tokens) > self.capacity:
                 # already at per-sequence capacity: a resumed prefill could
                 # not decode further — finish instead of requeueing an
                 # over-capacity resume prompt.
                 req.done = True
                 self.finished.append(req)
+                if tr.enabled:
+                    tr.event("req", "finish", rid=rid, reason="capacity",
+                             tokens=len(req.output))
                 continue
             self._stage_prefix(req)     # release dropped the staged keys;
             # the resume chain's prompt pages hash identically, so a
             # resumed request re-acquires its OWN retained pages (if LRU
             # pressure spared them) and re-prefills only what was lost.
             self.scheduler.resubmit_front(rid, len(req.resume_tokens))
-            self.preemptions += 1
+            self._c_preemptions.inc()
         if plan.dirty and self.paged:
             self._paged_dirty = True
 
@@ -736,13 +896,14 @@ class ServingEngine:
         """Chunks starting at logical position 0 attend nothing before
         themselves, so they run as ONE packed self-attention prefill (the
         historical path) scattered straight into pool pages."""
+        t_w = time.perf_counter()
         reqs = [self.requests[t.rid] for t in tasks]
         lengths = [t.length for t in tasks]
         toks, segs, offsets = self._packed_batch(reqs, lengths)
         caches, logits = self._prefill_packed(
             self.params, {"tokens": jnp.asarray(toks),
                           "segment_ids": jnp.asarray(segs)})
-        self.prefill_calls += 1
+        self._c_prefill_calls.inc()
         self._record_layout_stats(segs)
         tables = [self.kv.table(t.rid) for t in tasks]
         total = toks.shape[1]
@@ -757,6 +918,8 @@ class ServingEngine:
             self._kv_len_h[t.lane] = t.length
             self._publish_prefix(reqs[i], t.length)
         self._emit_first_tokens(tasks, logits, offsets)
+        self._account_prefill("prefill_zero", tasks,
+                              time.perf_counter() - t_w)
 
     def _emit_first_tokens(self, tasks, logits, offsets) -> None:
         """Sample the first generated token of every task whose chunk
@@ -790,6 +953,7 @@ class ServingEngine:
         the scalar-prefetched list, so zero prefix KV bytes move on the hot
         path (counted in ``prefill_gather_bytes_eliminated``).
         """
+        t_w = time.perf_counter()
         reqs = [self.requests[t.rid] for t in tasks]
         lengths = [t.length for t in tasks]
         starts = [t.start for t in tasks]
@@ -818,11 +982,11 @@ class ServingEngine:
         page_list, kseg, kpos = kvc.paged_prefix_lists(
             tables, spans, self.page_size, Sk // self.page_size)
         cfg = self.model.cfg
-        self.prefill_gather_bytes_eliminated += int(sum(
+        self._c_gather_elim.inc(int(sum(
             io_model.gather_hbm_bytes(sp, cfg.head_dim, cfg.num_kv_heads,
                                       elt=tuning._elt_bytes(cfg.dtype),
                                       layers=cfg.num_layers)
-            for sp in spans))
+            for sp in spans)))
 
         batch = {"tokens": jnp.asarray(toks),
                  "q_segment_ids": jnp.asarray(qseg),
@@ -835,22 +999,27 @@ class ServingEngine:
         caches, logits = self._prefill_chunk(self.params, batch,
                                              self.state["caches"])
         self.state["caches"] = caches
-        self.prefill_calls += 1
+        self._c_prefill_calls.inc()
         self._paged_dirty = True
         for t, r in zip(tasks, reqs):
             self._kv_len_h[t.lane] = t.start + t.length
             self._publish_prefix(r, t.start + t.length)
         self._emit_first_tokens(tasks, logits, q_off)
+        self._account_prefill("prefill_chunk", tasks,
+                              time.perf_counter() - t_w)
 
     # --------------------------------------------- executor: dense prefill
     def _exec_dense(self, tasks: list[ChunkTask]) -> None:
         """Dense mode is atomic-only: every task covers its whole prompt."""
+        t_w = time.perf_counter()
         reqs = [self.requests[t.rid] for t in tasks]
         if (self.packed_prefill and len(tasks) > 1):
             self._admit_packed([t.lane for t in tasks], tasks, reqs)
-            return
-        for t, req in zip(tasks, reqs):
-            self._admit_one(t.lane, t, req)
+        else:
+            for t, req in zip(tasks, reqs):
+                self._admit_one(t.lane, t, req)
+        self._account_prefill("prefill_dense", tasks,
+                              time.perf_counter() - t_w)
 
     def _admit_one(self, slot: int, task: ChunkTask, req: Request) -> None:
         """Sequential dense path: one batch-1 prefill call + state insert.
@@ -869,7 +1038,7 @@ class ServingEngine:
             caches, logits = self._prefill_packed(
                 self.params, {"tokens": jnp.asarray(arr),
                               "segment_ids": jnp.asarray(segs)})
-            self.prefill_calls += 1
+            self._c_prefill_calls.inc()
             self.state = self._insert_segment(self.state, caches, slot,
                                               0, padded, L)
             tok = self._sample_rows(logits[0, L - 1][None], [req])[0]
@@ -878,7 +1047,7 @@ class ServingEngine:
         slot_state, logits = self.model.prefill(
             self.params, {"tokens": jnp.asarray([toks], jnp.int32)},
             self.capacity)
-        self.prefill_calls += 1
+        self._c_prefill_calls.inc()
         self.state = self._insert(self.state, slot_state, slot, L)
         tok = self._sample_rows(logits[0, -1][None], [req])[0]
         self._post_prefill(slot, req, int(tok))
@@ -891,7 +1060,7 @@ class ServingEngine:
         caches, logits = self._prefill_packed(
             self.params, {"tokens": jnp.asarray(toks),
                           "segment_ids": jnp.asarray(segs)})
-        self.prefill_calls += 1
+        self._c_prefill_calls.inc()
         self._record_layout_stats(segs)
         for i, (slot, req) in enumerate(zip(slots, reqs)):
             self.state = self._insert_segment(
@@ -925,15 +1094,18 @@ class ServingEngine:
         arr = np.asarray(layout.layout)
         skipped = int((arr == masks.BLOCK_SKIP).sum())
         total = arr.size
-        self.blocks_skipped += skipped
-        self.blocks_total += total
-        self.last_prefill_layout_density = 1.0 - skipped / total
+        self._c_blocks_skipped.inc(skipped)
+        self._c_blocks_total.inc(total)
+        self._g_layout_density.set(1.0 - skipped / total)
 
     # ------------------------------------------------------ executor: decode
     def _exec_decode(self, decode_lanes: list[int]) -> None:
         lanes = [l for l in decode_lanes if self.slot_req[l] is not None]
         if not lanes:
             return
+        # pre-step KV lengths price the split-KV reads (ledger, below)
+        kv_lens = [self.scheduler.by_rid[self.slot_req[l].rid].filled
+                   for l in lanes]
         if self.paged and self._paged_dirty:
             # upload the host allocator's view only when it changed
             # (admission, chunk scatter, page append, finish, preemption).
@@ -965,12 +1137,23 @@ class ServingEngine:
         tok = jnp.asarray(self.next_token)
         reqs_by_lane = [self.slot_req[l] for l in range(self.B)]
         self.state, logits = self._decode(self.params, self.state, tok)
-        self.decode_calls += 1
+        self._c_decode_calls.inc()
         nxt = self._sample_rows(logits[:, 0], reqs_by_lane)
         # _sample_rows materialized host tokens, so the step's device work
         # is done: one wall-clock sample covers every token emitted here.
         dt = time.perf_counter() - t0
-        self.tok_latencies.extend([dt] * len(lanes))
+        for _ in lanes:
+            self._h_tok.observe(dt)
+        hbm = self.tm.ledger.price.decode_bytes(kv_lens)
+        self.tm.ledger.account("decode", hbm_bytes=hbm, wall_s=dt,
+                               tokens=len(lanes))
+        tr = self.tm.tracer
+        if tr.enabled:
+            tr.span("step", "decode", tr.now() - dt, dt,
+                    step=self._step_idx, lanes=list(lanes),
+                    tokens=len(lanes), kv_rows=int(sum(kv_lens)),
+                    hbm_bytes=hbm, census=self._declared_census("decode"),
+                    tiles=self._tile_args())
         for lane in lanes:
             req = self.slot_req[lane]
             t = int(nxt[lane])
@@ -981,10 +1164,59 @@ class ServingEngine:
                 self._kv_len_h[lane] += 1
             hit_eos = self.eos_id is not None and t == self.eos_id
             if len(req.output) >= req.max_new_tokens or hit_eos:
-                self._finish(lane, req)
+                self._finish(lane, req,
+                             "eos" if hit_eos else "max_new_tokens")
+
+    # ------------------------------------- telemetry accounting helpers
+    def _account_prefill(self, name: str, tasks: list[ChunkTask],
+                         dt: float) -> None:
+        """IO-ledger + trace bookkeeping for one executed prefill call."""
+        spans = [(t.start, t.length) for t in tasks]
+        tokens = sum(t.length for t in tasks)
+        hbm = self.tm.ledger.price.prefill_bytes(spans)
+        self.tm.ledger.account(name, hbm_bytes=hbm, wall_s=dt,
+                               tokens=tokens)
+        tr = self.tm.tracer
+        if tr.enabled:
+            tr.span("step", name, tr.now() - dt, dt, step=self._step_idx,
+                    lanes=[t.lane for t in tasks],
+                    chunks=[[t.start, t.length] for t in tasks],
+                    tokens=tokens, hbm_bytes=hbm,
+                    census=self._declared_census(name),
+                    tiles=self._tile_args())
+            for t in tasks:
+                tr.event("req", "chunk", rid=t.rid, lane=t.lane,
+                         start=t.start, length=t.length, last=t.last)
+
+    def _declared_census(self, kind: str) -> dict[str, int]:
+        """DECLARED per-step collective census for span args — the cheap
+        contract from DESIGN.md §13/§14. The jaxpr-counted census methods
+        (``decode_collective_census`` / ``prefill_collective_census``)
+        PROVE this declaration at construction/test time; re-tracing per
+        step would dwarf the step itself."""
+        if self.mesh is None:
+            return {}
+        cfg = self.model.cfg
+        layers = 1 if cfg.scan_layers else cfg.num_layers
+        if kind == "prefill_chunk" and self.sp > 1:
+            return dist_sharding.expected_sp_prefill_census(
+                layers, sp=self.sp, strategy=self.sp_strategy)
+        return {"psum": 2 * layers}
+
+    def _tile_args(self) -> dict[str, Any]:
+        """Tuner-resolved tile geometry for span args."""
+        p = self.tm.ledger.price
+        out: dict[str, Any] = {"block_q": p.block_q, "block_k": p.block_k,
+                               "kv_major": p.kv_major}
+        if hasattr(self, "decode_block_k"):
+            out["decode_block_k"] = self.decode_block_k
+            out["num_decode_splits"] = self.num_decode_splits
+        return out
 
     # ------------------------------------------------------------------ step
     def step(self) -> None:
+        t_step = time.perf_counter()
+        self._step_idx += 1
         plan = self.scheduler.plan_step()
         # evictions FIRST (they clear lanes the admissions below may
         # reuse — a prepass eviction frees a lane before admission runs),
@@ -993,10 +1225,20 @@ class ServingEngine:
         self._sync_evictions(plan)
         evicted = ({rid for rid, _ in plan.preempted}
                    | {rid for rid, _ in plan.finished_capacity})
+        tr = self.tm.tracer
         for rid, lane in plan.admitted:
             if rid not in evicted:
                 self.slot_req[lane] = self.requests[rid]
                 self._record_prefix_hit(rid)
+                if tr.enabled:
+                    # a re-admission after preemption is the RESUME leg of
+                    # the lifecycle; the validator pairs it with the
+                    # preempt marker.
+                    tr.event("req",
+                             "resume" if rid in self._preempted_rids
+                             else "admit",
+                             rid=rid, lane=lane,
+                             cached=self.scheduler.by_rid[rid].cached)
 
         zero = [t for t in plan.prefill if t.start == 0]
         suffix = [t for t in plan.prefill if t.start > 0]
@@ -1019,20 +1261,25 @@ class ServingEngine:
             self._exec_dense(zero)
 
         active = sum(r is not None for r in self.slot_req)
-        self.peak_active = max(self.peak_active, active)
-        self.last_step_stats = {
-            "active": active,
-            "occupancy": active / self.B,
-            "pool_utilization": (self.kv.utilization() if self.paged
-                                 else None),
-            "prefill_tokens": sum(t.length for t in plan.prefill),
-            "decode_tokens": len(plan.decode_lanes),
-            "deferred_chunks": plan.deferred_chunks,
-            "queued": len(self.scheduler.queue),
-        }
+        self._g_peak_active.max_update(active)
+        g = self._g_step
+        g["active"].set(active)
+        g["occupancy"].set(active / self.B)
+        if self.paged:
+            g["pool_utilization"].set(self.kv.utilization())
+        g["prefill_tokens"].set(sum(t.length for t in plan.prefill))
+        g["decode_tokens"].set(len(plan.decode_lanes))
+        g["deferred_chunks"].set(plan.deferred_chunks)
+        g["queued"].set(len(self.scheduler.queue))
+        self._stepped = True
         self._exec_decode(plan.decode_lanes)
         # post-decode queue depth (finish/reclaim just happened)
-        self.last_step_stats["queued"] = len(self.scheduler.queue)
+        g["queued"].set(len(self.scheduler.queue))
+        if tr.enabled:
+            dt = time.perf_counter() - t_step
+            stats = self.last_step_stats
+            tr.span("stepsum", "step", tr.now() - dt, dt,
+                    step=self._step_idx, **stats)
 
     def run(self, max_steps: int = 10_000, on_step=None) -> list[Request]:
         """Drive the engine to drain. ``on_step(engine)`` is called after
@@ -1055,18 +1302,26 @@ class ServingEngine:
         (``io_model.prefix_cache_hbm_bytes_saved``)."""
         if not self.prefix_cache:
             return
-        self.prefix_lookups += 1
+        self._c_prefix_lookups.inc()
         cached = self.scheduler.by_rid[rid].cached
         if not cached:
             return
-        self.prefix_hits += 1
-        self.prefix_pages_shared += cached // self.page_size
-        self.prefill_tokens_skipped += cached
+        self._c_prefix_hits.inc()
+        self._c_prefix_pages.inc(cached // self.page_size)
+        self._c_tokens_skipped.inc(cached)
         cfg = self.model.cfg
-        self.prefill_hbm_bytes_saved += int(
-            io_model.prefix_cache_hbm_bytes_saved(
-                cached, cfg.head_dim, cfg.num_heads, cfg.num_kv_heads,
-                elt=tuning._elt_bytes(cfg.dtype), layers=cfg.num_layers))
+        saved = int(io_model.prefix_cache_hbm_bytes_saved(
+            cached, cfg.head_dim, cfg.num_heads, cfg.num_kv_heads,
+            elt=tuning._elt_bytes(cfg.dtype), layers=cfg.num_layers))
+        self._c_hbm_saved.inc(saved)
+        # prefix hits are bytes NOT spent: the ledger carries them as a
+        # separate credit kind, never summed into total_bytes().
+        self.tm.ledger.account("prefix_saved", hbm_bytes=saved,
+                               tokens=cached)
+        tr = self.tm.tracer
+        if tr.enabled:
+            tr.event("req", "prefix_hit", rid=rid, cached_tokens=cached,
+                     pages=cached // self.page_size, hbm_bytes_saved=saved)
 
     @property
     def prefix_cache_hit_rate(self) -> float:
@@ -1108,11 +1363,12 @@ class ServingEngine:
     def latency_stats(self) -> dict[str, float]:
         """Percentile-reduced per-request latencies (seconds): TTFT (submit
         -> first generated token, chunked prefill and queueing included)
-        and per-token decode step latency. Zeros when no samples exist."""
+        and per-token decode step latency. Zeros when no samples exist.
+        The percentile math lives in ONE place — the telemetry histogram
+        (``telemetry.metrics.percentile``)."""
         out: dict[str, float] = {}
-        for name, xs in (("ttft", self.ttfts),
-                         ("tok_latency", self.tok_latencies)):
+        for name, h in (("ttft", self._h_ttft),
+                        ("tok_latency", self._h_tok)):
             for q in (50, 95):
-                out[f"{name}_p{q}"] = (float(np.percentile(xs, q))
-                                       if xs else 0.0)
+                out[f"{name}_p{q}"] = h.percentile(q)
         return out

@@ -53,6 +53,7 @@ import jax
 import numpy as np
 
 from repro.core import masks
+from repro.telemetry.metrics import MetricsRegistry
 
 __all__ = ["PagedKVCache", "scatter_packed_segments",
            "packed_destinations", "chunk_destinations", "paged_prefix_lists",
@@ -111,7 +112,7 @@ class PagedKVCache:
     so admission-budget math is unchanged for callers.
     """
 
-    def __init__(self, num_pages: int, page_size: int):
+    def __init__(self, num_pages: int, page_size: int, registry=None):
         if num_pages < 1 or page_size < 1:
             raise ValueError(
                 f"paged KV cache needs at least one page of at least one "
@@ -126,12 +127,42 @@ class PagedKVCache:
         self.page_key: dict[int, str] = {}           # page -> content key
         self.lru: collections.OrderedDict[int, None] = collections.OrderedDict()
         self.staged: dict[int, list[str]] = {}       # rid -> prompt page keys
-        # observability
-        self.alloc_events = 0
-        self.free_events = 0
-        self.peak_in_use = 0
-        self.shared_maps = 0          # pages mapped via a prefix hit
-        self.cache_evictions = 0      # retained pages reclaimed under pressure
+        # observability: registry-backed (telemetry/metrics.py) so the
+        # engine's bundle scrapes allocator behaviour alongside its own
+        # counters; the historical attribute names are property views. A
+        # standalone cache (unit tests) gets a private registry.
+        self._reg = registry if registry is not None else MetricsRegistry()
+        self._c_alloc = self._reg.counter(
+            "kv_alloc_events", "pages allocated to tables")
+        self._c_free = self._reg.counter(
+            "kv_free_events", "pages that left the used set")
+        self._g_peak = self._reg.gauge(
+            "kv_peak_in_use", "max pages simultaneously in use")
+        self._c_shared = self._reg.counter(
+            "kv_shared_maps", "pages mapped via a prefix hit")
+        self._c_cache_evict = self._reg.counter(
+            "kv_cache_evictions", "retained pages reclaimed under pressure")
+
+    # -- back-compat views over the registry --------------------------------
+    @property
+    def alloc_events(self) -> int:
+        return int(self._c_alloc.total())
+
+    @property
+    def free_events(self) -> int:
+        return int(self._c_free.total())
+
+    @property
+    def peak_in_use(self) -> int:
+        return int(self._g_peak.value())
+
+    @property
+    def shared_maps(self) -> int:
+        return int(self._c_shared.total())
+
+    @property
+    def cache_evictions(self) -> int:
+        return int(self._c_cache_evict.total())
 
     # ------------------------------------------------------------- accounting
     @property
@@ -164,7 +195,7 @@ class PagedKVCache:
             return self.free.popleft()
         page, _ = self.lru.popitem(last=False)
         self._deindex(page)
-        self.cache_evictions += 1
+        self._c_cache_evict.inc()
         return page
 
     def _deindex(self, page: int) -> None:
@@ -183,8 +214,8 @@ class PagedKVCache:
             page = self._take_free_page()
             self.ref[page] = 1
             table.append(page)
-        self.alloc_events += n_pages
-        self.peak_in_use = max(self.peak_in_use, self.used_pages)
+        self._c_alloc.inc(n_pages)
+        self._g_peak.max_update(self.used_pages)
         return True
 
     def release(self, rid: int) -> int:
@@ -210,7 +241,7 @@ class PagedKVCache:
                 self.lru.move_to_end(page)
             else:
                 self.free.append(page)
-        self.free_events += released
+        self._c_free.inc(released)
         return released
 
     # ---------------------------------------------------------- prefix cache
@@ -258,8 +289,8 @@ class PagedKVCache:
             self.ref[page] = self.ref.get(page, 0) + 1
             table.append(page)
             n += 1
-        self.shared_maps += n
-        self.peak_in_use = max(self.peak_in_use, self.used_pages)
+        self._c_shared.inc(n)
+        self._g_peak.max_update(self.used_pages)
         return n
 
     def publish_prefix(self, rid: int, n_full_pages: int) -> int:

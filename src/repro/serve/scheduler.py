@@ -48,6 +48,7 @@ import itertools
 from collections import deque
 
 from repro.serve.kv_cache import PagedKVCache, pages_for
+from repro.telemetry import Telemetry
 
 
 @dataclasses.dataclass(frozen=True)
@@ -163,7 +164,9 @@ class StepPlan:
     lane is re-admitted, or a just-admitted request is the starvation
     victim) — the engine resolves victims by the recorded lane, never by
     searching its own slot table. ``dirty`` reports allocator events
-    (the engine's cue to re-upload the device page table)."""
+    (the engine's cue to re-upload the device page table).
+    ``preempt_reasons`` audits WHY each rid in ``preempted`` was evicted
+    (``pool-exhaustion`` | ``starvation``) for the request trace."""
     admitted: list[tuple[int, int]] = dataclasses.field(default_factory=list)
     prefill: list[ChunkTask] = dataclasses.field(default_factory=list)
     decode_lanes: list[int] = dataclasses.field(default_factory=list)
@@ -172,6 +175,7 @@ class StepPlan:
         default_factory=list)
     deferred_chunks: int = 0
     dirty: bool = False
+    preempt_reasons: dict[int, str] = dataclasses.field(default_factory=dict)
 
 
 class ChunkScheduler:
@@ -186,7 +190,8 @@ class ChunkScheduler:
         sched.resubmit_front(rid, new_len)    # after a preemption
     """
 
-    def __init__(self, cfg: SchedulerConfig, kv: PagedKVCache | None = None):
+    def __init__(self, cfg: SchedulerConfig, kv: PagedKVCache | None = None,
+                 telemetry: Telemetry | None = None):
         if (kv is None) != (cfg.page_size is None):
             raise ValueError("pass a PagedKVCache iff page_size is set")
         if kv is not None and kv.page_size != cfg.page_size:
@@ -199,10 +204,50 @@ class ChunkScheduler:
         self.by_rid: dict[int, SeqState] = {}
         self._free_lanes = list(range(cfg.num_lanes))  # kept sorted
         self._arrival = itertools.count(1)
-        # observability
-        self.preemptions = 0
-        self.chunks_emitted = 0
-        self.deferred_chunks = 0
+        # observability: every decision lands in the registry with a
+        # reason label; the engine passes its bundle so scheduler and
+        # engine metrics share one scrape surface (DESIGN.md §15).
+        self.tm = telemetry if telemetry is not None else Telemetry()
+        reg = self.tm.registry
+        self._c_preempt = reg.counter(
+            "sched_preemptions", "chunk-boundary evictions",
+            labels=("reason",))
+        self._c_chunks = reg.counter(
+            "sched_chunks_emitted", "prefill chunks handed to the engine")
+        self._c_defer = reg.counter(
+            "sched_deferred_chunks", "chunks that could not run this step",
+            labels=("reason",))
+
+    # -- back-compat views over the registry --------------------------------
+    @property
+    def preemptions(self) -> int:
+        return int(self._c_preempt.total())
+
+    @property
+    def chunks_emitted(self) -> int:
+        return int(self._c_chunks.total())
+
+    @property
+    def deferred_chunks(self) -> int:
+        return int(self._c_defer.total())
+
+    def _preempt(self, plan: StepPlan, victim: SeqState, reason: str) -> None:
+        plan.preempted.append((victim.rid, victim.lane))
+        plan.preempt_reasons[victim.rid] = reason
+        self._evict(victim)
+        self._c_preempt.inc(reason=reason)
+        plan.dirty = True
+        tr = self.tm.tracer
+        if tr.enabled:
+            tr.event("sched", "evict", rid=victim.rid, lane=victim.lane,
+                     reason=reason, filled=victim.filled)
+
+    def _defer(self, plan: StepPlan, s: SeqState, reason: str) -> None:
+        plan.deferred_chunks += 1
+        self._c_defer.inc(reason=reason)
+        tr = self.tm.tracer
+        if tr.enabled:
+            tr.event("sched", "defer", rid=s.rid, lane=s.lane, reason=reason)
 
     # ------------------------------------------------------------- lifecycle
     @property
@@ -295,10 +340,7 @@ class ChunkScheduler:
                 continue
             while not self.kv.alloc(s.rid, 1):
                 victim = max(self.active.values(), key=lambda v: v.arrival)
-                plan.preempted.append((victim.rid, victim.lane))
-                self._evict(victim)
-                self.preemptions += 1
-                plan.dirty = True
+                self._preempt(plan, victim, "pool-exhaustion")
                 if victim is s:
                     break
             else:
@@ -378,10 +420,7 @@ class ChunkScheduler:
             # the oldest always makes progress — eviction happens HERE, at
             # a chunk boundary, never inside a chunk.
             victim = max(self.active.values(), key=lambda v: v.arrival)
-            plan.preempted.append((victim.rid, victim.lane))
-            self._evict(victim)
-            self.preemptions += 1
-            plan.dirty = True
+            self._preempt(plan, victim, "starvation")
 
     def _emit_round(self, plan: StepPlan, budget) -> tuple[int, bool]:
         """One oldest-first pass over prefilling sequences; returns (tokens
@@ -396,8 +435,7 @@ class ChunkScheduler:
             n = remaining if self.cfg.chunk_size is None \
                 else min(self.cfg.chunk_size, remaining)
             if n > budget - emitted:
-                plan.deferred_chunks += 1
-                self.deferred_chunks += 1
+                self._defer(plan, s, "budget-exhausted")
                 return emitted, False
             last = s.filled + n == s.target
             if self.paged:
@@ -408,13 +446,12 @@ class ChunkScheduler:
                                   self.cfg.page_size)
                         - len(self.kv.table(s.rid)))
                 if need > 0 and not self.kv.alloc(s.rid, need):
-                    plan.deferred_chunks += 1
-                    self.deferred_chunks += 1
+                    self._defer(plan, s, "page-blocked")
                     return emitted, True
                 if need > 0:
                     plan.dirty = True
             plan.prefill.append(ChunkTask(s.rid, s.lane, s.filled, n, last))
-            self.chunks_emitted += 1
+            self._c_chunks.inc()
             s.filled += n               # the engine executes unconditionally
             emitted += n
         return emitted, False

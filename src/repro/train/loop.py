@@ -23,6 +23,7 @@ import jax
 import numpy as np
 
 from repro.checkpoint.checkpointer import Checkpointer
+from repro.telemetry.metrics import MetricsRegistry
 
 
 @dataclasses.dataclass
@@ -41,7 +42,8 @@ class Trainer:
     def __init__(self, cfg: TrainerConfig, step_fn: Callable,
                  params, opt_state,
                  batch_fn: Callable[[int], Any],
-                 param_shardings=None, opt_shardings=None):
+                 param_shardings=None, opt_shardings=None,
+                 registry: MetricsRegistry | None = None):
         self.cfg = cfg
         self.step_fn = step_fn
         self.params = params
@@ -56,6 +58,12 @@ class Trainer:
         self._ckpt_requested = False
         self._ewma: float | None = None
         self.slow_steps = 0
+        self.registry = registry if registry is not None else MetricsRegistry()
+        self._h_step = self.registry.histogram(
+            "train_step_time_s", "per-step wall time")
+        self._g_loss = self.registry.gauge("train_loss", "last step loss")
+        self._g_tps = self.registry.gauge(
+            "train_tokens_per_s", "tokens/s over the last step")
 
     # ----------------------------------------------------------- checkpoints
     def save(self) -> None:
@@ -102,11 +110,33 @@ class Trainer:
             rec["step"] = self.step
             rec["step_time_s"] = dt
             self.history.append(rec)
+            self._h_step.observe(dt)
+            if "loss" in rec:
+                self._g_loss.set(rec["loss"])
+            n_tok = self._batch_tokens(batch)
+            if n_tok and dt > 0:
+                self._g_tps.set(n_tok / dt)
             if self._ckpt_requested or self.step % self.cfg.ckpt_every == 0:
                 self.save()
                 self._ckpt_requested = False
         self.ckpt.wait()
         return self.history
+
+    @staticmethod
+    def _batch_tokens(batch) -> int:
+        """Token count for throughput: the ``tokens`` entry when the batch
+        is a mapping, else the first array leaf."""
+        leaf = None
+        if isinstance(batch, dict) and "tokens" in batch:
+            leaf = batch["tokens"]
+        else:
+            leaves = jax.tree_util.tree_leaves(batch)
+            if leaves:
+                leaf = leaves[0]
+        try:
+            return int(np.size(leaf)) if leaf is not None else 0
+        except TypeError:
+            return 0
 
     def _track_straggler(self, dt: float) -> None:
         if self._ewma is None:
